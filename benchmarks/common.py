@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark module exposes ``run() -> list[Row]``; run.py prints the
+aggregate CSV ``name,us_per_call,derived`` (one row per measured cell,
+``derived`` carrying the figure-level quantity such as a speedup or a
+utilization fraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+__all__ = ["Row", "timeit", "fmt_rows"]
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def timeit(fn: Callable[[], object], *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def fmt_rows(rows: list[Row]) -> str:
+    return "\n".join(r.csv() for r in rows)

@@ -1,0 +1,57 @@
+"""Fig. 4 — achieved bandwidth of message-passing (UCX-style) sends.
+
+Paper: 4 KB blocks reach 1.8 % of the 400 Gbps link; ≤13.6 % even at
+32 KB; 1024 blocks do ~40 % worse than 2048 (fixed overheads amortize
+over more blocks).  We reproduce the utilization curve from the engine's
+staging-round model and check the block-count effect.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.descriptors import ByteRange, ReadTxn
+from repro.core.transfer_engine import LinkModel, MemoryRegion, TransferEngine
+
+
+def _measure(n_blocks: int, block_bytes: int) -> float:
+    eng = TransferEngine(mode="message", link=LinkModel.nic_400g(),
+                         staging_blocks=2, staging_block_bytes=block_bytes,
+                         execute_copies=False)
+    eng.register_memory(MemoryRegion("p0", 0, np.zeros(1, np.uint8)))
+    eng.register_memory(MemoryRegion("d0", 0, np.zeros(1, np.uint8)))
+    eng.submit([
+        ReadTxn("r", "p0", "d0", ByteRange(i * block_bytes, block_bytes),
+                ByteRange(i * block_bytes, block_bytes))
+        for i in range(n_blocks)
+    ])
+    eng.drain()
+    return eng.stats.modeled_bandwidth_Bps()
+
+
+def run() -> list[Row]:
+    link_bw = LinkModel.nic_400g().bandwidth_Bps
+    rows = []
+    for kb in (4, 8, 16, 32):
+        for n in (1024, 2048):
+            bw = _measure(n, kb * 1024)
+            util = bw / link_bw
+            note = ""
+            if kb == 4 and n == 1024:
+                note = ";paper=0.018@4KB"
+            if kb == 32 and n == 2048:
+                note = ";paper_cap=0.136"
+            rows.append(Row(f"fig04/{n}blk/{kb}KB", 0.0, f"util={util:.4f}{note}"))
+    # block-count effect: the paper attributes 1024-block transfers doing
+    # ~40 % worse than 2048 to fixed per-transfer costs amortizing; model
+    # it with the naive first-round latency included
+    lm = LinkModel.nic_400g()
+
+    def with_setup(n):
+        bw = _measure(n, 4096)
+        t = n * 4096 / bw + lm.message_round_time(4096)  # + setup round
+        return n * 4096 / t
+
+    rows.append(Row("fig04/block_count_effect", 0.0,
+                    f"bw_1024_vs_2048={with_setup(1024)/with_setup(2048):.2f};paper=~0.6"))
+    return rows

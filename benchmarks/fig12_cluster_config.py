@@ -1,0 +1,66 @@
+"""Fig. 12 — cluster-configuration study (xP yD × prompt × response).
+
+Paper effects reproduced:
+  (a) more decode workers cut decode-stage time and, for long responses,
+      also prefill-stage time (less KV-allocation blocking);
+  (b) more prefill workers cut prefill time (2.34×-4.04× from 1P→2P);
+      3P can REGRESS total latency: extra prefill throughput floods the
+      decode worker and intensifies decode contention.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import fixed_requests
+
+# (prompt_len, qps) pairs per the paper's loading scheme
+GRID = [(8192, 2.0), (16384, 1.0), (32768, 0.5), (65536, 0.3)]
+
+
+def _run(prompt, resp, qps, n_p, n_d) -> dict:
+    cfg = get_config("mistral-large-123b")
+    reqs = fixed_requests(prompt, resp, qps=qps, duration_s=200, seed=5)
+    sim = ClusterSim(CostModel(cfg, H100_NODE),
+                     SimConfig(n_prefill=n_p, n_decode=n_d, mode="pull"))
+    res = sim.run(reqs)
+    s = res.summary()
+    b = res.mean_breakdown()
+    return {
+        "total": s["mean_total_s"],
+        "prefill_stage": b["prefill_queue_s"] + b["prefill_s"] + b["transfer_s"]
+        + b["decode_queue_s"],
+        "decode_stage": b["decode_s"],
+        "tbt": s["p50_tbt_s"],
+    }
+
+
+def run() -> list[Row]:
+    rows = []
+    # (a) decode scaling at response 1024
+    for prompt, qps in GRID[:3]:
+        r1 = _run(prompt, 1024, qps, 1, 1)
+        r3 = _run(prompt, 1024, qps, 1, 3)
+        rows.append(Row(
+            f"fig12a/{prompt}-1024/1P3D", r3["total"] * 1e6,
+            f"decode_stage_cut={1 - r3['decode_stage']/max(r1['decode_stage'],1e-9):.2f};"
+            f"prefill_stage_cut={1 - r3['prefill_stage']/max(r1['prefill_stage'],1e-9):.2f}",
+        ))
+    # (b) prefill scaling at response 128
+    for prompt, qps in GRID:
+        r1 = _run(prompt, 128, qps, 1, 1)
+        r2 = _run(prompt, 128, qps, 2, 1)
+        rows.append(Row(
+            f"fig12b/{prompt}-128/2P1D", r2["total"] * 1e6,
+            f"prefill_speedup={r1['prefill_stage']/max(r2['prefill_stage'],1e-9):.2f}x;"
+            f"paper_range=2.34-4.04x",
+        ))
+    # (b) the 3P regression
+    r2 = _run(16384, 1024, 1.5, 2, 1)
+    r3 = _run(16384, 1024, 1.5, 3, 1)
+    rows.append(Row(
+        "fig12b/16384-1024/3P1D-regression", r3["total"] * 1e6,
+        f"total_vs_2P={r3['total']/max(r2['total'],1e-9):.3f}x;paper=>1 (regression)",
+    ))
+    return rows

@@ -1,0 +1,68 @@
+"""Fig. 13 — P90 per-request latency / TTFT / TBT vs QPS:
+KVDirect (1 prefill + 1 decode worker) vs colocated vLLM-style baseline.
+
+Paper headline: 55 % (arXiv) and 24 % (ShareGPT) per-request latency
+reduction at matched per-node QPS (the colocated baseline's QPS is
+halved for fairness — it uses half the nodes).  TBT stays flat for
+KVDirect while the baseline's TBT grows up to 2.2× as prefills interrupt
+decoding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import ARXIV, SHAREGPT, sample_requests
+
+DURATION = 300.0
+
+
+def _stretch(reqs, factor: float):
+    """Same requests (identical lengths — no sampling confound), arrivals
+    dilated: the paper's 'vLLM QPS divided by 2' fairness rule."""
+    import dataclasses
+
+    return [dataclasses.replace(r, arrival_s=r.arrival_s * factor) for r in reqs]
+
+
+def _sim(reqs, mode, n_workers=(1, 1)) -> dict:
+    cfg = get_config("mistral-large-123b")
+    cost = CostModel(cfg, H100_NODE)
+    sim = ClusterSim(cost, SimConfig(n_prefill=n_workers[0], n_decode=n_workers[1],
+                                     mode=mode))
+    return sim.run(list(reqs)).summary()
+
+
+def run() -> list[Row]:
+    rows = []
+    reductions = {}
+    for spec in (ARXIV, SHAREGPT):
+        # spans into baseline saturation, like the paper's x-axes: the
+        # headline reductions are load-dependent, and the paper's 55 %/24 %
+        # live where the colocated scheduler degrades
+        qps_grid = (0.125, 0.25, 0.375, 0.5) if spec is ARXIV else (0.25, 0.5, 0.75, 1.0)
+        reds, tbt_ratio = [], []
+        for qps in qps_grid:
+            reqs = sample_requests(spec, qps=qps, duration_s=DURATION, seed=7)
+            kv = _sim(reqs, "pull")
+            # fair comparison: colocated uses HALF the nodes → half the QPS
+            co = _sim(_stretch(reqs, 2.0), "colocated", n_workers=(1, 1))
+            red = 1 - kv["p90_total_s"] / co["p90_total_s"]
+            reds.append(red)
+            tbt_ratio.append(co["p90_tbt_s"] / kv["p90_tbt_s"])
+            rows.append(Row(
+                f"fig13/{spec.name}/qps{qps}", kv["p90_total_s"] * 1e6,
+                f"p90_ttft={kv['p90_ttft_s']:.2f}s;p90_tbt={kv['p90_tbt_s']*1e3:.1f}ms;"
+                f"vs_vllm_reduction={red:.2f}",
+            ))
+        reductions[spec.name] = float(np.mean(reds))
+        rows.append(Row(
+            f"fig13/{spec.name}/summary", 0.0,
+            f"mean_latency_reduction={np.mean(reds):.2f};"
+            f"max_tbt_ratio={max(tbt_ratio):.2f}x;"
+            + ("paper=0.55" if spec is ARXIV else "paper=0.24"),
+        ))
+    return rows

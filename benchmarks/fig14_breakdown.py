@@ -1,0 +1,37 @@
+"""Fig. 14 — latency breakdown across the request lifecycle.
+
+Paper: transfer is 1.1 % (arXiv) / 0.5 % (ShareGPT) of end-to-end
+latency — the optimizations make transfer negligible; decode-side
+activities dominate, with decode queuing reaching 52 % / 30 % at
+QPS 0.5.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import ARXIV, SHAREGPT, sample_requests
+
+
+def run() -> list[Row]:
+    cfg = get_config("mistral-large-123b")
+    rows = []
+    for spec in (ARXIV, SHAREGPT):
+        for qps in (0.25, 0.5):
+            sim = ClusterSim(CostModel(cfg, H100_NODE),
+                             SimConfig(n_prefill=1, n_decode=1, mode="pull"))
+            reqs = sample_requests(spec, qps=qps, duration_s=240, seed=17)
+            res = sim.run(reqs)
+            b = res.mean_breakdown()
+            total = max(sum(b.values()), 1e-9)
+            fr = {k: v / total for k, v in b.items()}
+            note = ";paper_transfer=0.011" if spec is ARXIV else ";paper_transfer=0.005"
+            rows.append(Row(
+                f"fig14/{spec.name}/qps{qps}", total * 1e6,
+                f"transfer_frac={fr['transfer_s']:.4f};"
+                f"decode_frac={fr['decode_s']:.2f};"
+                f"queue_frac={fr['prefill_queue_s'] + fr['decode_queue_s']:.2f}"
+                + (note if qps == 0.5 else ""),
+            ))
+    return rows

@@ -1,0 +1,41 @@
+"""Fig. 16 — pull-mode vs push-mode under load.
+
+Paper: pull-mode averages 25.5 % lower per-request latency; at high QPS
+push-mode's pre-allocation inflates decode-side KV lifetime, queuing
+grows 1.6×, though push's smaller resident batch gives it 5.6-14.4 %
+better TBT.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import ARXIV, SHAREGPT, sample_requests
+
+
+def run() -> list[Row]:
+    cfg = get_config("mistral-large-123b")
+    rows, speedups = [], []
+    for spec in (ARXIV, SHAREGPT):
+        # the pull-mode win is a memory-pressure effect (§4.3): it appears
+        # where the decode worker's KV pool binds (ShareGPT ≥0.86 QPS on
+        # this hardware); below that, push's transfer-hiding wins slightly
+        for qps in ((0.3, 0.45) if spec is ARXIV else (0.86, 0.95)):
+            out = {}
+            for mode in ("pull", "push"):
+                sim = ClusterSim(CostModel(cfg, H100_NODE),
+                                 SimConfig(n_prefill=1, n_decode=1, mode=mode))
+                reqs = sample_requests(spec, qps=qps, duration_s=300, seed=11)
+                out[mode] = sim.run(reqs).summary()
+            sp = out["push"]["mean_total_s"] / out["pull"]["mean_total_s"]
+            speedups.append(sp)
+            tbt = out["push"]["p90_tbt_s"] / out["pull"]["p90_tbt_s"]
+            rows.append(Row(f"fig16/{spec.name}/qps{qps}",
+                            out["pull"]["mean_total_s"] * 1e6,
+                            f"pull_speedup={sp:.3f}x;push_tbt_ratio={tbt:.3f}"))
+    rows.append(Row("fig16/summary", 0.0,
+                    f"mean_pull_speedup={np.mean(speedups):.3f}x;paper=1.255x"))
+    return rows

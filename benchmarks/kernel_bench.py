@@ -1,0 +1,39 @@
+"""Kernel + engine microbenchmarks.
+
+Pallas kernels execute in interpret mode on this CPU container (TPU is
+the target), so their wall times are NOT hardware-meaningful; they are
+included to exercise the harness end-to-end.  The transfer-engine rows
+are real measurements (bytes actually move).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels.kv_pull.kernel import kv_pull_runs
+from repro.kernels.paged_attention.kernel import paged_attention
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    b, h, g, d, per, bs = 4, 8, 2, 128, 8, 32
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((b, per, bs, g, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b, per, bs, g, d)), jnp.float32)
+    tbl = jnp.broadcast_to(jnp.arange(per, dtype=jnp.int32)[None], (b, per))
+    ctx = jnp.full((b,), per * bs, jnp.int32)
+    us = timeit(lambda: paged_attention(q, kp, vp, tbl, ctx, interpret=True)
+                .block_until_ready())
+    rows.append(Row("kernel/paged_attention/interpret", us, f"ctx={per*bs};b={b}"))
+
+    src = jnp.asarray(rng.standard_normal((64, 32, 8, 128)), jnp.bfloat16)
+    dst = jnp.zeros((64, 32, 8, 128), jnp.bfloat16)
+    ss = jnp.arange(8, dtype=jnp.int32)
+    us = timeit(lambda: kv_pull_runs(src, jnp.array(dst), ss, ss, run_len=8,
+                                     interpret=True).block_until_ready())
+    mb = 64 * 32 * 8 * 128 * 2 / 2**20
+    rows.append(Row("kernel/kv_pull_runs/interpret", us, f"pages=64;MB={mb:.1f}"))
+    return rows

@@ -1,0 +1,204 @@
+"""§Roofline — three-term roofline per (arch × shape), from the dry-run.
+
+Sources and method (see EXPERIMENTS.md §Roofline):
+  * per-device FLOPs / bytes from ``compiled.cost_analysis()`` of the
+    UNROLLED depth-1/2 variants, extrapolated exactly for the uniform
+    stacks:  total = f(1) + (units-1)·(f(2)-f(1));
+  * per-device collective wire bytes parsed from the compiled HLO of the
+    same variants (launch/hlo_analysis.py), same extrapolation;
+  * hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+    ICI (terms below charge one link; a 2D-torus ring uses 2+ links, so
+    the collective term is conservative by ~2×).
+
+Terms (seconds per step, per chip — the slowest chip sets the pace):
+  compute    = HLO_FLOPs_dev / 197e12
+  memory     = HLO_bytes_dev / 819e9
+  collective = wire_bytes_dev / 50e9
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference); the
+ratio MODEL_FLOPS / (HLO_FLOPs_dev × chips) exposes remat/dispatch/
+padding waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,       # one token per sequence
+    "long_500k": 1,
+}
+TRAIN_FACTOR = {"train_4k": 6.0}  # fwd+bwd; inference shapes use 2.0
+
+
+def load_cell(dir_: pathlib.Path, arch: str, shape: str, mesh: str, depth: str):
+    f = dir_ / f"{arch}__{shape}__{mesh}__d{depth}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def extrapolate(d1: dict, d2: dict) -> dict:
+    """total = f(1) + (units-1)·(f(2)-f(1)), per metric."""
+    units = d1["units_total"]
+
+    def ext(a, b):
+        return a + (units - 1) * (b - a)
+
+    def adj(d):
+        return d["collectives"].get("wire_bytes_bf16_adjusted",
+                                    d["collectives"]["wire_bytes"])
+
+    return {
+        "flops": ext(d1["flops"], d2["flops"]),
+        "bytes": ext(d1["bytes_accessed"], d2["bytes_accessed"]),
+        "wire": ext(d1["collectives"]["wire_bytes"], d2["collectives"]["wire_bytes"]),
+        "wire_adj": ext(adj(d1), adj(d2)),
+    }
+
+
+def analyze(dir_: pathlib.Path, arch: str, shape: str, mesh: str = "pod") -> dict | None:
+    d1 = load_cell(dir_, arch, shape, mesh, "1")
+    d2 = load_cell(dir_, arch, shape, mesh, "2")
+    dfull = load_cell(dir_, arch, shape, mesh, "full")
+    if not d1 or not d2:
+        return None
+    if "skipped" in d1:
+        return {"arch": arch, "shape": shape, "skipped": d1["skipped"]}
+    tot = extrapolate(d1, d2)
+    chips = d1["n_devices"]
+    t_compute = tot["flops"] / PEAK_FLOPS
+    t_memory = tot["bytes"] / HBM_BW
+    t_coll = tot["wire_adj"] / LINK_BW  # bf16-adjusted (see hlo_analysis)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())  # perfectly-overlapped lower bound
+
+    factor = TRAIN_FACTOR.get(shape, 2.0)
+    n_act = d1["model_params_active"]
+    model_flops = factor * n_act * SHAPE_TOKENS[shape]
+    hlo_global = tot["flops"] * chips
+    useful = model_flops / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model FLOPs per second at the step's pace
+    # vs the chips' peak
+    mfu = model_flops / (step_s * chips * PEAK_FLOPS) if step_s else 0.0
+
+    from repro.configs import get_config as _gc
+
+    floor = memory_floor_bytes(_gc(arch), shape, chips) / HBM_BW
+    step_floor = max(t_compute, floor, t_coll)
+    mfu_floor = model_flops / (step_floor * chips * PEAK_FLOPS) if step_floor else 0.0
+
+    out = {
+        "arch": arch, "shape": shape, "mesh": mesh, "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "collective_raw_s": tot["wire"] / LINK_BW,
+        "memory_floor_s": floor,
+        "roofline_fraction_at_floor": mfu_floor,
+        "dominant": dominant, "step_s_lb": step_s,
+        "model_flops": model_flops, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful, "roofline_fraction": mfu,
+    }
+    if dfull and "memory" in dfull:
+        out["full_temp_gib"] = dfull["memory"]["temp_bytes"] / 2**30
+        out["full_args_gib"] = dfull["memory"]["argument_bytes"] / 2**30
+        out["full_compile_s"] = dfull.get("compile_s")
+    return out
+
+
+def memory_floor_bytes(cfg, shape: str, chips: int) -> float:
+    """Analytic per-device HBM-traffic floor (order of magnitude): the
+    weight/state/activation bytes an ideal fused TPU implementation must
+    stream.  Brackets the truth against the pre-fusion upper bound that
+    cost_analysis reports (§Roofline methodology note 2)."""
+    n_bytes = 2.0 * cfg.param_count()
+    d, L = cfg.d_model, cfg.num_layers
+    toks = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        micro = 8
+        # weight streams per microbatch (fwd + remat-fwd + bwd ≈ 3 reads of
+        # the FSDP-gathered weights) + fp32 optimizer read/write + per-layer
+        # activation write/read (coarse ×4 for remat)
+        act = toks / chips * d * L * 2 * 4
+        opt = 24.0 * cfg.param_count() / chips
+        return micro * 3 * n_bytes + opt + act
+    if shape == "prefill_32k":
+        act = toks / chips * d * L * 2 * 4
+        kv = toks * cfg.num_layers * cfg.kv_bytes_per_token_per_layer() / chips
+        return n_bytes / 16 + act + kv
+    # decode: weights (TP-sharded) + the whole resident KV once per token
+    ctx = 32768 if shape == "decode_32k" else 524288
+    b = 128 if shape == "decode_32k" else 1
+    kv = b * ctx * cfg.num_layers * cfg.kv_bytes_per_token_per_layer() / chips
+    return n_bytes / 16 + kv
+
+
+MOVE_HINTS = {
+    "compute": "raise arithmetic efficiency: bigger fused matmul tiles / drop "
+               "remat recompute on cheap layers / bf16-native softmax",
+    "memory": "cut HBM traffic: fuse elementwise chains, keep fp32 accumulators "
+              "in VMEM, quantize KV reads (int8)",
+    "collective": "re-shard to shrink wire bytes: overlap collectives with "
+                  "compute, move all-gathers to the smaller operand, or batch "
+                  "per-layer collectives",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    dir_ = pathlib.Path(args.dir)
+
+    from repro.configs import ASSIGNED
+    from repro.launch.steps import SHAPES
+
+    rows, skips = [], []
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            r = analyze(dir_, arch, shape, args.mesh)
+            if r is None:
+                continue
+            if "skipped" in r:
+                skips.append(r)
+            else:
+                rows.append(r)
+
+    lines = [
+        "| arch | shape | compute_s | memory_s [floor, upper] | collective_s | "
+        "dominant | MODEL/HLO | roofline_frac [upper, floor] | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"[{r['memory_floor_s']:.2e}, {r['memory_s']:.2e}] | "
+            f"{r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"[{r['roofline_fraction']:.3f}, {r['roofline_fraction_at_floor']:.3f}] | "
+            f"{r.get('full_temp_gib', float('nan')):.1f} |"
+        )
+    for s in skips:
+        lines.append(f"| {s['arch']} | {s['shape']} | — | — | — | SKIPPED | — | — | — |")
+    table = "\n".join(lines)
+    print(table)
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.out).write_text(table + "\n")
+    # per-cell JSON for downstream tooling
+    (pathlib.Path(args.out).parent / "roofline.json").write_text(
+        json.dumps({"cells": rows, "skipped": skips}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

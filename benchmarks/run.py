@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+Run as ``PYTHONPATH=src python -m benchmarks.run [--only fig13,fig15]``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "fig03_message_timeline",
+    "fig04_message_bandwidth",
+    "fig06_motivation_qps",
+    "fig12_cluster_config",
+    "fig13_latency_qps",
+    "fig14_breakdown",
+    "fig15_bandwidth",
+    "fig16_pull_vs_push",
+    "fig17_coalescing",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated module prefixes")
+    args = ap.parse_args()
+    prefixes = [p for p in args.only.split(",") if p]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if prefixes and not any(mod_name.startswith(p) for p in prefixes):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception:  # noqa: BLE001
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED modules: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Cluster-scale what-if: pull vs push vs colocated under load.
+
+Runs the calibrated discrete-event simulator (the same one behind the
+paper-figure benchmarks) on the paper's model/hardware, printing the
+latency/TTFT/TBT trade-offs at a saturating QPS.
+
+    PYTHONPATH=src python examples/pull_vs_push_sim.py
+"""
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import SHAREGPT, sample_requests
+
+
+def main() -> None:
+    cfg = get_config("mistral-large-123b")
+    cost = CostModel(cfg, H100_NODE)
+    print(f"model: {cfg.describe()}")
+    print(f"worker: {H100_NODE.name}; KV capacity "
+          f"{cost.kv_capacity_tokens()/1e6:.2f}M tokens; "
+          f"prefill(20K) = {cost.prefill_s(20_471):.2f}s; "
+          f"KV transfer(20K) = {cost.transfer_s(20_471)*1e3:.0f} ms (KVDirect) "
+          f"vs {cost.transfer_s(20_471, mode='message')*1e3:.0f} ms (message)")
+
+    qps = 0.9
+    reqs = sample_requests(SHAREGPT, qps=qps, duration_s=240, seed=11)
+    print(f"\nShareGPT-like workload @ {qps} QPS, {len(reqs)} requests:")
+    for mode, workers in (("pull", (1, 1)), ("push", (1, 1)), ("colocated", (1, 1))):
+        sim = ClusterSim(cost, SimConfig(n_prefill=workers[0], n_decode=workers[1],
+                                         mode=mode))
+        s = sim.run(list(reqs)).summary()
+        print(f"  {mode:10s} p50={s['p50_total_s']:6.1f}s p90={s['p90_total_s']:6.1f}s "
+              f"ttft_p90={s['p90_ttft_s']:5.1f}s tbt_p90={s['p90_tbt_s']*1e3:5.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end disaggregated serving with a real model (reduced config).
+
+Prefill workers run real JAX prefill; KV blocks move through the
+KVDirect engine (one-sided, coalesced); the decode worker batch-decodes.
+Also demonstrates elastic scale-up and crash recovery.
+
+    PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.serving.disagg import DisaggService
+
+
+def main() -> None:
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    svc = DisaggService(model, params, n_prefill=2, num_blocks=128)
+    rng = np.random.default_rng(0)
+
+    print("== batched requests through the disaggregated pipeline ==")
+    for i in range(3):
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        req = svc.submit(tokens)
+        out = svc.generate(req, max_new=6)
+        print(f"  {req.request_id}: prefill@{req.prefill_worker} → tokens {out}")
+    s = svc.engine.stats
+    print(f"  engine: {s.txns_submitted} txns → {s.reads_posted} reads "
+          f"(coalesce {s.coalesce_factor:.1f}×), {s.bytes_moved/2**20:.1f} MiB")
+
+    print("== elastic scale-up: add a prefill worker to the RUNNING cluster ==")
+    wid = svc.add_prefill_worker(num_blocks=128)
+    print(f"  {wid} joined; decode worker auto-CONNECTed: peers={svc.conn_mgr.peers}")
+
+    print("== crash recovery: kill the prefill worker mid-request ==")
+    tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    req = svc.submit(tokens)
+    victim = req.prefill_worker
+    svc.fail_prefill_worker(victim)
+    print(f"  {victim} failed after prefill; re-prefilled on {req.prefill_worker} "
+          f"(retries={req.retries})")
+    out = svc.generate(req, max_new=6)
+    print(f"  {req.request_id}: recovered → tokens {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Train a ~100M-param LM for a few hundred steps with checkpoint/restart.
+
+Uses the yi-9b FAMILY at a ~100M reduced width (the full configs are
+dry-run-only on CPU); demonstrates loss descent, checkpointing, and
+crash-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # ~100M params: widen the yi smoke family
+    cfg = dataclasses.replace(
+        get_smoke_config("yi-9b"),
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=2,
+        d_ff=1408, vocab_size=32768,
+    )
+    model = build_model(cfg)
+    print(f"config: {cfg.describe()}")
+
+    opt_cfg = AdamWConfig(lr_peak=3e-3, warmup_steps=20, total_steps=args.steps)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = adamw_init(params, opt_cfg)
+    data = SyntheticLMDataset(cfg.vocab_size, seq_len=128, batch_size=8)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, remat=False))
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    t0, first_loss = time.time(), None
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        loss = float(m["loss"])
+        first_loss = first_loss or loss
+        if step % 20 == 0:
+            print(f"step {step:4d}  loss {loss:.4f}  ({time.time()-t0:.0f}s)")
+        if step == args.steps // 2:
+            save_checkpoint(ckpt_dir, step, (params, opt_state, data.state()))
+            print(f"--- checkpointed at step {step}; simulating crash+restart ---")
+            # crash: rebuild everything from disk
+            params = model.init_params(jax.random.PRNGKey(1))  # wrong weights
+            opt_state = adamw_init(params, opt_cfg)
+            s = latest_step(ckpt_dir)
+            params, opt_state, dstate = restore_checkpoint(
+                ckpt_dir, s, (params, opt_state, data.state()))
+            data.restore(jax.tree.map(int, dstate))
+            print(f"--- resumed from step {s} ---")
+    print(f"final loss {loss:.4f} (from {first_loss:.4f}) — "
+          f"{'DECREASED ✓' if loss < first_loss else 'no descent ✗'}")
+
+
+if __name__ == "__main__":
+    main()

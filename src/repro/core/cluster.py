@@ -1,0 +1,93 @@
+"""Cluster scheduler — dynamic worker membership (§4.2).
+
+Message-passing collectives (NCCL/MPI) freeze the communication graph at
+init; adding a GPU means restarting the service (paper Motivation #2).
+KVDirect instead keeps a tiny control-plane registry: workers join and
+leave a *running* cluster, the scheduler broadcasts membership changes,
+and decode workers react by CONNECTing to new prefill workers.
+
+The scheduler is control-plane only.  Descriptors and reads flow directly
+between workers, so a scheduler outage stalls membership changes but not
+inference (tested in tests/test_cluster.py).
+
+Failure handling built on the same path:
+  * ``remove_worker(id, failed=True)`` — crash: decode workers invalidate
+    the connection epoch; the serving layer re-queues in-flight requests.
+  * heartbeats with a deadline drive crash detection;
+  * stragglers are the serving scheduler's job (hedged prefill dispatch),
+    built on the membership info here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+from repro.core.connection import WorkerInfo
+
+__all__ = ["ClusterScheduler", "MembershipEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    kind: str  # "added" | "removed" | "failed"
+    worker: WorkerInfo
+
+
+class ClusterScheduler:
+    def __init__(self, *, heartbeat_timeout_s: float = 5.0) -> None:
+        self._workers: dict[str, WorkerInfo] = {}
+        self._subs: list[Callable[[MembershipEvent], None]] = []
+        self._last_heartbeat: dict[str, float] = {}
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+
+    # -------------------------------------------------------- membership
+    def add_worker(self, info: WorkerInfo, *, now: float = 0.0) -> None:
+        if info.worker_id in self._workers:
+            raise ValueError(f"worker {info.worker_id!r} already in cluster")
+        self._workers[info.worker_id] = info
+        self._last_heartbeat[info.worker_id] = now
+        self._broadcast(MembershipEvent("added", info))
+
+    def remove_worker(self, worker_id: str, *, failed: bool = False) -> None:
+        info = self._workers.pop(worker_id, None)
+        if info is None:
+            return
+        self._last_heartbeat.pop(worker_id, None)
+        self._broadcast(MembershipEvent("failed" if failed else "removed", info))
+
+    # --------------------------------------------------------- liveness
+    def heartbeat(self, worker_id: str, now: float) -> None:
+        if worker_id in self._workers:
+            self._last_heartbeat[worker_id] = now
+
+    def reap_dead(self, now: float) -> list[str]:
+        """Crash detection: drop workers whose heartbeat lapsed."""
+        dead = [
+            w
+            for w, t in self._last_heartbeat.items()
+            if now - t > self.heartbeat_timeout_s
+        ]
+        for w in dead:
+            self.remove_worker(w, failed=True)
+        return dead
+
+    # ------------------------------------------------------------ query
+    def workers(self, role: str | None = None) -> list[WorkerInfo]:
+        ws: Iterable[WorkerInfo] = self._workers.values()
+        if role is not None:
+            ws = (w for w in ws if w.role == role)
+        return sorted(ws, key=lambda w: w.worker_id)
+
+    def get(self, worker_id: str) -> WorkerInfo:
+        return self._workers[worker_id]
+
+    def __contains__(self, worker_id: str) -> bool:
+        return worker_id in self._workers
+
+    # -------------------------------------------------------- broadcast
+    def subscribe(self, cb: Callable[[MembershipEvent], None]) -> None:
+        self._subs.append(cb)
+
+    def _broadcast(self, ev: MembershipEvent) -> None:
+        for cb in list(self._subs):
+            cb(ev)

@@ -1,0 +1,152 @@
+"""Pull-mode vs push-mode KV transfer orchestration (§4.3).
+
+Pull-mode (KVDirect's default):
+  1. prefill worker allocates blocks, runs ALL layers of prefill;
+  2. block IDs travel to the decode worker (tiny control message);
+  3. decode worker allocates its blocks only NOW — KV lifetime on the
+     decode worker starts here, not at admission;
+  4. decode worker pulls every layer's blocks in one shot (one-sided
+     reads), then sends COMPLETE; prefill frees on COMPLETE.
+
+Push-mode (the strawman; Splitwise/DéjàVu-style):
+  1. decode worker must RESERVE all blocks at admission (pre-allocation —
+     required because incremental allocation deadlocks, Motivation #3);
+  2. prefill worker pushes layer-by-layer as it computes;
+  3. decode memory is held idle from admission until prefill completes.
+
+Both modes are implemented against the real caches + transfer engine so
+the byte movement is identical and testable; the *timing/occupancy*
+consequences (Fig. 11/16) are accounted by the caller's clock (the event
+simulator at cluster scale, the serving driver at CPU scale).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.connection import Connection
+from repro.core.descriptors import CompleteTxn, build_block_reads
+from repro.core.transfer_engine import TransferEngine, TransferStats
+from repro.serving.blocks import BlockPool
+from repro.serving.kv_cache import PagedKVCache, SlotCache
+from repro.serving.request import Request, RequestState
+
+__all__ = ["pull_kv", "push_reserve", "push_layer", "push_finish", "pull_state"]
+
+
+def pull_kv(
+    req: Request,
+    *,
+    conn: Connection,
+    engine: TransferEngine,
+    decode_pool: BlockPool,
+    decode_cache: PagedKVCache,
+    drain: bool = True,
+) -> TransferStats:
+    """Pull-mode transfer of a whole request: allocate decode blocks,
+    TRANSFER() every layer's blocks, COMPLETE().
+
+    Raises OutOfBlocks if the decode pool can't hold the request — the
+    caller keeps the request in KV_QUEUED (prefill-side KV stays alive;
+    the prefill worker is free to compute other requests meanwhile, which
+    is exactly pull-mode's utilization win).
+    """
+    n = len(req.prefill_blocks)
+    req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
+    req.connection_epoch = conn.epoch
+    txns = []
+    for layer in range(decode_cache.num_layers):
+        remote = conn.desc(f"layer{layer}/kv")
+        local = decode_cache.desc(layer)
+        txns.extend(
+            build_block_reads(
+                req.request_id, remote, local, req.prefill_blocks, req.decode_blocks
+            )
+        )
+    txns.append(
+        CompleteTxn(
+            request_id=req.request_id,
+            src_worker=conn.prefill_worker,
+            dst_worker=conn.decode_worker,
+        )
+    )
+    engine.submit(txns)
+    return engine.drain() if drain else engine.stats
+
+
+def pull_state(
+    req: Request,
+    *,
+    conn: Connection,
+    engine: TransferEngine,
+    decode_cache: SlotCache,
+    remote_slot: int,
+    local_slot: int,
+    drain: bool = True,
+) -> TransferStats:
+    """SSM-state pull: one contiguous transaction per layer (degenerate
+    best case of the tensor-centric design — see DESIGN.md §4)."""
+    txns = []
+    for layer in range(decode_cache.num_layers):
+        remote = conn.desc(f"layer{layer}/state")
+        local = decode_cache.desc(layer)
+        txns.extend(
+            build_block_reads(req.request_id, remote, local, [remote_slot], [local_slot])
+        )
+    txns.append(
+        CompleteTxn(
+            request_id=req.request_id,
+            src_worker=conn.prefill_worker,
+            dst_worker=conn.decode_worker,
+        )
+    )
+    engine.submit(txns)
+    return engine.drain() if drain else engine.stats
+
+
+# ----------------------------------------------------------------- push
+def push_reserve(req: Request, decode_pool: BlockPool, num_blocks: int) -> None:
+    """Push-mode step 1: pre-allocate ALL decode blocks at admission.
+    This is the memory that sits idle for the whole prefill (Fig. 11a)."""
+    req.decode_blocks = decode_pool.reserve(num_blocks)
+
+
+def push_layer(
+    req: Request,
+    layer: int,
+    *,
+    conn: Connection,
+    engine: TransferEngine,
+    decode_cache: PagedKVCache,
+    drain: bool = True,
+) -> TransferStats:
+    """Push-mode step 2: prefill pushes one finished layer.  On the wire
+    this is the same byte movement (our engine copies src→dst); the
+    difference is WHO initiates and WHEN memory is held."""
+    remote = conn.desc(f"layer{layer}/kv")
+    local = decode_cache.desc(layer)
+    engine.submit(
+        build_block_reads(req.request_id, remote, local, req.prefill_blocks, req.decode_blocks)
+    )
+    return engine.drain() if drain else engine.stats
+
+
+def push_finish(
+    req: Request,
+    *,
+    conn: Connection,
+    engine: TransferEngine,
+    decode_pool: BlockPool,
+) -> TransferStats:
+    """Push-mode step 3: all layers pushed; commit reservations and
+    COMPLETE so the prefill side frees."""
+    decode_pool.commit(req.decode_blocks)
+    engine.submit(
+        [
+            CompleteTxn(
+                request_id=req.request_id,
+                src_worker=conn.prefill_worker,
+                dst_worker=conn.decode_worker,
+            )
+        ]
+    )
+    return engine.drain()

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: blockwise causal (flash) attention for prefill.
+
+The TPU-native sibling of repro.models.flash (which is the oracle and
+the dry-run body).  Grid = (batch·kv_groups, q_blocks, kv_blocks) with
+the kv dim sequential; online-softmax stats live in VMEM scratch.  GQA
+is handled in the K/V index_map (q-group → kv-head), so K/V are streamed
+once per group without physical repetition — on real hardware this is
+the memory-bandwidth advantage over the jnp path's repeat.
+
+Causal + sliding-window + meta-prefix masking matches
+models.flash.pair_schedule semantics; fully-masked kv blocks are skipped
+with pl.when (predication — no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # [1, 1, bq, d]  (b, g-q-slice)
+    k_ref,    # [1, 1, bk, d]
+    v_ref,    # [1, 1, bk, d]
+    o_ref,    # [1, 1, bq, d]
+    m_ref,    # [bq, 128] f32
+    l_ref,    # [bq, 128] f32
+    acc_ref,  # [bq, d] f32
+    *,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    causal: bool,
+    window: int,
+    prefix: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = i * block_q
+    k_lo = j * block_k
+    # block-level visibility (mirror of models.flash.pair_schedule)
+    visible = True
+    if causal:
+        visible = k_lo <= q_lo + block_q - 1
+    if window:
+        fully_out = (k_lo + block_k - 1) <= q_lo - window
+        covers_prefix = (prefix > 0) & (k_lo < prefix)
+        visible = visible & (~fully_out | covers_prefix)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)   # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)   # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * (d ** -0.5)                        # [bq, bk]
+        qp = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kp <= qp
+        if window:
+            vis = kp > qp - window
+            if prefix:
+                vis |= kp < prefix
+            mask &= vis
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+        m_ref[:, 0] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "prefix_len", "block_q", "block_k", "interpret"),
+)
+def flash_prefill(
+    q: jax.Array,   # [b, s, h, d]
+    k: jax.Array,   # [b, t, g, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    prefix_len: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    qpg = h // g
+    bq, bk = min(block_q, s), min(block_k, t)
+    if s % bq or t % bk:
+        raise ValueError(f"seq ({s},{t}) not block-aligned ({bq},{bk})")
+    n_q, n_k = s // bq, t // bk
+
+    # layouts: q [b, h, s, d] so (group, in-group head) factor per grid;
+    # k/v [b, g, t, d]; grid maps head-index → kv-group in the index_map.
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, block_q=bq, block_k=bk, n_k=n_k,
+        causal=causal, window=sliding_window, prefix=prefix_len,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // (h // k.shape[2]), j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // (h // k.shape[2]), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""jit'd public entry point for blockwise prefill attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill.kernel import flash_prefill as _kernel
+
+__all__ = ["flash_prefill_op"]
+
+
+def flash_prefill_op(q, k, v, *, causal=True, sliding_window=0, prefix_len=0,
+                     block_q=256, block_k=256):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, causal=causal, sliding_window=sliding_window,
+                   prefix_len=prefix_len, block_q=block_q, block_k=block_k,
+                   interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the flash_prefill kernel: the dense attention AND
+the blockwise custom-VJP implementation (models.flash) — the kernel must
+match both."""
+from __future__ import annotations
+
+from repro.models.attention import gqa_attention
+from repro.models.flash import flash_attention
+
+__all__ = ["dense_ref", "blockwise_ref"]
+
+
+def dense_ref(q, k, v, *, causal=True, sliding_window=0, prefix_len=0):
+    return gqa_attention(q, k, v, causal=causal, sliding_window=sliding_window,
+                         prefix_len=prefix_len)
+
+
+def blockwise_ref(q, k, v, *, causal=True, sliding_window=0, prefix_len=0,
+                  q_chunk=256, k_chunk=256):
+    return flash_attention(q, k, v, causal=causal, sliding_window=sliding_window,
+                           prefix_len=prefix_len, q_chunk=q_chunk, k_chunk=k_chunk)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: descriptor-driven KV page pull — KVDirect's
+TRANSFER() on a TPU.
+
+The decode worker computed (remote page id → local page id) pairs from
+the connection-time tensor descriptor (core/descriptors.py).  This
+kernel executes that transaction list on-device: each grid step DMAs one
+page (or one COALESCED RUN of adjacent pages) from the source KV pool
+into the destination pool, with the ids scalar-prefetched so the
+BlockSpec index_map drives the DMA engine directly — no gather kernel,
+no staging buffer, exactly the paper's "one-sided read" data path.
+
+On a real multi-chip deployment the source pool lives on the *prefill*
+chip: swap the plain copy for ``pltpu.make_async_remote_copy`` with the
+link-aligned ``device_id`` (the decode chip pulls over ICI;
+DESIGN.md §2).  The local form below is what we can VALIDATE in
+interpret mode; the remote form differs only in the copy primitive.
+
+Two variants:
+  * ``kv_pull``       — one page per transaction (uncoalesced).
+  * ``kv_pull_runs``  — (src_start, dst_start) runs of ``run_len``
+    adjacent pages: the block-coalescing win (§4.2 / Fig. 17) as fewer,
+    longer DMA bursts.
+
+The destination pool is input/output-aliased (donated): pages not named
+by any transaction keep their existing contents, exactly like an RDMA
+write into registered memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(src_ids, dst_ids, src_ref, dst_in_ref, dst_ref):
+    """One grid step = one transaction; BlockSpecs did the addressing."""
+    del dst_in_ref  # aliased with dst_ref; only written
+    dst_ref[...] = src_ref[...]
+
+
+def _pull(src_pages, dst_pages, src_ids, dst_ids, pages_per_txn, interpret):
+    n_txn = src_ids.shape[0]
+    _, bs, g, d = src_pages.shape
+    blk = (pages_per_txn, bs, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_txn,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, sid, did: (sid[i], 0, 0, 0)),
+            pl.BlockSpec(blk, lambda i, sid, did: (did[i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, sid, did: (did[i], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pages.shape, dst_pages.dtype),
+        input_output_aliases={3: 0},  # (sid, did, src, DST) -> out
+        interpret=interpret,
+    )(src_ids, dst_ids, src_pages, dst_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(1,))
+def kv_pull(
+    src_pages: jax.Array,   # [n_src, bs, g, d]  (prefill worker pool)
+    dst_pages: jax.Array,   # [n_dst, bs, g, d]  (decode worker pool; donated)
+    src_ids: jax.Array,     # [n_txn] int32
+    dst_ids: jax.Array,     # [n_txn] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """dst_pages[dst_ids[i]] = src_pages[src_ids[i]] per transaction."""
+    return _pull(src_pages, dst_pages, src_ids, dst_ids, 1, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("run_len", "interpret"), donate_argnums=(1,))
+def kv_pull_runs(
+    src_pages: jax.Array,    # [n_src, bs, g, d]
+    dst_pages: jax.Array,    # [n_dst, bs, g, d]
+    src_starts: jax.Array,   # [n_runs] int32 — in units of run_len pages
+    dst_starts: jax.Array,   # [n_runs] int32 — in units of run_len pages
+    *,
+    run_len: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Coalesced: each grid step moves ``run_len`` ADJACENT pages in one
+    DMA burst.  Starts are in run-granularity units (Pallas block index
+    semantics), i.e. page_id = start * run_len."""
+    return _pull(src_pages, dst_pages, src_starts, dst_starts, run_len, interpret)

@@ -1,0 +1,19 @@
+"""jit'd public entry points for the descriptor-driven KV pull."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kv_pull.kernel import kv_pull as _pull, kv_pull_runs as _pull_runs
+
+__all__ = ["kv_pull_op", "kv_pull_runs_op"]
+
+
+def kv_pull_op(src_pages, dst_pages, src_ids, dst_ids):
+    interpret = jax.default_backend() != "tpu"
+    return _pull(src_pages, dst_pages, src_ids, dst_ids, interpret=interpret)
+
+
+def kv_pull_runs_op(src_pages, dst_pages, src_starts, dst_starts, *, run_len: int):
+    interpret = jax.default_backend() != "tpu"
+    return _pull_runs(src_pages, dst_pages, src_starts, dst_starts,
+                      run_len=run_len, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the kv_pull kernels."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["kv_pull_ref", "kv_pull_runs_ref"]
+
+
+def kv_pull_ref(src_pages, dst_pages, src_ids, dst_ids) -> jax.Array:
+    return dst_pages.at[dst_ids].set(src_pages[src_ids])
+
+
+def kv_pull_runs_ref(src_pages, dst_pages, src_starts, dst_starts, *, run_len: int) -> jax.Array:
+    """Starts are in run-granularity units: page_id = start * run_len."""
+    import jax.numpy as jnp
+
+    offs = jnp.arange(run_len)
+    src_idx = (src_starts[:, None] * run_len + offs).reshape(-1)
+    dst_idx = (dst_starts[:, None] * run_len + offs).reshape(-1)
+    return dst_pages.at[dst_idx].set(src_pages[src_idx])

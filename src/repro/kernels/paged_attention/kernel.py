@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: paged decode attention over per-sequence page tables.
+
+One grid step = one (sequence, page) pair.  The page id comes from a
+SCALAR-PREFETCHED block table — the BlockSpec index_map dereferences the
+table, so the DMA engine streams exactly the pages the sequence owns
+(HBM→VMEM), never a gathered copy of the whole cache.  Online softmax
+stats (m, l, acc) live in VMEM scratch across the page-sequential grid
+dimension.
+
+This is the TPU-native sibling of the jnp reference in
+repro.models.attention.paged_decode_attention (= ref.py here) and the
+same contract the KVDirect transfer engine fills pages for.
+
+Layouts (matching the serving stack):
+    q            [b, h, d]
+    k_pages      [b, per_seq, bs, g, d]    (per-sequence pools)
+    v_pages      [b, per_seq, bs, g, d]
+    block_tables [b, per_seq] int32        (within-sequence page ids)
+    context_lens [b] int32                 (tokens INCLUDING current)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    block_tables,      # [b, per_seq]
+    context_lens,      # [b]
+    # VMEM blocks
+    q_ref,             # [1, h, d]
+    k_ref,             # [1, 1, bs, g, d]
+    v_ref,             # [1, 1, bs, g, d]
+    o_ref,             # [1, h, d]
+    # scratch
+    m_ref,             # [h, 128] f32
+    l_ref,             # [h, 128] f32
+    acc_ref,           # [h, d] f32
+    *,
+    pages_per_seq: int,
+    block_size: int,
+):
+    b_idx = pl.program_id(0)
+    p_idx = pl.program_id(1)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = context_lens[b_idx]
+    page_start = p_idx * block_size
+    # Skip pages entirely beyond the context.
+    @pl.when(page_start < ctx)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # [h, d]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [bs, g, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        h, d = q.shape
+        bs, g, _ = k.shape
+        qpg = h // g
+        qg = q.reshape(g, qpg, d)
+        scores = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),                       # [g, qpg, d] x [g, d, bs]
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ) * (d ** -0.5)                                     # [g, qpg, bs]
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, (g, qpg, bs), 2)
+        scores = jnp.where(pos < ctx, scores, NEG_INF)
+        scores = scores.reshape(h, bs)
+
+        m_prev = m_ref[:, 0]                                # [h]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(scores <= NEG_INF, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(
+            p.reshape(g, qpg, bs), v.transpose(1, 0, 2),    # [g, qpg, bs] x [g, bs, d]
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).reshape(h, d)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(p_idx == pages_per_seq - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,             # [b, h, d]
+    k_pages: jax.Array,       # [b, per_seq, bs, g, d]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [b, per_seq] int32
+    context_lens: jax.Array,  # [b] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    _, per_seq, bs, g, _ = k_pages.shape
+
+    kernel = functools.partial(_kernel, pages_per_seq=per_seq, block_size=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, per_seq),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, p_, tbl, cl: (b_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, g, d), lambda b_, p_, tbl, cl: (b_, tbl[b_, p_], 0, 0, 0)),
+            pl.BlockSpec((1, 1, bs, g, d), lambda b_, p_, tbl, cl: (b_, tbl[b_, p_], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, p_, tbl, cl: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 128), jnp.float32),
+            pltpu.VMEM((h, 128), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pages, v_pages)

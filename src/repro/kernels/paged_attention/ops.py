@@ -1,0 +1,18 @@
+"""jit'd public entry point for paged decode attention.
+
+TPU runs the Pallas kernel; any other backend (this container's CPU)
+runs it in interpret mode, so the BlockSpec pipeline is exercised
+everywhere while results stay bit-comparable to ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+
+__all__ = ["paged_attention_op"]
+
+
+def paged_attention_op(q, k_pages, v_pages, block_tables, context_lens):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k_pages, v_pages, block_tables, context_lens, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the paged_attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import KVPages, paged_decode_attention
+
+__all__ = ["paged_attention_ref"]
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens) -> jax.Array:
+    return paged_decode_attention(q, KVPages(k_pages, v_pages), block_tables, context_lens)

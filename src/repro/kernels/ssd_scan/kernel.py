@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+Grid = (batch, heads, chunks) with the chunk dim sequential; the running
+SSD state [hd, ns] lives in VMEM scratch across chunks.  Within a chunk
+everything is MXU matmuls ([l,l] decay-masked score matrix, [l,hd]
+outputs, [hd,ns] state update) — the SSD insight that the recurrence
+becomes attention-like block compute.
+
+Oracle: repro.models.ssm._ssd_chunked (pure jnp, also the model body).
+B and C are shared across heads (ngroups=1), matching the models/ssm
+layout; the A decay and D skip are scalar-prefetched per head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    a_vec,      # [nh] scalar prefetch: per-head A (negative)
+    d_vec,      # [nh] scalar prefetch: per-head D skip
+    x_ref,      # [1, 1, l, hd]
+    dt_ref,     # [1, 1, l]
+    b_ref,      # [1, l, ns]
+    c_ref,      # [1, l, ns]
+    y_ref,      # [1, 1, l, hd]
+    state_out,  # [1, 1, hd, ns]
+    state_ref,  # scratch [hd, ns] f32
+    *,
+    n_chunks: int,
+    chunk: int,
+):
+    h_idx = pl.program_id(1)
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # [l, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)      # [l]
+    B = b_ref[0].astype(jnp.float32)           # [l, ns]
+    C = c_ref[0].astype(jnp.float32)           # [l, ns]
+    a = a_vec[h_idx].astype(jnp.float32)
+    d_skip = d_vec[h_idx].astype(jnp.float32)
+
+    da = dt * a                                # [l] log-decay per step
+    cum = jnp.cumsum(da)                       # [l]
+    seg = cum[:, None] - cum[None, :]          # decay j→i
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tril, jnp.exp(seg), 0.0)     # [l, l]
+
+    xbar = x * dt[:, None]                     # [l, hd]
+    scores = jax.lax.dot_general(              # C·Bᵀ ∘ L
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * L
+    y = jax.lax.dot_general(                   # within-chunk
+        scores, xbar, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # read prior state with in-chunk decay: y += exp(cum)·(C·stateᵀ)
+    state_t = state_ref[...]                   # [hd, ns]
+    y_off = jax.lax.dot_general(
+        C, state_t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]                  # [l, hd]
+    y = y + y_off + d_skip * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state' = exp(Σda)·state + Σ_j exp(cum[-1]-cum[j])·x̄_jᵀ B_j
+    decay_states = jnp.exp(cum[-1] - cum)      # [l]
+    upd = jax.lax.dot_general(
+        xbar * decay_states[:, None], B,
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                          # [hd, ns]
+    state_ref[...] = state_t * jnp.exp(cum[-1]) + upd
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _emit_state():
+        state_out[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # [b, s, nh, hd]
+    dt: jax.Array,   # [b, s, nh]  (post-softplus)
+    a: jax.Array,    # [nh] negative decay
+    B: jax.Array,    # [b, s, ns]
+    C: jax.Array,    # [b, s, ns]
+    d_skip: jax.Array,  # [nh]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [b, s, nh, hd], final_state [b, nh, hd, ns])."""
+    b, s, nh, hd = x.shape
+    ns = B.shape[-1]
+    l = min(chunk, s)
+    if s % l:
+        raise ValueError(f"seq {s} not chunk-aligned ({l})")
+    nc = s // l
+
+    xt = x.transpose(0, 2, 1, 3)       # [b, nh, s, hd]
+    dtt = dt.transpose(0, 2, 1)        # [b, nh, s]
+
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=l)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, hd), lambda b_, h_, c_, av, dv: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, l), lambda b_, h_, c_, av, dv: (b_, h_, c_)),
+            pl.BlockSpec((1, l, ns), lambda b_, h_, c_, av, dv: (b_, c_, 0)),
+            pl.BlockSpec((1, l, ns), lambda b_, h_, c_, av, dv: (b_, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, hd), lambda b_, h_, c_, av, dv: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, hd, ns), lambda b_, h_, c_, av, dv: (b_, h_, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ns), jnp.float32)],
+    )
+    y, state = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, s, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, ns), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, d_skip, xt, dtt, B, C)
+    return y.transpose(0, 2, 1, 3), state

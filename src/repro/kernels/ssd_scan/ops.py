@@ -1,0 +1,13 @@
+"""jit'd public entry point for the SSD chunked scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+
+__all__ = ["ssd_scan_op"]
+
+
+def ssd_scan_op(x, dt, a, B, C, d_skip, *, chunk: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(x, dt, a, B, C, d_skip, chunk=chunk, interpret=interpret)

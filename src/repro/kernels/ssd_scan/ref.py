@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ssd_scan kernel (the model's own SSD body)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _ssd_chunked
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x, dt, a, B, C, d_skip, *, chunk: int = 128):
+    y, state = _ssd_chunked(x, dt, a, B, C, chunk)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, state

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles the real step function for every (architecture × input
+shape) cell on the production meshes:
+
+    16×16        ("data","model")        — one v5e pod, 256 chips
+    2×16×16      ("pod","data","model")  — two pods, 512 chips
+
+and records memory_analysis / cost_analysis / per-collective byte sums
+into a JSON artifact consumed by the §Roofline pipeline.
+
+Depth variants (--depth):
+    full  — scan-over-layers at the full assigned depth: proves lowering,
+            sharding coherence and per-device memory.
+    1 | 2 — UNROLLED 1- or 2-unit variants: FLOPs/bytes/collectives are
+            exactly visible to cost_analysis (a while-loop body is
+            counted once regardless of trip count), so the roofline
+            pipeline extrapolates total = f(1) + (units-1)·(f(2)-f(1)).
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k \
+        --mesh pod --depth full --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_spec, decode_state_sharding, param_sharding
+from repro.launch.steps import (
+    SHAPES,
+    init_train_state_specs,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    skip_reason,
+)
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig
+
+
+def _cfg_at_depth(cfg, depth: str):
+    """full → as assigned; 1|2 → that many scan units, unrolled."""
+    if depth == "full":
+        return cfg, False
+    units = int(depth)
+    group = cfg.moe_every if (cfg.family == "moe" and cfg.moe_every > 1) else 1
+    kw = {"num_layers": units * group}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = units
+    return dataclasses.replace(cfg, **kw), True
+
+
+def _units(cfg) -> int:
+    group = cfg.moe_every if (cfg.family == "moe" and cfg.moe_every > 1) else 1
+    return cfg.num_layers // group
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, depth: str, out_dir: str,
+             *, remat: bool = True, num_microbatches: int = 4) -> dict:
+    full_cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(full_cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "depth": depth,
+        "units_total": _units(full_cfg),
+        "model_params": full_cfg.param_count(),
+        "model_params_active": full_cfg.active_param_count(),
+    }
+    if reason:
+        result["skipped"] = reason
+        out = pathlib.Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        (out / f"{arch}__{shape_name}__{mesh_kind}__d{depth}.json").write_text(
+            json.dumps(result, indent=2))
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: SKIPPED ({reason})")
+        return result
+
+    cfg, unroll = _cfg_at_depth(full_cfg, depth)
+    model = build_model(cfg, unroll=unroll)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    from repro.models import sharding as act_sharding
+
+    fold = cfg.fold_model_axis_into_dp
+    act_sharding.set_mesh(mesh, fold_model_axis=fold)
+    bspec = batch_spec(mesh, shape.global_batch, fold_model=fold)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    repl = ns(P())
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(fp32_master=cfg.fp32_master)
+        params_s, opt_s = init_train_state_specs(model, opt_cfg)
+        p_shard = param_sharding(params_s, mesh, mode="train", fold_model=fold)
+        o_shard = {
+            "step": repl,
+            "m": p_shard, "v": p_shard,
+            **({"master": p_shard} if opt_cfg.fp32_master else {}),
+        }
+        batch_s = input_specs(cfg, shape, model)
+        b_shard = {k: ns(bspec if v.ndim >= 1 else P()) for k, v in batch_s.items()}
+        # analysis variants keep microbatches=1 so the per-layer body is
+        # fully visible to cost_analysis (inner scan bodies count once);
+        # the full-depth compile uses grad accumulation for memory.
+        n_micro = num_microbatches if depth == "full" else 1
+        step = make_train_step(model, opt_cfg, remat=remat, num_microbatches=n_micro)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, repl),
+        )
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        params_s = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+        p_shard = param_sharding(params_s, mesh, mode="serve", fold_model=fold)
+        batch_s = input_specs(cfg, shape, model)
+        b_shard = {k: ns(bspec) for k in batch_s}
+        state_s = jax.eval_shape(
+            lambda p, b: model.prefill(p, b, remat=remat)[1], params_s, batch_s
+        )
+        s_shard = decode_state_sharding(state_s, mesh)
+        step = make_prefill_step(model, remat=remat)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(ns(bspec), s_shard),
+        )
+        lowered = jitted.lower(params_s, batch_s)
+    else:  # decode
+        params_s = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+        p_shard = param_sharding(params_s, mesh, mode="serve", fold_model=fold)
+        specs = input_specs(cfg, shape, model)
+        state_s = specs["state"]
+        s_shard = decode_state_sharding(state_s, mesh)
+        tok_shard = ns(bspec)
+        step = make_serve_step(model)
+        # §Perf iter 2 (decode): donate the KV state — the serving loop
+        # never reuses the previous step's state, and without donation the
+        # in-place carry updates double-buffer the whole KV cache.
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, s_shard, tok_shard),
+            out_shardings=(tok_shard, s_shard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_s, state_s, specs["tokens"])
+
+    t_lower = time.time() - t0
+    hlo_pre = lowered.as_text()
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    result.update(
+        {
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "generated_code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "collectives": {
+                "bytes_by_kind": coll.by_kind_bytes,
+                "count_by_kind": coll.by_kind_count,
+                "wire_bytes": coll.wire_bytes,
+                "wire_bytes_bf16_adjusted": coll.wire_bytes_bf16_adjusted,
+            },
+            "n_devices": mesh.devices.size,
+        }
+    )
+
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fname = out / f"{arch}__{shape_name}__{mesh_kind}__d{depth}.json"
+    fname.write_text(json.dumps(result, indent=2))
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_kind} (depth={depth}): "
+          f"compile {t_compile:.1f}s, flops {result['flops']:.3e}, "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev, "
+          f"wire {coll.wire_bytes/2**20:.1f} MiB")
+    print("memory_analysis:", mem)
+    return result
+
+
+def sweep(archs, shapes, meshes, depths, out_dir, *, num_microbatches=8) -> None:
+    """Run many cells in one process (saves ~20 s of startup per cell);
+    each cell is fail-isolated and writes its JSON incrementally."""
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                for depth in depths:
+                    tag = f"{arch}×{shape}×{mesh_kind}×d{depth}"
+                    try:
+                        run_cell(arch, shape, mesh_kind, depth, out_dir,
+                                 num_microbatches=num_microbatches)
+                    except Exception as e:  # noqa: BLE001 — record and continue
+                        failures.append(tag)
+                        err = f"{type(e).__name__}: {e}"
+                        print(f"[dryrun] FAILED {tag}: {err[:500]}")
+                        pathlib.Path(out_dir).mkdir(parents=True, exist_ok=True)
+                        (pathlib.Path(out_dir) /
+                         f"{arch}__{shape}__{mesh_kind}__d{depth}.FAILED.json"
+                         ).write_text(json.dumps({"error": err[:2000], "cell": tag}))
+    print(f"[dryrun] sweep done; {len(failures)} failures: {failures}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, help="arch id, or comma list, or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name, comma list, or 'all'")
+    ap.add_argument("--mesh", default="pod", help="pod | multipod | pod,multipod")
+    ap.add_argument("--depth", default="full", help="full | 1 | 2 | comma list")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    depths = args.depth.split(",")
+    sweep(archs, shapes, meshes, depths, args.out, num_microbatches=args.microbatches)
+
+
+if __name__ == "__main__":
+    main()
+

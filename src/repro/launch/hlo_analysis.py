@@ -1,0 +1,104 @@
+"""Parse compiled/lowered HLO text for collective traffic (§Roofline).
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we sum the
+operand sizes of every collective op in the HLO text ourselves.
+
+Bytes-on-the-wire model (ring algorithms, n = participants):
+  all-gather         : out_bytes                 (each device receives ≈ out)
+  all-reduce         : 2 × bytes                 (reduce-scatter + all-gather)
+  reduce-scatter     : in_bytes
+  all-to-all         : bytes
+  collective-permute : bytes
+
+Caveat (methodology, documented in EXPERIMENTS.md): ops inside a while
+loop (lax.scan) appear once in the text but run `trip_count` times — the
+roofline pipeline therefore reads collectives from the UNROLLED depth-1/2
+analysis variants and extrapolates, never from the scanned full-depth
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["CollectiveStats", "collective_bytes", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_WIRE_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+# op name like: "%all-gather.3 = (bf16[...], bf16[...]) all-gather(...)"
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|\S+)\s+(?P<kind>"
+    + "|".join(_COLLECTIVE_KINDS)
+    + r")(?:-start|-done)?\("
+)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """'bf16[128,1024]' or '(f32[4], bf16[8,8])' → total bytes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue  # token[] etc.
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    elems *= int(d)
+        total += elems * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind_bytes: dict[str, int]
+    by_kind_count: dict[str, int]
+    wire_bytes: float  # with ring-model factors
+    f32_wire_bytes: float = 0.0  # share of wire moving f32 payloads
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_kind_bytes.values())
+
+    @property
+    def wire_bytes_bf16_adjusted(self) -> float:
+        """XLA:CPU emulates bf16 dots in f32, so activation collectives in
+        this container's HLO are 2× their TPU size (TPU MXU emits bf16).
+        This bound halves the f32 share — exact for activation traffic,
+        conservative for fp32 gradient reductions a trainer may keep."""
+        return self.wire_bytes - 0.5 * self.f32_wire_bytes
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_bytes: dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    by_count: dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    wire = 0.0
+    f32_wire = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        kind = m.group("kind")
+        # "-start" ops carry the payload; matching "-done" would double count
+        if hlo_text[m.end() - 7 : m.end() - 1].endswith("done"):
+            continue
+        span = m.group("shape")
+        # async -start ops have tuple shapes ((operand), out, ...) — the
+        # output component is enough for our wire model
+        nbytes = parse_shape_bytes(span)
+        if "-start" in hlo_text[m.start() : m.end()]:
+            nbytes //= 2  # tuple carries (in, out) copies of the payload
+        by_bytes[kind] += nbytes
+        by_count[kind] += 1
+        wire += nbytes * _WIRE_FACTOR[kind]
+        if "f32[" in span and "bf16[" not in span:
+            f32_wire += nbytes * _WIRE_FACTOR[kind]
+    return CollectiveStats(by_bytes, by_count, wire, f32_wire)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must not
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+
+Axes:
+  * ``model`` — tensor parallel (attention inner dim / d_ff / vocab)
+  * ``data``  — batch DP + FSDP for params in training + expert parallel
+  * ``pod``   — pure DP across pods; only gradient all-reduce crosses DCN
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the same axis names — smoke tests and examples
+    run the exact same pjit code path on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

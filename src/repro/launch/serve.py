@@ -1,0 +1,55 @@
+"""Serving driver — disaggregated KVDirect service at CPU scale.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --smoke \
+        --requests 4 --prompt-len 96 --max-new 8
+
+Runs the REAL pipeline: prefill workers fill registered KV slabs, the
+decode worker pulls with one-sided reads through the transfer engine
+(coalesced), COMPLETE frees prefill memory, continuous-batching decode.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models.registry import build_model
+from repro.serving.disagg import DisaggService
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-67b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill-workers", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    svc = DisaggService(model, params, n_prefill=args.prefill_workers, num_blocks=256)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        tokens = rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
+        req = svc.submit(tokens)
+        out = svc.generate(req, max_new=args.max_new)
+        stats = svc.engine.stats
+        print(f"[serve] {req.request_id}: prefill@{req.prefill_worker} "
+              f"tokens={out} "
+              f"(engine: {stats.txns_submitted} txns → {stats.reads_posted} reads, "
+              f"coalesce {stats.coalesce_factor:.1f}x, "
+              f"{stats.bytes_moved/2**20:.1f} MiB)")
+    print(f"[serve] {args.requests} requests in {time.time()-t0:.1f}s; "
+          f"transfer modeled {svc.engine.stats.modeled_time_s*1e3:.2f} ms total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Sharding rules: param/state pytrees → NamedSharding.
+
+Strategy (DESIGN.md §3):
+  * 'model' = tensor parallel.  Column-parallel weights (q/k/v, gate/up,
+    in_proj, embedding vocab) shard their OUT dim on 'model'; row-parallel
+    weights (o, down, out_proj) shard their IN dim — the classic
+    Megatron pairing that needs one collective per block, not two.
+  * 'data' = FSDP in training: every ≥2-D param additionally shards a
+    non-'model' dim over 'data' (ZeRO-3; optimizer state inherits the
+    sharding because its pytree mirrors params).  In serving, params
+    replicate over 'data' (weights-stationary decode — no per-step
+    all-gathers).
+  * MoE expert stacks [E, in, out] shard E over 'data' (EP) and in/out
+    over 'model' by the same column/row rule.
+  * 'pod' (multi-pod mesh) is pure DP: params NEVER shard over 'pod', so
+    no parameter collective crosses DCN; only gradient all-reduce does.
+  * Divisibility is always checked: a dim that doesn't divide stays
+    unsharded (e.g. hymba's 25 heads; its head_dim shards instead).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_sharding", "batch_spec", "decode_state_sharding", "logical_spec",
+]
+
+# leaf names (last path component up the tree) → role
+_COLUMN = {"q", "k", "v", "gate", "up", "in_proj"}
+_ROW = {"o", "down", "out_proj"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return False
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def _assign(shape, mesh, prefs):
+    """prefs: ordered (dim_index, axis_name_or_tuple).  First fit wins per
+    axis and per dim; a tuple shards one dim over several mesh axes
+    (e.g. batch over ('pod','data'))."""
+    spec: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axis in prefs:
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        if used & set(axes) or dim >= len(shape) or spec[dim] is not None:
+            continue
+        if _fits(shape[dim], mesh, axes):
+            spec[dim] = axis if isinstance(axis, str) else tuple(axes)
+            used.update(axes)
+    return P(*spec)
+
+
+def logical_spec(path_names: list[str], shape: tuple[int, ...], mesh: Mesh,
+                 *, mode: str, fold_model: bool = False) -> P:
+    """Sharding spec for one parameter leaf.
+
+    Per-layer params live under a "layers"/"enc_layers"/"dec_layers"
+    stack, so their leaves carry a LEADING layer dim ([L, in, out]) — all
+    dim indices below shift by that lead.
+
+    ``fold_model``: DP+EP deployment — no tensor parallelism; weights are
+    pure-FSDP over BOTH axes in training and replicated in serving.
+    """
+    name = path_names[-1] if path_names else ""
+    parent = path_names[-2] if len(path_names) >= 2 else ""
+    in_moe = "moe" in path_names and "shared" not in path_names
+    fsdp = ("data",) if mode == "train" else ()
+    lead = 1 if any(n.endswith("layers") for n in path_names) else 0
+
+    if fold_model:
+        # MoE expert stacks keep EP over 'data' + FSDP over 'model'
+        if in_moe and name in ("gate", "up"):
+            return _assign(shape, mesh, [(lead, "data"), (lead + 2, "model")])
+        if in_moe and name == "down":
+            return _assign(shape, mesh, [(lead, "data"), (lead + 1, "model")])
+        if mode != "train":
+            return P(*([None] * len(shape)))  # replicated weights (no TP)
+        # non-MoE weights: FSDP over 'data' only.  (Adding 'model' FSDP on
+        # the d_model dim trips an XLA SPMD verifier bug under
+        # microbatch-scan × multipod — "slice dim 1536 > 96"; these
+        # weights are tiny for fold-deployed archs, so 16-way sharding of
+        # the fp32 optimizer state suffices.)
+        if name == "table":
+            return _assign(shape, mesh, [(0, "data")])
+        if name == "w" and len(shape) == 2 + lead:
+            return _assign(shape, mesh, [(lead, "data")])
+        return P(*([None] * len(shape)))
+
+    # embedding / lm head tables [V, d]: vocab over model
+    if name == "table":
+        prefs = [(0, "model")] + [(1, a) for a in fsdp]
+        return _assign(shape, mesh, prefs)
+    if name in ("meta", "dec_pos"):
+        return _assign(shape, mesh, [(0, a) for a in fsdp])
+
+    # MoE expert stacks [L?, E, in, out]
+    if in_moe and name in ("gate", "up"):
+        return _assign(shape, mesh, [(lead, "data"), (lead + 2, "model")])
+    if in_moe and name == "down":
+        return _assign(shape, mesh, [(lead, "data"), (lead + 1, "model")])
+    if in_moe and parent == "router":
+        return P(*([None] * len(shape)))
+
+    # dense weights [L?, in, out]: the actual leaf is {"w": ..., "b": ...}
+    if name == "w" and len(shape) == 2 + lead:
+        if parent in _ROW:
+            prefs = [(lead, "model")] + [(lead + 1, a) for a in fsdp]
+        else:  # _COLUMN and anything unclassified defaults to column
+            prefs = [(lead + 1, "model")] + [(lead, a) for a in fsdp]
+        return _assign(shape, mesh, prefs)
+    if name == "b" and len(shape) == 1 + lead:
+        if parent in _COLUMN:
+            return _assign(shape, mesh, [(lead, "model")])
+        return P(*([None] * len(shape)))
+
+    # conv kernels, norms, scalars, ssm vectors: replicate
+    return P(*([None] * len(shape)))
+
+
+def param_sharding(params_shape: Any, mesh: Mesh, *, mode: str,
+                   fold_model: bool = False) -> Any:
+    """params pytree of ShapeDtypeStruct/arrays → pytree of NamedSharding."""
+
+    def leaf(path, x):
+        spec = logical_spec(_path_names(path), tuple(x.shape), mesh,
+                            mode=mode, fold_model=fold_model)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def batch_spec(mesh: Mesh, batch: int | None = None, *, fold_model: bool = False) -> P:
+    """Batch dim over the largest prefix of the DP axes that divides it
+    (long_500k has batch 1 → replicated).  With fold_model, 'model'
+    joins the DP axes."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    if fold_model and "model" in mesh.shape:
+        axes.append("model")
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch is None or (batch % n == 0 and batch >= n):
+            return P(tuple(axes))
+        axes = axes[:-1]
+    return P()
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def decode_state_sharding(state_shape: Any, mesh: Mesh) -> Any:
+    """DecodeState/EncDecState of ShapeDtypeStructs → NamedShardings.
+
+    Pages/states shard batch over (pod, data) and heads (or head_dim when
+    heads don't divide) over 'model'.
+    """
+    dp = _dp_axes(mesh)
+
+    def leaf(path, x):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = tuple(x.shape)
+        # batch shards over the DP axes JOINTLY (tuple) with per-axis
+        # prefix fallback for small batches
+        batch_prefs = lambda d: [(d, dp[:k]) for k in range(len(dp), 0, -1)]
+        if name in ("k_pages", "v_pages"):
+            # [L, b, per_seq, bs, g, hd] — per_seq over 'model' is the
+            # sequence-parallel flash-decoding layout (attention.
+            # paged_decode_with_write); 32K-ctx KV only fits sharded on
+            # BOTH the DP axes and the model axis.
+            prefs = batch_prefs(1) + [(2, "model")]
+        elif name == "block_tables":
+            prefs = batch_prefs(0) + [(1, "model")]
+        elif name in ("ring_k", "ring_v", "meta_k", "meta_v", "cross_k", "cross_v"):
+            # [L, b, slots, g, hd] — small (window/meta/enc): replicate TP
+            prefs = batch_prefs(1)
+        elif name == "ssd_state":
+            # [L, b, nh, hd, ns]
+            prefs = batch_prefs(1) + [(2, "model"), (3, "model")]
+        elif name == "conv_state":
+            # [L, b, k-1, c]
+            prefs = batch_prefs(1) + [(3, "model")]
+        elif name in ("ring_pos", "context_lens"):
+            prefs = batch_prefs(0)
+        else:
+            prefs = []
+        return NamedSharding(mesh, _assign(shape, mesh, prefs))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)

@@ -1,0 +1,160 @@
+"""Step functions + input specs for every (arch × shape) cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins — no allocation — for the shape set assigned to the LM family:
+
+  train_4k     seq 4096  × global_batch 256   → train_step
+  prefill_32k  seq 32768 × global_batch 32    → prefill_step
+  decode_32k   ctx 32768 × global_batch 128   → serve_step (1 new token)
+  long_500k    ctx 524288 × global_batch 1    → serve_step; only for
+               sub-quadratic archs (see DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = [
+    "SHAPES", "ShapeSpec", "input_specs", "make_train_step", "make_prefill_step",
+    "make_serve_step", "cell_is_runnable", "skip_reason",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """None if the cell runs; else why it is skipped (recorded per-cell)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return "full quadratic attention: 500K decode needs sub-quadratic arch"
+    return None
+
+
+def cell_is_runnable(arch: str, shape_name: str) -> bool:
+    return skip_reason(get_config(arch), SHAPES[shape_name]) is None
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStruct only — never allocates)
+# ----------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, model=None) -> dict[str, Any]:
+    sds = jax.ShapeDtypeStruct
+    b = shape.global_batch
+    model = model or build_model(cfg)
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, shape.seq_len), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, shape.seq_len), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": sds((b,), jnp.int32),
+            "state": model.decode_state_shape(b, shape.seq_len),
+        }
+    raise ValueError(shape.kind)
+
+
+# ----------------------------------------------------------------------
+# steps
+# ----------------------------------------------------------------------
+def make_train_step(model, opt_cfg: AdamWConfig, *, remat: bool = True,
+                    num_microbatches: int = 1):
+    """num_microbatches > 1 = gradient accumulation: the remat stack saves
+    per-layer inputs for the WHOLE resident batch, so at 4K×256 the
+    full-batch backward needs ~24 GiB/device of saved activations alone;
+    microbatching divides that by the accumulation factor (fp32 grad
+    accumulator, one optimizer step per global batch)."""
+
+    def loss_grads(params, mb):
+        return jax.value_and_grad(
+            lambda p: model.train_loss(p, mb, remat=remat), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = loss_grads(params, batch)
+        else:
+            def split(x):
+                mb = x.shape[0] // num_microbatches
+                return x.reshape((num_microbatches, mb) + x.shape[1:])
+
+            batch_mb = {k: split(v) for k, v in batch.items()}
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(carry, mb):
+                acc, loss_sum = carry
+                (loss, _), grads = loss_grads(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_sum + loss), None
+
+            (acc, loss_sum), _ = jax.lax.scan(
+                mb_step, (acc0, jnp.zeros((), jnp.float32)), batch_mb
+            )
+            grads = jax.tree.map(lambda a: a / num_microbatches, acc)
+            loss = loss_sum / num_microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(model, *, remat: bool = True):
+    def prefill_step(params, batch):
+        logits, state = model.prefill(params, batch, remat=remat)
+        first_token = jnp.argmax(
+            logits[:, : model.cfg.vocab_size].astype(jnp.float32), axis=-1
+        ).astype(jnp.int32)
+        return first_token, state
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    """One decode iteration: next-token (greedy) + updated KV state."""
+
+    def serve_step(params, state, tokens):
+        logits, state = model.decode_step(params, state, tokens)
+        next_token = jnp.argmax(
+            logits[:, : model.cfg.vocab_size].astype(jnp.float32), axis=-1
+        ).astype(jnp.int32)
+        return next_token, state
+
+    return serve_step
+
+
+def init_train_state_specs(model, opt_cfg: AdamWConfig):
+    """eval_shape the params + optimizer state (no allocation)."""
+    params = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    return params, opt_state

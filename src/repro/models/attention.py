@@ -1,0 +1,301 @@
+"""Attention: GQA + RoPE, full/causal/sliding-window, and paged decode.
+
+Prefill uses a dense causal attention (the flash_prefill Pallas kernel is
+the TPU hot-path; this jnp path is the oracle and the dry-run body — same
+FLOPs, so roofline terms are identical).  Decode reads the paged KV cache
+through block tables — the same blocks the KVDirect transfer engine fills.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rope", "attn_init", "gqa_attention", "paged_decode_attention",
+    "write_prefill_kv", "write_token_kv", "KVPages",
+    "paged_decode_with_write",
+]
+
+from repro.models import sharding
+from repro.models.layers import PARAM_DTYPE, dense, dense_init
+
+
+def attn_init(rng, d_model: int, num_heads: int, num_kv_heads: int, head_dim: int,
+              *, bias: bool = False):
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    return {
+        "q": dense_init(rq, d_model, num_heads * head_dim, bias=bias),
+        "k": dense_init(rk, d_model, num_kv_heads * head_dim, bias=bias),
+        "v": dense_init(rv, d_model, num_kv_heads * head_dim, bias=bias),
+        "o": dense_init(ro, num_heads * head_dim, d_model, bias=bias),
+    }
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # [..., seq, 1, half] — broadcasts over the heads axis of x
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _grouped_scores(q, k):
+    """q: [b, s, h, d]; k: [b, t, g, d] with h = g * q_per_g → [b, g, qpg, s, t]."""
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    qg = q.reshape(b, s, g, h // g, d)
+    return jnp.einsum("bsgqd,btgd->bgqst", qg, k)
+
+
+def gqa_attention(
+    q: jax.Array,           # [b, s, h, d]
+    k: jax.Array,           # [b, t, g, d]
+    v: jax.Array,           # [b, t, g, d]
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0] (decode)
+    kv_len: jax.Array | None = None,  # valid kv length per batch [b]
+    prefix_len: int = 0,             # always-visible prefix (meta tokens / enc-dec)
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    scores = _grouped_scores(q, k).astype(jnp.float32) * (d ** -0.5)
+
+    qp = jnp.asarray(q_offset).reshape(-1, 1) + jnp.arange(s)   # [b or 1, s]
+    kp = jnp.arange(t)                                          # [t]
+    valid = jnp.ones((qp.shape[0], s, t), dtype=bool)
+    if causal:
+        valid &= kp[None, None, :] <= qp[:, :, None]
+    if sliding_window:
+        in_window = kp[None, None, :] > qp[:, :, None] - sliding_window
+        if prefix_len:
+            in_window |= kp[None, None, :] < prefix_len  # meta tokens always visible
+        valid &= in_window
+    if kv_len is not None:
+        valid &= kp[None, None, :] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    valid = valid[:, None, None, :, :]  # → broadcast with [b, g, qpg, s, t]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w).astype(v.dtype)  # fully-masked rows
+    out = jnp.einsum("bgqst,btgd->bsgqd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+# ----------------------------------------------------------------------
+# Paged KV cache (decode path)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class KVPages:
+    """Paged KV for ONE layer on device: the jnp mirror of
+    serving.kv_cache.PagedKVCache's per-layer planes.
+
+    k_pages / v_pages: [batch, pages_per_seq, block_size, kv_heads, head_dim]
+
+    The page pool is PER SEQUENCE (block tables hold within-sequence page
+    ids).  This is deliberate for sharding: under pjit the batch dim of
+    pages, tables and queries all shard over 'data', so the page gather
+    is a purely local batched gather — a global pool (vLLM-style) would
+    make XLA all-gather the whole cache across data shards.  The
+    host-side serving engine still manages a global pool; its block ids
+    are translated to per-sequence slots when the device state is built.
+    """
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+    @property
+    def block_size(self) -> int:
+        return self.k_pages.shape[2]
+
+
+def write_prefill_kv(k: jax.Array, v: jax.Array, pages_per_seq: int, *, block_size: int = 32) -> KVPages:
+    """Lay out prefill KV [b, s, g, d] into per-sequence pages."""
+    b, s, g, d = k.shape
+    bs = block_size
+    if s % bs:
+        raise ValueError(f"seq {s} not a multiple of block_size {bs}")
+    spb = s // bs
+    k_pages = k.reshape(b, spb, bs, g, d)
+    v_pages = v.reshape(b, spb, bs, g, d)
+    pad = pages_per_seq - spb
+    if pad > 0:
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    return KVPages(k_pages, v_pages)
+
+
+def write_token_kv(
+    pages: KVPages,
+    k_new: jax.Array,        # [b, g, d]
+    v_new: jax.Array,
+    block_tables: jax.Array,  # [b, pages_per_seq] within-sequence page ids
+    context_lens: jax.Array,  # [b] tokens already present
+) -> KVPages:
+    """Scatter one new token's K/V into each sequence's current page."""
+    b = k_new.shape[0]
+    blk_idx = context_lens // pages.block_size
+    blk = jnp.take_along_axis(block_tables, blk_idx[:, None], axis=1)[:, 0]
+    off = context_lens % pages.block_size
+    rows = jnp.arange(b)
+    k_pages = pages.k_pages.at[rows, blk, off].set(k_new.astype(pages.k_pages.dtype))
+    v_pages = pages.v_pages.at[rows, blk, off].set(v_new.astype(pages.v_pages.dtype))
+    return KVPages(k_pages, v_pages)
+
+
+def paged_decode_attention(
+    q: jax.Array,            # [b, h, d] — one new token per sequence
+    pages: KVPages,
+    block_tables: jax.Array,  # [b, pages_per_seq]
+    context_lens: jax.Array,  # [b] tokens INCLUDING the one just written
+    *,
+    sliding_window: int = 0,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Reference paged attention (jnp).  The Pallas kernel in
+    repro.kernels.paged_attention implements the same contract."""
+    b, h, d = q.shape
+    bs = pages.block_size
+    g = pages.k_pages.shape[3]
+    mb = block_tables.shape[1]
+    # batched within-sequence gather: [b, mb, bs, g, d]
+    idx = block_tables[:, :, None, None, None]
+    k = jnp.take_along_axis(pages.k_pages, idx, axis=1)
+    v = jnp.take_along_axis(pages.v_pages, idx, axis=1)
+    k = k.reshape(b, mb * bs, g, d)
+    v = v.reshape(b, mb * bs, g, d)
+    out = gqa_attention(
+        q[:, None], k, v,
+        causal=True,
+        sliding_window=sliding_window,
+        q_offset=context_lens - 1,
+        kv_len=context_lens,
+        prefix_len=prefix_len,
+    )
+    return out[:, 0]
+
+
+def simple_attention_params_flops(cfg, seq: int, batch: int) -> float:
+    """Attention matmul FLOPs helper used by the simulator cost model."""
+    h, d = cfg.num_heads, cfg.head_dim
+    return 4.0 * batch * seq * seq * h * d  # QK^T + PV (x2 each for MAC)
+
+
+# ----------------------------------------------------------------------
+# Distributed decode: sequence-parallel "flash decoding" via shard_map
+# ----------------------------------------------------------------------
+def paged_decode_with_write(
+    q: jax.Array,            # [b, h, d]
+    k_new: jax.Array,        # [b, g, d]
+    v_new: jax.Array,
+    pages: KVPages,
+    block_tables: jax.Array,  # [b, per_seq]
+    context_lens: jax.Array,  # [b] tokens BEFORE this step's write
+) -> tuple[jax.Array, KVPages]:
+    """Write the new token's KV, then attend over the paged context.
+
+    Distributed path (mesh set, per_seq % TP == 0): the page dim shards
+    over the TP axis — 32K-context KV at deepseek-67b scale (1.6 TB) only
+    fits HBM when sharded over BOTH data and model axes.  Each shard runs
+    a local flash pass over its KV slice, then partial softmax stats
+    (m, l, acc — ~b·h·hd floats) combine with tiny psums: the
+    "flash-decoding" scheme, mapped onto shard_map.  Naive alternatives
+    all-reduce O(b·h·ctx) scores per layer (≈67 MB at this scale) or
+    all-gather pages (ruinous).
+
+    Requires the identity page layout the prefill step produces (shard i
+    owns within-seq pages [i·pps, (i+1)·pps)).  Falls back to the pure
+    jnp path otherwise (CPU engines, tests).
+    """
+    mesh = sharding.get_mesh()
+    # KV sequence-parallelism uses the raw 'model' axis even when TP for
+    # weights is folded into DP (small-dim archs): the page shards and
+    # the tiny stat psums are orthogonal to weight sharding.
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    per_seq = pages.k_pages.shape[1]
+    if mesh is None or tp == 1 or per_seq % tp:
+        new_pages = write_token_kv(pages, k_new, v_new, block_tables, context_lens)
+        out = paged_decode_attention(q, new_pages, block_tables, context_lens + 1)
+        return out, new_pages
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, h, d = q.shape
+    g = pages.k_pages.shape[3]
+    bs = pages.block_size
+    pps = per_seq // tp
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    bsp = dp if (dp and b % dpn == 0) else None
+
+    q_spec = P(bsp, None, None)
+    kv_new_spec = P(bsp, None, None)
+    page_spec = P(bsp, "model", None, None, None)
+    tbl_spec = P(bsp, "model")
+    len_spec = P(bsp)
+
+    def local(q_l, kn_l, vn_l, kp_l, vp_l, tbl_l, cl_l):
+        i = jax.lax.axis_index("model")
+        b_l = q_l.shape[0]
+        rows = jnp.arange(b_l)
+        # ---- ownership-masked write of the new token -------------------
+        blk_global = cl_l // bs
+        off = cl_l % bs
+        own = (blk_global >= i * pps) & (blk_global < (i + 1) * pps)
+        blk_local = jnp.clip(blk_global - i * pps, 0, pps - 1)
+        cur_k = kp_l[rows, blk_local, off]
+        cur_v = vp_l[rows, blk_local, off]
+        sel = own[:, None, None]
+        kp_l = kp_l.at[rows, blk_local, off].set(
+            jnp.where(sel, kn_l.astype(kp_l.dtype), cur_k))
+        vp_l = vp_l.at[rows, blk_local, off].set(
+            jnp.where(sel, vn_l.astype(vp_l.dtype), cur_v))
+
+        # ---- local flash over this shard's KV slice ---------------------
+        # §Perf iter 1: the distributed layout is canonical identity
+        # paging (prefill emits it, the write above maintains it), so the
+        # shard's KV is already contiguous — a reshape view, NOT a
+        # take_along_axis gather (which materialized a full per-layer KV
+        # copy: ~2× decode HBM traffic at 32K context).  tbl_l is kept in
+        # the signature for layout-compat with the host engine's path.
+        del tbl_l
+        k_loc = kp_l.reshape(b_l, pps * bs, g, d)
+        v_loc = vp_l.reshape(b_l, pps * bs, g, d)
+        qg = q_l.reshape(b_l, g, h // g, d)
+        scores = jnp.einsum("bgqd,btgd->bgqt", qg, k_loc).astype(jnp.float32)
+        scores = scores * (d ** -0.5)
+        kpos = i * (pps * bs) + jnp.arange(pps * bs)
+        valid = kpos[None, :] <= cl_l[:, None]  # includes the just-written token
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        m_l = scores.max(-1)                                     # [b, g, qpg]
+        p = jnp.where(valid[:, None, None, :], jnp.exp(scores - m_l[..., None]), 0.0)
+        l_l = p.sum(-1)
+        acc = jnp.einsum("bgqt,btgd->bgqd", p.astype(v_loc.dtype), v_loc).astype(jnp.float32)
+
+        # ---- combine partial softmax stats across shards ----------------
+        m_g = jax.lax.pmax(m_l, "model")
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).reshape(b_l, h, d)
+        return out.astype(q_l.dtype), kp_l, vp_l
+
+    out, k_pages, v_pages = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(q_spec, kv_new_spec, kv_new_spec, page_spec, page_spec, tbl_spec, len_spec),
+        out_specs=(q_spec, page_spec, page_spec),
+    )(q, k_new, v_new, pages.k_pages, pages.v_pages, block_tables, context_lens)
+    return out, KVPages(k_pages, v_pages)

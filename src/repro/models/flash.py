@@ -1,0 +1,238 @@
+"""Blockwise (flash) attention in pure JAX with a custom VJP.
+
+Why this exists (and why it's built this way):
+
+* 32K-token prefill / 4K train shapes cannot materialize [s, t] score
+  matrices — attention must be blockwise online-softmax.
+* The block schedule is a STATIC triangular (or banded, for sliding
+  window) list of (q_chunk, kv_chunk) pairs.  Compared with "scan q,
+  mask future kv" this executes EXACTLY the useful FLOPs — no 2× causal
+  waste — which matters because the §Roofline compute term is read off
+  the compiled HLO.
+* Backward is a custom VJP (FlashAttention-2 style recomputation from
+  saved logsumexp), so scan-over-layers + remat never stores per-pair
+  residuals.
+
+The Pallas kernel in repro.kernels.flash_prefill implements the same
+schedule for TPU; this module is its oracle (tests assert allclose) and
+the dry-run body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "pair_schedule"]
+
+NEG_INF = -1e30
+
+
+def pair_schedule(
+    s: int, t: int, q_chunk: int, k_chunk: int,
+    *, causal: bool, window: int = 0, prefix: int = 0, q_offset: int = 0,
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Static (i, j) block pairs that contain ≥1 visible (q, k) position.
+
+    q position of chunk i spans [q_offset + i·cq, q_offset + (i+1)·cq);
+    k position of chunk j spans [j·ck, (j+1)·ck).  Visibility:
+    k ≤ q (causal) ∧ (k > q − window ∨ k < prefix) (sliding window).
+    """
+    pi, pj = [], []
+    nq, nk = s // q_chunk, t // k_chunk
+    for i in range(nq):
+        q_lo = q_offset + i * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        for j in range(nk):
+            k_lo = j * k_chunk
+            k_hi = k_lo + k_chunk - 1
+            if causal and k_lo > q_hi:
+                continue  # fully in the future
+            if window:
+                fully_out = k_hi <= q_lo - window
+                covers_prefix = prefix > 0 and k_lo < prefix
+                if fully_out and not covers_prefix:
+                    continue
+            pi.append(i)
+            pj.append(j)
+    return tuple(pi), tuple(pj)
+
+
+def _block_mask(q_pos, k_pos, *, causal, window, prefix):
+    """[cq, ck] visibility for absolute positions."""
+    qp, kp = q_pos[:, None], k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        vis = kp > qp - window
+        if prefix:
+            vis |= kp < prefix
+        m &= vis
+    return m
+
+
+def _fwd_scan(q, k, v, pi, pj, cq, ck, causal, window, prefix, q_offset):
+    """q: [b, g, qpg, s, d]; k, v: [b, g, t, d] → (out, lse)."""
+    b, g, qpg, s, d = q.shape
+    t = k.shape[2]
+    nq = s // cq
+    scale = d ** -0.5
+    # carry laid out nq-major for dynamic row updates
+    m0 = jnp.full((nq, b, g, qpg, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, g, qpg, cq), jnp.float32)
+    a0 = jnp.zeros((nq, b, g, qpg, cq, d), jnp.float32)
+
+    def step(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=2)
+        sij = jnp.einsum("bgqcd,bgkd->bgqck", qi, kj).astype(jnp.float32) * scale
+        mask = _block_mask(
+            q_offset + i * cq + jnp.arange(cq), j * ck + jnp.arange(ck),
+            causal=causal, window=window, prefix=prefix,
+        )
+        sij = jnp.where(mask, sij, NEG_INF)
+
+        mi = jnp.maximum(m[i], sij.max(-1))
+        p = jnp.exp(sij - mi[..., None])
+        corr = jnp.exp(m[i] - mi)
+        li = l[i] * corr + p.sum(-1)
+        ai = acc[i] * corr[..., None] + jnp.einsum(
+            "bgqck,bgkd->bgqcd", p.astype(v.dtype), vj
+        ).astype(jnp.float32)
+        return (m.at[i].set(mi), l.at[i].set(li), acc.at[i].set(ai)), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.asarray(pi, jnp.int32), jnp.asarray(pj, jnp.int32))
+    )
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    # back to [b, g, qpg, s, d]
+    out = jnp.moveaxis(out, 0, 3).reshape(b, g, qpg, s, d)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, g, qpg, s)
+    return out.astype(q.dtype), lse
+
+
+def _bwd_scan(q, k, v, out, lse, dout, pi, pj, cq, ck, causal, window, prefix, q_offset):
+    b, g, qpg, s, d = q.shape
+    t = k.shape[2]
+    scale = d ** -0.5
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # [b,g,qpg,s]
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def step(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=2)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * cq, cq, axis=3)
+        do_i = jax.lax.dynamic_slice_in_dim(dout, i * cq, cq, axis=3).astype(jnp.float32)
+        dl_i = jax.lax.dynamic_slice_in_dim(delta, i * cq, cq, axis=3)
+
+        sij = jnp.einsum("bgqcd,bgkd->bgqck", qi, kj).astype(jnp.float32) * scale
+        mask = _block_mask(
+            q_offset + i * cq + jnp.arange(cq), j * ck + jnp.arange(ck),
+            causal=causal, window=window, prefix=prefix,
+        )
+        sij = jnp.where(mask, sij, NEG_INF)
+        p = jnp.exp(sij - lse_i[..., None])                       # [b,g,qpg,cq,ck]
+        dvj = jnp.einsum("bgqck,bgqcd->bgkd", p, do_i)
+        dp = jnp.einsum("bgqcd,bgkd->bgqck", do_i, vj.astype(jnp.float32))
+        ds = p * (dp - dl_i[..., None]) * scale
+        dqi = jnp.einsum("bgqck,bgkd->bgqcd", ds, kj.astype(jnp.float32))
+        dkj = jnp.einsum("bgqck,bgqcd->bgkd", ds, qi.astype(jnp.float32))
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * cq, cq, 3) + dqi, i * cq, 3
+        )
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * ck, ck, 2) + dkj, j * ck, 2
+        )
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * ck, ck, 2) + dvj, j * ck, 2
+        )
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(
+        step, (dq0, dk0, dv0), (jnp.asarray(pi, jnp.int32), jnp.asarray(pj, jnp.int32))
+    )
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, cq, ck, causal, window, prefix, q_offset):
+    pi, pj = pair_schedule(q.shape[3], k.shape[2], cq, ck, causal=causal,
+                           window=window, prefix=prefix, q_offset=q_offset)
+    out, _ = _fwd_scan(q, k, v, pi, pj, cq, ck, causal, window, prefix, q_offset)
+    return out
+
+
+def _flash_fwd(q, k, v, cq, ck, causal, window, prefix, q_offset):
+    pi, pj = pair_schedule(q.shape[3], k.shape[2], cq, ck, causal=causal,
+                           window=window, prefix=prefix, q_offset=q_offset)
+    out, lse = _fwd_scan(q, k, v, pi, pj, cq, ck, causal, window, prefix, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cq, ck, causal, window, prefix, q_offset, res, dout):
+    q, k, v, out, lse = res
+    pi, pj = pair_schedule(q.shape[3], k.shape[2], cq, ck, causal=causal,
+                           window=window, prefix=prefix, q_offset=q_offset)
+    return _bwd_scan(q, k, v, out, lse, dout, pi, pj, cq, ck, causal, window, prefix, q_offset)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,   # [b, s, h, d]
+    k: jax.Array,   # [b, t, g, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    prefix_len: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """GQA blockwise attention; drop-in for gqa_attention on chunk-aligned
+    full-sequence inputs (prefill / train)."""
+    from repro.models import sharding
+
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    cq, ck = min(q_chunk, s), min(k_chunk, t)
+    if s % cq or t % ck:
+        raise ValueError(f"seq ({s},{t}) not chunk-aligned ({cq},{ck})")
+    # GQA/TP sharding policy (§Perf iter, MQA cell — EXPERIMENTS.md):
+    #   1. kv groups divide TP        → shard g on both sides (clean).
+    #   2. within-group q-heads divide → shard qpg; K/V stay REPLICATED
+    #      (for MQA/GQA they are tiny: g·d ≤ 1K lanes).  This replaced a
+    #      physical h//g-fold K/V repeat that re-materialized and
+    #      resharded per layer (granite-34b: 48× for MQA).
+    #   3. only total heads divide    → repeat K/V (deepseek: 64h/8g on
+    #      TP-16; the Pallas kernel does this mapping in-register on TPU).
+    tp = sharding.tp_size()
+    qpg = h // g
+    if tp > 1 and g % tp and qpg % tp and h % tp == 0:
+        k = jnp.repeat(k, h // g, axis=2)
+        v = jnp.repeat(v, h // g, axis=2)
+        g, qpg = h, 1
+    qg = jnp.moveaxis(q.reshape(b, s, g, qpg, d), 1, 3)     # [b,g,qpg,s,d]
+    kg = jnp.moveaxis(k, 1, 2)                              # [b,g,t,d]
+    vg = jnp.moveaxis(v, 1, 2)
+    qg = sharding.shard_heads2(qg, 1, 2)   # prefer g, else qpg
+    kg = sharding.shard_heads(kg, 1)
+    vg = sharding.shard_heads(vg, 1)
+    out = _flash(qg, kg, vg, cq, ck, causal, sliding_window, prefix_len, q_offset)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)

@@ -1,0 +1,78 @@
+"""Shared NN building blocks — plain functional JAX, param pytrees are
+nested dicts of jnp arrays (bf16 storage, fp32 where numerics demand).
+
+Everything here must be safe under ``jax.eval_shape`` (the dry-run never
+materializes the 400B-parameter inits) and under ``jax.lax.scan`` over
+stacked layer params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+
+__all__ = [
+    "PARAM_DTYPE", "dense_init", "dense", "rmsnorm_init", "rmsnorm",
+    "layernorm_init", "layernorm", "embed_init", "swiglu_init", "swiglu",
+]
+
+
+def dense_init(rng, in_dim: int, out_dim: int, *, bias: bool = False, scale: float | None = None):
+    scale = (in_dim ** -0.5) if scale is None else scale
+    p = {"w": (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32) * scale).astype(PARAM_DTYPE)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=PARAM_DTYPE)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), dtype=PARAM_DTYPE)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), dtype=PARAM_DTYPE),
+            "bias": jnp.zeros((dim,), dtype=PARAM_DTYPE)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(rng, vocab: int, dim: int):
+    return {"table": (jax.random.normal(rng, (vocab, dim), dtype=jnp.float32) * 0.02).astype(PARAM_DTYPE)}
+
+
+def swiglu_init(rng, d_model: int, d_ff: int):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "gate": dense_init(r1, d_model, d_ff),
+        "up": dense_init(r2, d_model, d_ff),
+        "down": dense_init(r3, d_ff, d_model),
+    }
+
+
+def swiglu(p, x):
+    from repro.models import sharding
+
+    h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    if h.ndim == 3:
+        h = sharding.shard_ff(h)  # keep d_ff TP-sharded between the matmuls
+    return dense(p["down"], h)

@@ -1,0 +1,196 @@
+"""Mixture-of-Experts FFN — capacity-factor dispatch via scatter/gather.
+
+GShard's classic one-hot dispatch EINSUM costs tokens·E·C·d MACs — for
+llama4-maverick (E=128) that is ~27× the routed expert compute itself,
+which would poison the §Roofline compute term.  Here dispatch/combine
+are a scatter-add and a batched gather instead: O(tokens·k·d) data
+movement and effectively zero FLOPs, matching what a production ragged
+kernel does.  Capacity semantics (per-group buffers, token dropping) are
+identical to GShard.
+
+Sharding: tokens' group dim shards over 'data'; expert buffers
+[E, ...] shard over 'data' too, so the scatter/gather lower to
+all-to-alls on the data axis — the canonical EP pattern.
+
+Experts are PADDED to a multiple of 16 (`cfg.padded_experts`) so the
+expert dim shards evenly; padded experts get -inf router logits and are
+never selected (asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.layers import PARAM_DTYPE, dense_init, swiglu, swiglu_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(rng, cfg):
+    """Router + stacked expert weights (+ optional shared expert)."""
+    e_pad = cfg.padded_experts
+    r_router, r_gate, r_up, r_down, r_shared = jax.random.split(rng, 5)
+    scale = cfg.d_model ** -0.5
+
+    def stack(r, a, b):
+        return (jax.random.normal(r, (e_pad, a, b), dtype=jnp.float32) * scale).astype(PARAM_DTYPE)
+
+    p = {
+        "router": dense_init(r_router, cfg.d_model, e_pad, scale=0.02),
+        "gate": stack(r_gate, cfg.d_model, cfg.d_ff),
+        "up": stack(r_up, cfg.d_model, cfg.d_ff),
+        "down": stack(r_down, cfg.d_ff, cfg.d_model),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = swiglu_init(r_shared, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _capacity(tokens_per_group: int, k: int, e: int, cf: float) -> int:
+    return max(1, -(-int(tokens_per_group * k * cf) // e))
+
+
+def _ffn_local(xe, gate, up, down):
+    """Per-expert SwiGLU over buffers.  xe: [E, n, d]."""
+    h = jax.nn.silu(jnp.einsum("end,edf->enf", xe, gate)) * jnp.einsum(
+        "end,edf->enf", xe, up
+    )
+    return jnp.einsum("enf,efd->end", h, down)
+
+
+def _expert_ffn(buf, p, g, gs, e_pad, cap, d):
+    """Token-sharded buffers → expert compute → token-sharded results.
+
+    §Perf (EXPERIMENTS.md, MoE cell): with bare sharding constraints the
+    SPMD partitioner lowered the token↔expert resharding of the dispatch
+    buffers into f32 collective-permutes plus multi-GiB gradient
+    all-reduces.  This shard_map version pins the exchange to exactly one
+    bf16 all_to_all each way (gradients are the mirrored all_to_alls) and
+    a small fp32 psum for the TP-sharded expert FFN.
+    """
+    mesh = sharding.get_mesh()
+    dsize = mesh.shape.get("data", 1) if mesh is not None else 1
+    dp_total = sharding.dp_size() if mesh is not None else 1
+    if mesh is None or g % max(dp_total, 1) or e_pad % dsize or dsize == 1:
+        # local / undivisible fallback: plain reshape round-trip
+        xe = buf.reshape(g, e_pad, cap, d).transpose(1, 0, 2, 3).reshape(e_pad, g * cap, d)
+        ye = _ffn_local(xe, p["gate"], p["up"], p["down"])
+        return ye.reshape(e_pad, g, cap, d).transpose(1, 0, 2, 3).reshape(g, e_pad * cap, d)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = sharding.tp_size()
+    folded = sharding.tp_folded()
+    ff = p["gate"].shape[-1]
+    # TP-shard the expert FFN only when the shard is MXU-sized: for tiny
+    # experts (granite-moe: 512/16 = 32 lanes) the per-layer fp32 psum of
+    # the whole expert buffer costs far more wire than the FLOPs saved
+    # (measured: §Perf MoE cell, EXPERIMENTS.md).
+    ff_sharded = tp > 1 and ff % tp == 0 and ff // tp >= 128
+    ff_spec = "model" if ff_sharded else None
+    # DP+EP deployment (fold_model_axis_into_dp): expert weights are
+    # FSDP-sharded over 'model'; each shard_map cell gathers them (they
+    # are tiny) and computes its own token slice — no psum at all.
+    fsdp_w = folded and ff % mesh.shape.get("model", 1) == 0
+    w_ff_spec = "model" if fsdp_w else ff_spec
+    e_loc = e_pad // dsize
+    dp = sharding.dp_axes()  # buffers' token dim shards over pod × data
+    # (× model when folded); experts shard over 'data' only — the expert
+    # exchange never crosses the DCN ('pod' stays pure DP)
+
+    def local(b, gate, up, down):
+        if fsdp_w:  # gather the FSDP weight shards (≤ a few hundred MB)
+            gate = jax.lax.all_gather(gate, "model", axis=2, tiled=True)
+            up = jax.lax.all_gather(up, "model", axis=2, tiled=True)
+            down = jax.lax.all_gather(down, "model", axis=1, tiled=True)
+        # b: [g/(P·D·M?), E*C, d] → a2a over data → rows × this shard's E
+        y = jax.lax.all_to_all(b, "data", split_axis=1, concat_axis=0, tiled=True)
+        rows = y.shape[0]
+        y = y.reshape(rows, e_loc, cap, d).transpose(1, 0, 2, 3).reshape(e_loc, rows * cap, d)
+        out = _ffn_local(y, gate, up, down)
+        if ff_sharded:  # down-proj contracted a TP shard of ff: combine
+            out = jax.lax.psum(out.astype(jnp.float32), "model").astype(b.dtype)
+        out = out.reshape(e_loc, rows, cap, d).transpose(1, 0, 2, 3)
+        out = out.reshape(rows, e_loc * cap, d)
+        return jax.lax.all_to_all(out, "data", split_axis=0, concat_axis=1, tiled=True)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),
+            P("data", None, w_ff_spec),
+            P("data", None, w_ff_spec),
+            P("data", w_ff_spec, None),
+        ),
+        out_specs=P(dp, None, None),
+    )(buf, p["gate"], p["up"], p["down"])
+
+
+def moe_apply(p, x, cfg, *, group_size: int = 512, capacity_factor: float | None = None):
+    """x: [b, s, d] → (out [b, s, d], aux load-balance loss)."""
+    b, s, d = x.shape
+    e_pad, e, k = cfg.padded_experts, cfg.num_experts, cfg.experts_per_token
+    cf = cfg.capacity_factor if capacity_factor is None else capacity_factor
+    n = b * s
+    # group size: prefer ``group_size`` but keep the group COUNT divisible
+    # by the full DP extent (the EP shard_map requires it; multipod DP+EP
+    # folds 512 ways while a microbatch may only carry 256 groups of 512)
+    dp = 1
+    if sharding.get_mesh() is not None:
+        dp = max(sharding.dp_size(), 1)
+    gs = 0
+    for cand in (group_size, 512, 256, 128, 64, 32):
+        if cand <= n and n % cand == 0 and (n // cand) % dp == 0:
+            gs = cand
+            break
+    if not gs:
+        gs = n if n % dp else n // dp  # degenerate small inputs
+    g = n // gs
+    xg = sharding.shard_batch_seq(x.reshape(g, gs, d))
+
+    logits = xg.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)  # [g, gs, e_pad]
+    pad_mask = jnp.arange(e_pad) < e
+    logits = jnp.where(pad_mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    top_p, top_idx = jax.lax.top_k(probs, k)                      # [g, gs, k]
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = _capacity(gs, k, e, cf)
+    # position of each (token, k) within its expert's buffer, per group
+    onehot = jax.nn.one_hot(top_idx, e_pad, dtype=jnp.int32)      # [g, gs, k, e_pad]
+    pos = jnp.cumsum(onehot.reshape(g, gs * k, e_pad), axis=1).reshape(g, gs, k, e_pad) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                          # [g, gs, k]
+    keep = pos < cap
+    slot = top_idx * cap + jnp.where(keep, pos, 0)                # flat [0, e_pad*cap)
+
+    # ---- dispatch: scatter-add tokens into expert buffers --------------
+    # vmapped over the group dim so the SPMD partitioner sees a BATCHED
+    # scatter (global row indices made it gather the whole buffer).
+    contrib = jnp.where(keep[..., None], xg[:, :, None, :], 0).astype(x.dtype)
+
+    def _scatter_row(slots_r, contrib_r):
+        return jnp.zeros((e_pad * cap, d), x.dtype).at[slots_r.reshape(-1)].add(
+            contrib_r.reshape(-1, d))
+
+    buf = jax.vmap(_scatter_row)(slot, contrib)                    # [g, E*C, d]
+
+    ye = _expert_ffn(buf, p, g, gs, e_pad, cap, d)                 # [g, E*C, d]
+
+    # ---- combine: gather back + weighted sum over k --------------------
+    gathered = jnp.take_along_axis(ye, slot.reshape(g, gs * k, 1), axis=1)
+    gathered = gathered.reshape(g, gs, k, d).astype(jnp.float32)
+    w = (top_p * keep).astype(jnp.float32)
+    out = jnp.einsum("gsk,gskd->gsd", w, gathered).reshape(b, s, d).astype(x.dtype)
+
+    if cfg.moe_shared_expert:
+        out = out + swiglu(p["shared"], x)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(onehot.sum(2).astype(jnp.float32), axis=1)  # routed fraction per expert
+    ce = jnp.mean(probs, axis=1)
+    aux = (e / max(k, 1)) * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return out, aux

@@ -1,0 +1,14 @@
+"""Model construction: config → model instance (DecoderLM or EncDecLM)."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import DecoderLM
+from repro.models.whisper import EncDecLM
+
+__all__ = ["build_model"]
+
+
+def build_model(cfg: ModelConfig, *, unroll: bool = False):
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, unroll=unroll)
+    return DecoderLM(cfg, unroll=unroll)

@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) block — chunked prefill + O(1) decode.
+
+Follows the SSD "minimal discrete" formulation of arXiv:2405.21060:
+within-chunk attention-like einsums + across-chunk state recurrence
+(associative over chunks, here a lax.scan).  The block returns its FINAL
+STATE from prefill — that state (plus the depthwise-conv tail) is exactly
+what KVDirect transfers to the decode worker for SSM architectures (a
+single contiguous slot per layer; see serving.kv_cache.SlotCache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.layers import PARAM_DTYPE, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["ssm_init", "ssm_prefill", "ssm_step", "ssm_state_shapes"]
+
+
+def ssm_init(rng, cfg):
+    d, di, ns, nh = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ns  # x, B, C share the depthwise conv (ngroups=1)
+    r_in, r_out, r_conv, r_dt, r_a = jax.random.split(rng, 5)
+    return {
+        # in_proj emits [z | xBC | dt]
+        "in_proj": dense_init(r_in, d, 2 * di + 2 * ns + nh),
+        "conv_w": (jax.random.normal(r_conv, (cfg.ssm_conv, conv_dim), dtype=jnp.float32) * 0.1
+                   ).astype(PARAM_DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), dtype=PARAM_DTYPE),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jax.random.uniform(r_dt, (nh,), dtype=jnp.float32, minval=-4.0, maxval=-1.0),
+        "d_skip": jnp.ones((nh,), dtype=jnp.float32),
+        "out_norm": rmsnorm_init(di),
+        "out_proj": dense_init(r_out, di, d),
+    }
+
+
+def ssm_state_shapes(cfg, batch: int):
+    """(ssd_state, conv_state) shapes for serving allocation/transfer."""
+    di, ns = cfg.ssm_inner, cfg.ssm_state
+    return (
+        (batch, cfg.ssm_heads, cfg.ssm_head_dim, ns),
+        (batch, cfg.ssm_conv - 1, di + 2 * ns),
+    )
+
+
+def _split(p, x, cfg):
+    di, ns, nh = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns :]
+    return z, xbc, dt
+
+
+def _segsum(a):
+    """a: [..., T] log-decays → [..., T, T] lower-triangular cumulative sums."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, B, C, chunk: int):
+    """Core SSD over one sequence batch.
+
+    xh: [b, s, nh, hd]; dt: [b, s, nh] (post-softplus); a: [nh] (negative);
+    B, C: [b, s, ns] (ngroups=1, shared across heads).
+    Returns y [b, s, nh, hd] and final state [b, nh, hd, ns].
+    """
+    b, s, nh, hd = xh.shape
+    ns = B.shape[-1]
+    l = min(chunk, s)
+    if s % l:
+        raise ValueError(f"seq {s} not a multiple of chunk {l}")
+    nc = s // l
+
+    # chunked views
+    xc = xh.reshape(b, nc, l, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, l, nh)
+    Bc = B.reshape(b, nc, l, ns).astype(jnp.float32)
+    Cc = C.reshape(b, nc, l, ns).astype(jnp.float32)
+
+    da = dtc * a  # [b, nc, l, nh] log-decay per step
+    da_h = jnp.moveaxis(da, -1, 2)  # [b, nc, nh, l]
+    da_cum = jnp.cumsum(da_h, axis=-1)
+
+    xbar = xc * dtc[..., None]  # dt-scaled inputs
+
+    # (1) within-chunk (diagonal blocks): attention-like with decay kernel
+    L = jnp.exp(_segsum(da_h))  # [b, nc, nh, l, l]
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", Cc, Bc, L, xbar)
+
+    # (2) per-chunk summary states: decay to end-of-chunk
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)  # [b, nc, nh, l]
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_states, xbar)
+
+    # (3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(da_cum[..., -1])  # [b, nc, nh]
+
+    def step(carry, inp):
+        st_k, dec_k = inp  # [b, nh, hd, ns], [b, nh]
+        new = carry * dec_k[..., None, None] + st_k
+        return new, carry  # emit the state BEFORE this chunk
+
+    init = jnp.zeros((b, nh, hd, ns), dtype=jnp.float32)
+    final, prior_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prior_states = jnp.moveaxis(prior_states, 0, 1)  # [b, nc, nh, hd, ns]
+
+    # (4) off-diagonal contribution: read prior state with in-chunk decay
+    state_decay = jnp.exp(da_cum)  # decay from chunk start to position i
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", Cc, state_decay, prior_states)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    return y, final
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, kernel k.  xbc: [b, s, c]; conv_w: [k, c].
+    Returns output [b, s, c] and the new conv tail [b, k-1, c]."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), dtype=xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [b, s+k-1, c]
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype) for i in range(k)
+    ) + conv_b.astype(xbc.dtype)
+    new_tail = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(out), new_tail
+
+
+def ssm_prefill(p, x, cfg, *, chunk: int = 128, conv_state=None, ssd_state=None):
+    """x: [b, s, d] → (y [b, s, d], (ssd_state, conv_tail))."""
+    di, ns, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split(p, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, B, C = xbc[..., :di], xbc[..., di : di + ns], xbc[..., di + ns :]
+    dt = sharding.shard_heads(jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]), 2)
+    a = -jnp.exp(p["a_log"])  # [nh], negative
+    xh = sharding.shard_heads(xs.reshape(*xs.shape[:-1], nh, hd), 2)
+    B = sharding.shard_batch_seq(B)
+    C = sharding.shard_batch_seq(C)
+    y, final = _ssd_chunked(xh, dt, a, B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+    if ssd_state is not None:  # continue from transferred state
+        # fold initial state in: y += C · decay · state0 ; final updated
+        da_cum = jnp.cumsum(jnp.moveaxis(dt * a, -1, 1), axis=-1)  # [b, nh, s]
+        decay = jnp.exp(da_cum)
+        y = y + jnp.einsum("bsn,bhs,bhpn->bshp", C.astype(jnp.float32), decay,
+                           ssd_state.astype(jnp.float32))
+        final = final + ssd_state.astype(jnp.float32) * jnp.exp(da_cum[..., -1])[..., None, None]
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(*x.shape[:-1], di).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), (final, conv_tail)
+
+
+def ssm_step(p, x, cfg, state):
+    """One-token decode.  x: [b, d]; state = (ssd_state [b,nh,hd,ns],
+    conv_state [b,k-1,c]) → (y [b, d], new state)."""
+    di, ns, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ssd_state, conv_state = state
+    z, xbc, dt_raw = _split(p, x[:, None, :], cfg)
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+
+    # conv step: shift buffer, apply kernel at last position
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc[:, None, :]], axis=1)  # [b,k,c]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xbc.dtype)) + p["conv_b"].astype(xbc.dtype)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xs, B, C = xbc[..., :di], xbc[..., di : di + ns], xbc[..., di + ns :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [b, nh]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # [b, nh]
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+    # state' = decay * state + dt * x ⊗ B ; y = state' · C
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, B.astype(jnp.float32), dt)
+    new_state = ssd_state.astype(jnp.float32) * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), (new_state, new_conv)

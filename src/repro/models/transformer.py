@@ -1,0 +1,588 @@
+"""Unified decoder-only LM covering dense / MoE / VLM / SSM / hybrid.
+
+Design rules:
+  * layers are UNIFORM per model so params stack as [L, ...] leaves and
+    every full-depth pass is a single ``jax.lax.scan`` (compile time and
+    HLO size stay sane at 95 layers, remat applies per-layer).  For
+    interleaved-MoE models (Llama-4: dense/MoE alternating) the scan unit
+    is a GROUP of ``cfg.moe_every`` layers so the stack stays uniform;
+  * prefill RETURNS the per-layer KV pages / SSM states — the exact
+    tensors KVDirect transfers to the decode worker;
+  * decode consumes a paged KV cache (block tables) or a ring buffer
+    (sliding-window) or SSM state slots — matching what the transfer
+    engine fills;
+  * everything runs under ``jax.eval_shape`` for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.attention import (
+    KVPages,
+    attn_init,
+    gqa_attention,
+    paged_decode_with_write,
+    rope,
+)
+from repro.models.config import ModelConfig
+from repro.models.flash import flash_attention
+from repro.models.layers import (
+    PARAM_DTYPE,
+    dense,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_init, ssm_prefill, ssm_state_shapes, ssm_step
+
+__all__ = ["DecoderLM", "DecodeState"]
+
+
+# ----------------------------------------------------------------------
+# Decode-time state (a pytree; every leaf is a jnp array)
+# ----------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    context_lens: jax.Array                 # [b] tokens present (incl. prompt)
+    # paged attention KV (dense/moe/vlm); pages are per-sequence (see
+    # attention.KVPages for the sharding rationale)
+    k_pages: jax.Array | None = None        # [L, b, per_seq, bs, g, hd]
+    v_pages: jax.Array | None = None
+    block_tables: jax.Array | None = None   # [b, per_seq] within-seq ids
+    # ring buffer KV (sliding-window archs)
+    ring_k: jax.Array | None = None         # [L, b, cap, g, hd]
+    ring_v: jax.Array | None = None
+    ring_pos: jax.Array | None = None       # [b, cap] absolute positions (-1 empty)
+    # meta-token KV (hymba; always visible)
+    meta_k: jax.Array | None = None         # [L, b, m, g, hd]
+    meta_v: jax.Array | None = None
+    # SSM state
+    ssd_state: jax.Array | None = None      # [L, b, nh, hd, ns]
+    conv_state: jax.Array | None = None     # [L, b, k-1, c]
+
+
+def _sharded_nll(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Cross-entropy that never gathers the vocab axis.
+
+    ``take_along_axis`` on a vocab-sharded [b, s, V] logits tensor makes
+    the SPMD partitioner all-gather the full fp32 logits (hundreds of GB
+    at V≈64K, b·s≈1M).  The one-hot-select formulation keeps every op
+    elementwise/reduction on the sharded axis.
+    """
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    valid = vocab_iota < vocab_size
+    masked = jnp.where(valid, logits, -jnp.inf)
+    lse = jax.nn.logsumexp(masked, axis=-1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    return lse - label_logit
+
+
+def _barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _gelu_mlp(p, x):
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+def _gelu_mlp_init(rng, d_model, d_ff):
+    import jax.random as jr
+
+    r1, r2 = jr.split(rng)
+    from repro.models.layers import dense_init
+
+    return {"up": dense_init(r1, d_model, d_ff), "down": dense_init(r2, d_ff, d_model)}
+
+
+class DecoderLM:
+    BLOCK_SIZE = 32
+
+    def __init__(self, cfg: ModelConfig, *, unroll: bool = False):
+        if cfg.is_encoder_decoder:
+            raise ValueError("use EncDecLM for encoder-decoder configs")
+        self.cfg = cfg
+        # scan unit: a group of `moe_every` layers for interleaved MoE
+        self.group = cfg.moe_every if (cfg.family == "moe" and cfg.moe_every > 1) else 1
+        if cfg.num_layers % self.group:
+            raise ValueError("num_layers must divide by moe_every")
+        self.n_steps = cfg.num_layers // self.group
+        # unroll=True replaces scan-over-layers with a python loop — used
+        # by the dry-run's depth-1/2 analysis variants, where FLOPs/bytes
+        # must be visible to cost_analysis (which counts a while-loop body
+        # exactly once regardless of trip count; see EXPERIMENTS.md).
+        self.unroll = unroll
+
+    def _scan_layers(self, body, carry, xs):
+        if not self.unroll:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for i in range(self.n_steps):
+            step_x = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, step_x)
+            ys.append(y)
+        if not ys or not jax.tree.leaves(ys[0]):
+            return carry, ys[0] if ys else {}
+        return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+    def _sub_kind(self, i: int) -> str:
+        """FFN kind of sub-layer i within a group: MoE is the LAST of each
+        group (Llama-4 places MoE on every `moe_every`-th layer)."""
+        if self.cfg.family != "moe":
+            return {"dense": "mlp", "vlm": "mlp", "hybrid": "mlp", "ssm": "none"}[self.cfg.family]
+        return "moe" if i == self.group - 1 else "mlp"
+
+    # ------------------------------------------------------------- init
+    def init_params(self, rng) -> dict:
+        cfg = self.cfg
+        r_embed, r_layers, r_head, r_meta = jax.random.split(rng, 4)
+        step_rngs = jax.random.split(r_layers, self.n_steps)
+        params = {
+            "embed": embed_init(r_embed, cfg.padded_vocab, cfg.d_model),
+            "layers": jax.vmap(self._init_group)(step_rngs),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(r_head, cfg.padded_vocab, cfg.d_model)
+        if cfg.num_meta_tokens:
+            params["meta"] = (
+                jax.random.normal(r_meta, (cfg.num_meta_tokens, cfg.d_model), dtype=jnp.float32)
+                * 0.02
+            ).astype(PARAM_DTYPE)
+        return params
+
+    def _init_group(self, rng) -> dict:
+        if self.group == 1:
+            return self._init_sub(rng, self._sub_kind(0))
+        rngs = jax.random.split(rng, self.group)
+        return {f"sub{i}": self._init_sub(rngs[i], self._sub_kind(i)) for i in range(self.group)}
+
+    def _init_sub(self, rng, ffn_kind: str) -> dict:
+        cfg = self.cfg
+        r_attn, r_mlp, r_ssm = jax.random.split(rng, 3)
+        p: dict[str, Any] = {}
+        if cfg.has_attention:
+            p["attn_norm"] = rmsnorm_init(cfg.d_model)
+            p["attn"] = attn_init(r_attn, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.has_ssm:
+            p["ssm_norm"] = rmsnorm_init(cfg.d_model)
+            p["ssm"] = ssm_init(r_ssm, cfg)
+        if cfg.family == "hybrid":
+            p["attn_out_norm"] = rmsnorm_init(cfg.d_model)
+            p["ssm_out_norm"] = rmsnorm_init(cfg.d_model)
+        if ffn_kind == "moe":
+            p["mlp_norm"] = rmsnorm_init(cfg.d_model)
+            p["moe"] = moe_init(r_mlp, cfg)
+        elif ffn_kind == "mlp":
+            ff = cfg.d_ff_dense if (cfg.family == "moe" and cfg.d_ff_dense) else cfg.d_ff
+            p["mlp_norm"] = rmsnorm_init(cfg.d_model)
+            p["mlp"] = (
+                swiglu_init(r_mlp, cfg.d_model, ff)
+                if cfg.mlp_type == "swiglu"
+                else _gelu_mlp_init(r_mlp, cfg.d_model, ff)
+            )
+        return p
+
+    def _apply_mlp(self, p, x):
+        return swiglu(p["mlp"], x) if self.cfg.mlp_type == "swiglu" else _gelu_mlp(p["mlp"], x)
+
+    # ------------------------------------------------- full-seq forward
+    def _sub_full(self, p, x, positions, ffn_kind: str, return_kv: bool):
+        cfg = self.cfg
+        outs, caches = [], {}
+        if cfg.has_attention:
+            h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+            b, s, _ = h.shape
+            q = dense(p["attn"]["q"], h).reshape(b, s, cfg.num_heads, cfg.head_dim)
+            k = dense(p["attn"]["k"], h).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            v = dense(p["attn"]["v"], h).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            q = sharding.shard_heads(rope(q, positions, cfg.rope_theta), 2)
+            k = sharding.shard_heads(rope(k, positions, cfg.rope_theta), 2)
+            v = sharding.shard_heads(v, 2)
+            # largest power-of-two chunk dividing s (meta tokens make
+            # hymba's seq 4096+128=4224, which is 128-aligned only)
+            chunk = next((c for c in (1024, 512, 256, 128, 64) if s % c == 0), 0)
+            if s >= 2048 and chunk:
+                # blockwise flash: exact-FLOPs triangular schedule,
+                # O(chunk²) memory — required for 4K train / 32K prefill
+                a = flash_attention(
+                    q, k, v, causal=True,
+                    sliding_window=cfg.sliding_window,
+                    prefix_len=cfg.num_meta_tokens,
+                    q_chunk=chunk, k_chunk=chunk,
+                )
+            else:
+                a = gqa_attention(
+                    q, k, v, causal=True,
+                    sliding_window=cfg.sliding_window,
+                    prefix_len=cfg.num_meta_tokens,
+                )
+            a = dense(p["attn"]["o"], a.reshape(b, s, -1))
+            outs.append(("attn", a))
+            if return_kv:
+                caches["k"], caches["v"] = k, v
+        if cfg.has_ssm:
+            h = rmsnorm(p["ssm_norm"], x, cfg.norm_eps)
+            y, (ssd_final, conv_tail) = ssm_prefill(p["ssm"], h, cfg)
+            outs.append(("ssm", y))
+            if return_kv:
+                caches["ssd"], caches["conv"] = ssd_final, conv_tail
+        if cfg.family == "hybrid":
+            mixed = 0.5 * (
+                rmsnorm(p["attn_out_norm"], dict(outs)["attn"], cfg.norm_eps)
+                + rmsnorm(p["ssm_out_norm"], dict(outs)["ssm"], cfg.norm_eps)
+            )
+        else:
+            mixed = outs[0][1]
+        # optimization_barrier pins the residual stream to bf16 at the
+        # TP-psum boundaries: without it XLA hoists the rmsnorm fp32
+        # upcast INTO the all-reduce, doubling every per-layer collective
+        # (§Perf, prefill cell — measured 2× wire).
+        x = _barrier(sharding.shard_batch_seq(x + mixed))
+
+        aux = jnp.zeros((), jnp.float32)
+        if ffn_kind == "moe":
+            hn = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+            y, aux = moe_apply(p["moe"], hn, cfg)
+            x = x + y
+        elif ffn_kind == "mlp":
+            x = x + self._apply_mlp(p, rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+        return _barrier(sharding.shard_batch_seq(x)), caches, aux
+
+    def _group_full(self, x, p, positions, return_kv: bool):
+        if self.group == 1:
+            return self._sub_full(p, x, positions, self._sub_kind(0), return_kv)
+        caches_list, aux = [], jnp.zeros((), jnp.float32)
+        for i in range(self.group):
+            x, c, a = self._sub_full(p[f"sub{i}"], x, positions, self._sub_kind(i), return_kv)
+            caches_list.append(c)
+            aux = aux + a
+        stacked = {}
+        if return_kv and caches_list[0]:
+            stacked = {
+                key: jnp.stack([c[key] for c in caches_list]) for key in caches_list[0]
+            }
+        return x, stacked, aux
+
+    def _embed_inputs(self, params, tokens, vision_embeds=None):
+        """Token embeddings (+ VLM early fusion, + meta-token prefix).
+        Returns (x, offset) where offset is where text starts."""
+        cfg = self.cfg
+        x = params["embed"]["table"][tokens]
+        offset = 0
+        if cfg.family == "vlm" and vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+            offset += vision_embeds.shape[1]
+        if cfg.num_meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta"][None], (x.shape[0], cfg.num_meta_tokens, cfg.d_model)
+            ).astype(x.dtype)
+            x = jnp.concatenate([meta, x], axis=1)
+            offset += cfg.num_meta_tokens
+        return sharding.shard_batch_seq(x), offset
+
+    def _backbone(self, params, x, positions, *, return_kv: bool, remat: bool):
+        def body(carry, p):
+            h, aux = carry
+            h, caches, a = self._group_full(h, p, positions, return_kv)
+            return (h, aux + a), caches
+
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), caches = self._scan_layers(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        if self.group > 1 and caches:
+            # [steps, group, ...] → [L, ...]
+            caches = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), caches)
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        return x, caches, aux / self.cfg.num_layers
+
+    def _logits(self, params, x):
+        table = params.get("lm_head", params["embed"])["table"]
+        return x @ table.T.astype(x.dtype)
+
+    # ------------------------------------------------------------ train
+    def train_loss(self, params, batch, *, remat: bool = True):
+        """batch: tokens [b, s] (+ optional vision_embeds).  Next-token CE."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x, offset = self._embed_inputs(params, tokens, batch.get("vision_embeds"))
+        positions = jnp.arange(x.shape[1])[None, :].repeat(x.shape[0], 0)
+        x, _, aux = self._backbone(params, x, positions, return_kv=False, remat=remat)
+        x = x[:, offset:, :]  # loss only on text positions
+        logits = self._logits(params, x[:, :-1, :]).astype(jnp.float32)
+        labels = tokens[:, 1:]
+        nll = _sharded_nll(logits, labels, cfg.vocab_size)
+        loss = nll.mean()
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux
+        return loss, {"nll": nll.mean(), "aux": aux}
+
+    # ---------------------------------------------------------- prefill
+    def prefill(self, params, batch, *, max_blocks_margin: int = 16, remat: bool = True):
+        """Run the prompt, return (last-token logits, DecodeState).
+
+        The KV pages / SSM states inside the returned DecodeState are the
+        transferable artifacts: on a disaggregated cluster they live on
+        the prefill worker and the decode worker pulls them (KVDirect).
+        """
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x, _ = self._embed_inputs(params, tokens, batch.get("vision_embeds"))
+        s_total = x.shape[1]
+        positions = jnp.arange(s_total)[None, :].repeat(b, 0)
+        x, caches, _ = self._backbone(params, x, positions, return_kv=True, remat=remat)
+        logits = self._logits(params, x[:, -1, :])
+        state = self._caches_to_state(caches, b, s_total, max_blocks_margin)
+        return logits, state
+
+    def _caches_to_state(self, caches, b, s_total, margin):
+        cfg = self.cfg
+        bs = self.BLOCK_SIZE
+        state = DecodeState(context_lens=jnp.full((b,), s_total, jnp.int32))
+        if cfg.has_attention:
+            k, v = caches["k"], caches["v"]  # [L, b, s, g, hd]
+            L = k.shape[0]
+            m = cfg.num_meta_tokens
+            if cfg.sliding_window:
+                cap = cfg.sliding_window + bs
+                if m:
+                    state.meta_k, state.meta_v = k[:, :, :m], v[:, :, :m]
+                    k, v = k[:, :, m:], v[:, :, m:]
+                s = k.shape[2]
+                take = min(cap, s)
+                tail_pos = jnp.arange(s - take, s) + m  # absolute positions
+                slots = tail_pos % cap
+                ring_k = jnp.zeros((L, b, cap) + k.shape[3:], k.dtype)
+                ring_v = jnp.zeros_like(ring_k)
+                ring_pos = jnp.full((b, cap), -1, jnp.int32)
+                ring_k = ring_k.at[:, :, slots].set(k[:, :, s - take :])
+                ring_v = ring_v.at[:, :, slots].set(v[:, :, s - take :])
+                ring_pos = ring_pos.at[:, slots].set(tail_pos[None, :])
+                state.ring_k, state.ring_v, state.ring_pos = ring_k, ring_v, ring_pos
+            else:
+                L, _, s, g, hd = k.shape
+                spb = -(-s // bs)
+                pad_s = spb * bs - s
+                if pad_s:
+                    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0)))
+                per_seq = spb + margin
+                k_pages = k.reshape(L, b, spb, bs, g, hd)
+                v_pages = v.reshape(L, b, spb, bs, g, hd)
+                padb = ((0, 0), (0, 0), (0, margin), (0, 0), (0, 0), (0, 0))
+                state.k_pages = jnp.pad(k_pages, padb)
+                state.v_pages = jnp.pad(v_pages, padb)
+                state.block_tables = jnp.broadcast_to(
+                    jnp.arange(per_seq, dtype=jnp.int32)[None, :], (b, per_seq)
+                )
+        if cfg.has_ssm:
+            state.ssd_state = caches["ssd"]    # [L, b, nh, hd, ns]
+            state.conv_state = caches["conv"]  # [L, b, k-1, c]
+        return state
+
+    # -------------------------------------------------- dry-run plumbing
+    def decode_state_shape(self, batch: int, context_len: int, *, margin: int = 16,
+                           dtype=jnp.bfloat16) -> DecodeState:
+        """ShapeDtypeStruct pytree for a decode state holding
+        ``context_len`` tokens — what input_specs() hands the dry-run."""
+        cfg = self.cfg
+        bs = self.BLOCK_SIZE
+        sds = jax.ShapeDtypeStruct
+        L = cfg.num_layers
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        state = DecodeState(context_lens=sds((batch,), jnp.int32))
+        if cfg.has_attention:
+            if cfg.sliding_window:
+                cap = cfg.sliding_window + bs
+                state.ring_k = sds((L, batch, cap, g, hd), dtype)
+                state.ring_v = sds((L, batch, cap, g, hd), dtype)
+                state.ring_pos = sds((batch, cap), jnp.int32)
+                if cfg.num_meta_tokens:
+                    state.meta_k = sds((L, batch, cfg.num_meta_tokens, g, hd), dtype)
+                    state.meta_v = sds((L, batch, cfg.num_meta_tokens, g, hd), dtype)
+            else:
+                per_seq = -(-context_len // bs) + margin
+                state.k_pages = sds((L, batch, per_seq, bs, g, hd), dtype)
+                state.v_pages = sds((L, batch, per_seq, bs, g, hd), dtype)
+                state.block_tables = sds((batch, per_seq), jnp.int32)
+        if cfg.has_ssm:
+            ssd_shape, conv_shape = ssm_state_shapes(cfg, batch)
+            state.ssd_state = sds((L,) + ssd_shape, jnp.float32)
+            state.conv_state = sds((L,) + conv_shape, dtype)
+        return state
+
+    # ------------------------------------------------------ decode step
+    def decode_step(self, params, state: DecodeState, tokens):
+        """One token for every sequence.  tokens: [b] → (logits [b, V],
+        new DecodeState)."""
+        cfg = self.cfg
+        x = params["embed"]["table"][tokens]  # [b, d]
+        pos = state.context_lens  # absolute position of the new token
+
+        caches = self._per_layer_caches(state)
+        # §Perf iter 1: KV pages travel as scan CARRY with per-layer
+        # dynamic slice/update, not as xs→ys streams — the xs→ys form made
+        # XLA copy the full per-layer page buffers every step (a second
+        # full pass over the KV cache per decode token).  Carry buffers
+        # alias across scan iterations, so the update is in place.
+        paged = "k_pages" in caches
+        kp_all = caches.pop("k_pages", None)
+        vp_all = caches.pop("v_pages", None)
+        if self.group > 1 and caches:
+            caches = jax.tree.map(
+                lambda a: a.reshape((self.n_steps, self.group) + a.shape[1:]), caches
+            )
+
+        def sub(h, p, cache, kind, kp_all, vp_all, layer_idx):
+            if paged:
+                cache = dict(cache)
+                cache["k_pages"] = jax.lax.dynamic_index_in_dim(kp_all, layer_idx, 0, False)
+                cache["v_pages"] = jax.lax.dynamic_index_in_dim(vp_all, layer_idx, 0, False)
+            h, nc = self._sub_decode(p, h, pos, state, cache, kind)
+            if paged:
+                kp_all = jax.lax.dynamic_update_index_in_dim(
+                    kp_all, nc.pop("k_pages"), layer_idx, 0)
+                vp_all = jax.lax.dynamic_update_index_in_dim(
+                    vp_all, nc.pop("v_pages"), layer_idx, 0)
+            return h, nc, kp_all, vp_all
+
+        def body(carry, inp):
+            h, kp_all, vp_all = carry
+            p, cache, step_idx = inp
+            if self.group == 1:
+                h, nc, kp_all, vp_all = sub(
+                    h, p, cache, self._sub_kind(0), kp_all, vp_all, step_idx)
+                return (h, kp_all, vp_all), nc
+            new_caches = []
+            for i in range(self.group):
+                sub_cache = jax.tree.map(lambda a: a[i], cache)
+                h, nc, kp_all, vp_all = sub(
+                    h, p[f"sub{i}"], sub_cache, self._sub_kind(i),
+                    kp_all, vp_all, step_idx * self.group + i)
+                new_caches.append(nc)
+            stacked = (
+                {k: jnp.stack([c[k] for c in new_caches]) for k in new_caches[0]}
+                if new_caches[0] else {}
+            )
+            return (h, kp_all, vp_all), stacked
+
+        step_ids = jnp.arange(self.n_steps, dtype=jnp.int32)
+        (x, kp_all, vp_all), new_caches = self._scan_layers(
+            body, (x, kp_all, vp_all), (params["layers"], caches, step_ids))
+        if self.group > 1 and new_caches:
+            new_caches = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), new_caches
+            )
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        new_state = self._store_caches(state, new_caches or {})
+        if paged:
+            new_state.k_pages, new_state.v_pages = kp_all, vp_all
+        new_state.context_lens = state.context_lens + 1
+        return logits, new_state
+
+    def _per_layer_caches(self, state: DecodeState) -> dict:
+        c = {}
+        if state.k_pages is not None:
+            c["k_pages"], c["v_pages"] = state.k_pages, state.v_pages
+        if state.ring_k is not None:
+            c["ring_k"], c["ring_v"] = state.ring_k, state.ring_v
+        if state.meta_k is not None:
+            c["meta_k"], c["meta_v"] = state.meta_k, state.meta_v
+        if state.ssd_state is not None:
+            c["ssd"], c["conv"] = state.ssd_state, state.conv_state
+        return c
+
+    def _store_caches(self, state: DecodeState, new_caches: dict) -> DecodeState:
+        s = dataclasses.replace(state)
+        if "k_pages" in new_caches:
+            s.k_pages, s.v_pages = new_caches["k_pages"], new_caches["v_pages"]
+        if "ring_k" in new_caches:
+            s.ring_k, s.ring_v = new_caches["ring_k"], new_caches["ring_v"]
+            # every layer writes the same slot/pos; keep one copy
+            s.ring_pos = new_caches["ring_pos"][0]
+        if "ssd" in new_caches:
+            s.ssd_state, s.conv_state = new_caches["ssd"], new_caches["conv"]
+        return s
+
+    def _sub_decode(self, p, h, pos, state: DecodeState, cache: dict, ffn_kind: str):
+        cfg = self.cfg
+        b, d = h.shape
+        new_cache = {}
+        outs = []
+        if cfg.has_attention:
+            hn = rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+            q = dense(p["attn"]["q"], hn).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+            k = dense(p["attn"]["k"], hn).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+            v = dense(p["attn"]["v"], hn).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+            q = rope(q, pos[:, None], cfg.rope_theta)[:, 0]
+            k = rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+            v = v[:, 0]
+            if cfg.sliding_window:
+                a, nc = self._ring_attention(q, k, v, pos, state, cache)
+                new_cache.update(nc)
+            else:
+                pages = KVPages(cache["k_pages"], cache["v_pages"])
+                a, pages = paged_decode_with_write(
+                    q, k, v, pages, state.block_tables, state.context_lens,
+                )
+                new_cache["k_pages"], new_cache["v_pages"] = pages.k_pages, pages.v_pages
+            a = dense(p["attn"]["o"], a.reshape(b, -1))
+            outs.append(("attn", a))
+        if cfg.has_ssm:
+            hn = rmsnorm(p["ssm_norm"], h, cfg.norm_eps)
+            y, (ssd, conv) = ssm_step(p["ssm"], hn, cfg, (cache["ssd"], cache["conv"]))
+            new_cache["ssd"], new_cache["conv"] = ssd, conv
+            outs.append(("ssm", y))
+        if cfg.family == "hybrid":
+            mixed = 0.5 * (
+                rmsnorm(p["attn_out_norm"], dict(outs)["attn"], cfg.norm_eps)
+                + rmsnorm(p["ssm_out_norm"], dict(outs)["ssm"], cfg.norm_eps)
+            )
+        else:
+            mixed = outs[0][1]
+        h = h + mixed
+        if ffn_kind == "moe":
+            y, _ = moe_apply(p["moe"], rmsnorm(p["mlp_norm"], h, cfg.norm_eps)[:, None, :], cfg)
+            h = h + y[:, 0]
+        elif ffn_kind == "mlp":
+            h = h + self._apply_mlp(p, rmsnorm(p["mlp_norm"], h, cfg.norm_eps))
+        return h, new_cache
+
+    def _ring_attention(self, q, k_new, v_new, pos, state: DecodeState, cache: dict):
+        """Sliding-window decode via ring buffer + always-visible meta KV."""
+        cfg = self.cfg
+        b = q.shape[0]
+        cap = cache["ring_k"].shape[1]
+        slot = pos % cap
+        ring_k = cache["ring_k"].at[jnp.arange(b), slot].set(k_new.astype(cache["ring_k"].dtype))
+        ring_v = cache["ring_v"].at[jnp.arange(b), slot].set(v_new.astype(cache["ring_v"].dtype))
+        ring_pos = state.ring_pos.at[jnp.arange(b), slot].set(pos)
+
+        ks, vs, ps = ring_k, ring_v, ring_pos
+        meta_len = 0
+        if "meta_k" in cache:
+            meta_len = cache["meta_k"].shape[1]
+            ks = jnp.concatenate([cache["meta_k"], ks], axis=1)
+            vs = jnp.concatenate([cache["meta_v"], vs], axis=1)
+        g = ks.shape[2]
+        hq = q.reshape(b, g, cfg.num_heads // g, cfg.head_dim)
+        scores = jnp.einsum("bgqd,bsgd->bgqs", hq, ks).astype(jnp.float32) * (cfg.head_dim ** -0.5)
+        slot_valid = (ps >= 0) & (ps <= pos[:, None]) & (ps > pos[:, None] - cfg.sliding_window)
+        if meta_len:
+            meta_valid = jnp.ones((b, meta_len), bool)
+            slot_valid = jnp.concatenate([meta_valid, slot_valid], axis=1)
+        scores = jnp.where(slot_valid[:, None, None, :], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(vs.dtype)
+        out = jnp.einsum("bgqs,bsgd->bgqd", w, vs).reshape(b, cfg.num_heads, cfg.head_dim)
+        return out, {"ring_k": ring_k, "ring_v": ring_v, "ring_pos": ring_pos}

@@ -1,0 +1,288 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings [b, enc_seq, d].  The encoder is a
+non-causal transformer over frames; the decoder is a causal transformer
+with cross-attention.
+
+Disaggregation story (DESIGN.md §4): prefill = encode + decoder prompt
+pass; the transferable state is the decoder self-KV (paged) PLUS the
+cross-attention KV of the encoder output — both are tensors the KVDirect
+engine moves via descriptors.
+
+Whisper proper uses LayerNorm+GELU+biases and learned positions; we keep
+those (sinusoidal positions on the encoder side).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.attention import KVPages, gqa_attention, paged_decode_with_write
+from repro.models.config import ModelConfig
+from repro.models.flash import flash_attention
+from repro.models.layers import PARAM_DTYPE, dense, dense_init, embed_init, layernorm, layernorm_init
+from repro.models.transformer import DecodeState
+
+__all__ = ["EncDecLM", "EncDecState"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EncDecState:
+    context_lens: jax.Array            # [b] decoder tokens present
+    k_pages: jax.Array                 # [L, b, per_seq, bs, g, hd] decoder self-KV
+    v_pages: jax.Array
+    block_tables: jax.Array            # [b, per_seq] within-seq page ids
+    cross_k: jax.Array                 # [L, b, enc_seq, g, hd]
+    cross_v: jax.Array
+
+
+def _sinusoid(seq: int, dim: int):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angles = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+class EncDecLM:
+    BLOCK_SIZE = 32
+
+    def __init__(self, cfg: ModelConfig, *, unroll: bool = False):
+        if not cfg.is_encoder_decoder:
+            raise ValueError("EncDecLM requires an encoder-decoder config")
+        self.cfg = cfg
+        self.unroll = unroll  # see DecoderLM: dry-run depth-1/2 variants
+
+    def _scan_layers(self, body, carry, xs, length: int):
+        if not self.unroll:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for i in range(length):
+            step_x = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, step_x)
+            ys.append(y)
+        if not ys or not jax.tree.leaves(ys[0]):
+            return carry, ys[0] if ys else {}
+        return carry, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+    # ------------------------------------------------------------- init
+    def _attn_init(self, rng):
+        cfg = self.cfg
+        from repro.models.attention import attn_init
+
+        return attn_init(rng, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                         cfg.head_dim, bias=True)
+
+    def _mlp_init(self, rng):
+        cfg = self.cfg
+        r1, r2 = jax.random.split(rng)
+        return {
+            "up": dense_init(r1, cfg.d_model, cfg.d_ff, bias=True),
+            "down": dense_init(r2, cfg.d_ff, cfg.d_model, bias=True),
+        }
+
+    def _enc_layer_init(self, rng):
+        r1, r2 = jax.random.split(rng)
+        return {
+            "attn_norm": layernorm_init(self.cfg.d_model),
+            "attn": self._attn_init(r1),
+            "mlp_norm": layernorm_init(self.cfg.d_model),
+            "mlp": self._mlp_init(r2),
+        }
+
+    def _dec_layer_init(self, rng):
+        r1, r2, r3 = jax.random.split(rng, 3)
+        return {
+            "self_norm": layernorm_init(self.cfg.d_model),
+            "self_attn": self._attn_init(r1),
+            "cross_norm": layernorm_init(self.cfg.d_model),
+            "cross_attn": self._attn_init(r2),
+            "mlp_norm": layernorm_init(self.cfg.d_model),
+            "mlp": self._mlp_init(r3),
+        }
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        r_e, r_d, r_emb, r_pos = jax.random.split(rng, 4)
+        return {
+            "enc_layers": jax.vmap(self._enc_layer_init)(
+                jax.random.split(r_e, cfg.encoder_layers)
+            ),
+            "dec_layers": jax.vmap(self._dec_layer_init)(
+                jax.random.split(r_d, cfg.num_layers)
+            ),
+            "embed": embed_init(r_emb, cfg.padded_vocab, cfg.d_model),
+            "dec_pos": (jax.random.normal(r_pos, (cfg.max_positions, cfg.d_model), jnp.float32)
+                        * 0.02).astype(PARAM_DTYPE),
+            "enc_final_norm": layernorm_init(cfg.d_model),
+            "dec_final_norm": layernorm_init(cfg.d_model),
+        }
+
+    # ------------------------------------------------------------ pieces
+    def _mlp(self, p, x):
+        return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+    def _proj_qkv(self, p, xq, xkv):
+        cfg = self.cfg
+        b, s = xq.shape[:2]
+        t = xkv.shape[1]
+        q = dense(p["q"], xq).reshape(b, s, cfg.num_heads, cfg.head_dim)
+        k = dense(p["k"], xkv).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        v = dense(p["v"], xkv).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        return q, k, v
+
+    def encode(self, params, frames):
+        """frames: [b, enc_seq, d] precomputed embeddings (stub frontend)."""
+        cfg = self.cfg
+        x = frames.astype(PARAM_DTYPE) + _sinusoid(frames.shape[1], cfg.d_model).astype(PARAM_DTYPE)
+        x = sharding.shard_batch_seq(x)
+
+        def body(h, p):
+            hn = layernorm(p["attn_norm"], h, cfg.norm_eps)
+            q, k, v = self._proj_qkv(p["attn"], hn, hn)
+            a = gqa_attention(q, k, v, causal=False)
+            h = h + dense(p["attn"]["o"], a.reshape(h.shape[0], h.shape[1], -1))
+            h = h + self._mlp(p["mlp"], layernorm(p["mlp_norm"], h, cfg.norm_eps))
+            return sharding.shard_batch_seq(h), None
+
+        x, _ = self._scan_layers(body, x, params["enc_layers"], cfg.encoder_layers)
+        return layernorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+    def _decoder(self, params, tokens, enc_out, *, return_kv: bool, remat: bool = True):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"]["table"][tokens] + params["dec_pos"][:s][None]
+        x = sharding.shard_batch_seq(x)
+
+        def body(h, p):
+            hn = layernorm(p["self_norm"], h, cfg.norm_eps)
+            q, k, v = self._proj_qkv(p["self_attn"], hn, hn)
+            if s >= 2048 and s % 1024 == 0:
+                a = flash_attention(q, k, v, causal=True)
+            else:
+                a = gqa_attention(q, k, v, causal=True)
+            h = h + dense(p["self_attn"]["o"], a.reshape(b, s, -1))
+            hn = layernorm(p["cross_norm"], h, cfg.norm_eps)
+            cq, ck, cv = self._proj_qkv(p["cross_attn"], hn, enc_out)
+            ca = gqa_attention(cq, ck, cv, causal=False)
+            h = h + dense(p["cross_attn"]["o"], ca.reshape(b, s, -1))
+            h = h + self._mlp(p["mlp"], layernorm(p["mlp_norm"], h, cfg.norm_eps))
+            caches = {"k": k, "v": v, "ck": ck, "cv": cv} if return_kv else {}
+            return sharding.shard_batch_seq(h), caches
+
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, caches = self._scan_layers(body, x, params["dec_layers"], cfg.num_layers)
+        x = layernorm(params["dec_final_norm"], x, cfg.norm_eps)
+        return x, caches
+
+    def _logits(self, params, x):
+        return x @ params["embed"]["table"].T.astype(x.dtype)
+
+    # ------------------------------------------------------------- train
+    def train_loss(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out, return_kv=False, remat=remat)
+        logits = self._logits(params, x[:, :-1]).astype(jnp.float32)
+        labels = batch["tokens"][:, 1:]
+        from repro.models.transformer import _sharded_nll
+
+        nll = _sharded_nll(logits, labels, cfg.vocab_size)
+        return nll.mean(), {"nll": nll.mean()}
+
+    # ----------------------------------------------------------- prefill
+    def prefill(self, params, batch, *, max_blocks_margin: int = 16, remat: bool = True):
+        cfg = self.cfg
+        bs = self.BLOCK_SIZE
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x, caches = self._decoder(params, tokens, enc_out, return_kv=True, remat=remat)
+        logits = self._logits(params, x[:, -1])
+
+        k, v = caches["k"], caches["v"]  # [L, b, s, g, hd]
+        L, _, _, g, hd = k.shape
+        spb = -(-s // bs)
+        pad = spb * bs - s
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        per_seq = spb + max_blocks_margin
+        padb = ((0, 0), (0, 0), (0, max_blocks_margin), (0, 0), (0, 0), (0, 0))
+        state = EncDecState(
+            context_lens=jnp.full((b,), s, jnp.int32),
+            k_pages=jnp.pad(k.reshape(L, b, spb, bs, g, hd), padb),
+            v_pages=jnp.pad(v.reshape(L, b, spb, bs, g, hd), padb),
+            block_tables=jnp.broadcast_to(
+                jnp.arange(per_seq, dtype=jnp.int32)[None, :], (b, per_seq)
+            ),
+            cross_k=caches["ck"],
+            cross_v=caches["cv"],
+        )
+        return logits, state
+
+    def decode_state_shape(self, batch: int, context_len: int, *, margin: int = 16,
+                           dtype=jnp.bfloat16) -> EncDecState:
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        L, g, hd, bs = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, self.BLOCK_SIZE
+        per_seq = -(-context_len // bs) + margin
+        return EncDecState(
+            context_lens=sds((batch,), jnp.int32),
+            k_pages=sds((L, batch, per_seq, bs, g, hd), dtype),
+            v_pages=sds((L, batch, per_seq, bs, g, hd), dtype),
+            block_tables=sds((batch, per_seq), jnp.int32),
+            cross_k=sds((L, batch, cfg.encoder_seq, g, hd), dtype),
+            cross_v=sds((L, batch, cfg.encoder_seq, g, hd), dtype),
+        )
+
+    # -------------------------------------------------------- decode step
+    def decode_step(self, params, state: EncDecState, tokens):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        pos = state.context_lens
+        x = params["embed"]["table"][tokens] + params["dec_pos"][pos]
+
+        # KV pages as scan carry (in-place per-layer update) — see
+        # DecoderLM.decode_step §Perf iter 1.
+        def body(carry, inp):
+            h, kp_all, vp_all = carry
+            p, cache, idx = inp
+            hn = layernorm(p["self_norm"], h, cfg.norm_eps)
+            q, k, v = self._proj_qkv(p["self_attn"], hn[:, None, :], hn[:, None, :])
+            pages = KVPages(
+                jax.lax.dynamic_index_in_dim(kp_all, idx, 0, False),
+                jax.lax.dynamic_index_in_dim(vp_all, idx, 0, False),
+            )
+            a, pages = paged_decode_with_write(
+                q[:, 0], k[:, 0], v[:, 0], pages, state.block_tables, pos,
+            )
+            kp_all = jax.lax.dynamic_update_index_in_dim(kp_all, pages.k_pages, idx, 0)
+            vp_all = jax.lax.dynamic_update_index_in_dim(vp_all, pages.v_pages, idx, 0)
+            h = h + dense(p["self_attn"]["o"], a.reshape(b, -1))
+            hn = layernorm(p["cross_norm"], h, cfg.norm_eps)
+            cq = dense(p["cross_attn"]["q"], hn).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+            ca = gqa_attention(cq, cache["cross_k"], cache["cross_v"], causal=False)
+            h = h + dense(p["cross_attn"]["o"], ca.reshape(b, -1))
+            h = h + self._mlp(p["mlp"], layernorm(p["mlp_norm"], h, cfg.norm_eps))
+            return (h, kp_all, vp_all), {}
+
+        caches = {"cross_k": state.cross_k, "cross_v": state.cross_v}
+        idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        (x, kp_all, vp_all), _ = self._scan_layers(
+            body, (x, state.k_pages, state.v_pages),
+            (params["dec_layers"], caches, idxs), cfg.num_layers)
+        x = layernorm(params["dec_final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        new_state = dataclasses.replace(
+            state,
+            k_pages=kp_all,
+            v_pages=vp_all,
+            context_lens=state.context_lens + 1,
+        )
+        return logits, new_state

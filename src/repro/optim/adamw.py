@@ -1,0 +1,89 @@
+"""AdamW with optional bf16 moments — minimal, pjit-friendly.
+
+The optimizer state is a pytree with the SAME structure (and therefore
+the same sharding) as the parameters, so FSDP sharding of params
+automatically shards the moments (ZeRO-style).  ``fp32_master`` keeps an
+fp32 copy of bf16 params; the 400B-class configs turn it off so the
+train state fits a single v5e pod (see configs/llama4_maverick...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    fp32_master: bool = True
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr_peak * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict[str, Any]:
+    mom_dtype = jnp.float32 if cfg.fp32_master else jnp.bfloat16
+    zeros_like = lambda p: jnp.zeros(p.shape, mom_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+    }
+    if cfg.fp32_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+
+    base = state["master"] if cfg.fp32_master else params
+
+    def upd(p, m, v):
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return p.astype(jnp.float32) - lr * u
+
+    new_base = jax.tree.map(upd, base, new_m, new_v)
+    mom_dtype = jnp.float32 if cfg.fp32_master else jnp.bfloat16
+    new_state = {
+        "step": step,
+        "m": jax.tree.map(lambda m: m.astype(mom_dtype), new_m),
+        "v": jax.tree.map(lambda v: v.astype(mom_dtype), new_v),
+    }
+    if cfg.fp32_master:
+        new_state["master"] = new_base
+    new_params = jax.tree.map(lambda p, b: b.astype(p.dtype), params, new_base)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

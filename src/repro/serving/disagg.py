@@ -1,0 +1,139 @@
+"""End-to-end disaggregated serving — the paper's full pipeline on real
+substrate: cluster scheduler + prefill/decode workers + KVDirect engine.
+
+Flow per request (pull-mode, §4.3):
+  submit → least-loaded prefill worker → model prefill (real JAX) → KV
+  blocks land in the prefill worker's registered slab → decode worker
+  allocates + pulls via one-sided reads → COMPLETE frees the prefill
+  copy → continuous-batching decode.
+
+Fault tolerance: a prefill worker failure invalidates its connection
+epoch; in-flight requests whose KV lived there are re-queued and
+re-prefilled on a surviving worker (tested in tests/test_disagg.py).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.cluster import ClusterScheduler, MembershipEvent
+from repro.core.connection import ChipInfo, ConnectionManager, WorkerInfo
+from repro.core.transfer_engine import TransferEngine
+from repro.serving.blocks import OutOfBlocks
+from repro.serving.engine import DecodeWorker, PrefillWorker
+from repro.serving.request import Request, RequestState
+
+__all__ = ["DisaggService"]
+
+
+def _winfo(wid: str, role: str) -> WorkerInfo:
+    return WorkerInfo(wid, role, f"host-{wid}", (ChipInfo(0, f"ici://{wid}/0"),))
+
+
+class DisaggService:
+    def __init__(self, model, params, *, n_prefill: int = 1, num_blocks: int = 256):
+        self.model = model
+        self.params = params
+        self.scheduler = ClusterScheduler()
+        self.engine = TransferEngine(coalescing="sorted")
+        self._ids = itertools.count()
+
+        self.decode = DecodeWorker(_winfo("d0", "decode"), model, params,
+                                   num_blocks=num_blocks, engine=self.engine)
+        self.conn_mgr = ConnectionManager(self.decode.info)
+        self.prefills: dict[str, PrefillWorker] = {}
+        self.pending: dict[str, tuple[Request, np.ndarray]] = {}  # awaiting retry
+        self.first_tokens: dict[str, int] = {}
+
+        # COMPLETE() → prefill worker frees its blocks
+        self.engine.on_complete(self._on_complete)
+        # membership → connections
+        self.scheduler.subscribe(self._on_membership)
+        # failure → re-queue requests whose KV died with the worker
+        self.conn_mgr.on_invalidate(self._on_invalidate)
+
+        self.scheduler.add_worker(self.decode.info)
+        for i in range(n_prefill):
+            self.add_prefill_worker(num_blocks=num_blocks)
+
+    # ------------------------------------------------------- membership
+    def add_prefill_worker(self, *, num_blocks: int = 256) -> str:
+        wid = f"p{len(self.prefills)}"
+        w = PrefillWorker(_winfo(wid, "prefill"), self.model, self.params,
+                          num_blocks=num_blocks)
+        w.cache.base_address = w.cache.base_address  # registered below
+        self.prefills[wid] = w
+        self.engine.register_memory(w.cache.memory_region())
+        self.scheduler.add_worker(w.info)
+        return wid
+
+    def fail_prefill_worker(self, wid: str) -> None:
+        """Simulate a crash: scheduler reaps it; engine deregisters its MR;
+        epochs invalidate; in-flight requests re-queue."""
+        self.engine.deregister_memory(wid)
+        self.scheduler.remove_worker(wid, failed=True)
+        self.prefills.pop(wid, None)
+
+    def _on_membership(self, ev: MembershipEvent) -> None:
+        if ev.worker.role != "prefill":
+            return
+        if ev.kind == "added":
+            self.conn_mgr.connect(ev.worker, self.prefills[ev.worker.worker_id].registry)
+        else:
+            self.conn_mgr.disconnect(ev.worker.worker_id, failed=ev.kind == "failed")
+
+    def _on_complete(self, txn) -> None:
+        w = self.prefills.get(txn.src_worker)
+        req = next((r for r, _ in self.pending.values() if r.request_id == txn.request_id), None)
+        if w is not None and req is not None:
+            w.release(req)
+
+    def _on_invalidate(self, dead_worker: str, epoch: int) -> None:
+        for rid, (req, tokens) in list(self.pending.items()):
+            if req.prefill_worker == dead_worker and req.state in (
+                RequestState.PREFILLING, RequestState.KV_QUEUED, RequestState.KV_TRANSFER,
+            ):
+                req.retries += 1
+                req.prefill_blocks = []
+                req.to(RequestState.FAILED)
+                req.to(RequestState.QUEUED_PREFILL)
+                self._run_prefill(req, tokens)
+
+    # ------------------------------------------------------------ serve
+    def _pick_prefill(self) -> PrefillWorker:
+        if not self.prefills:
+            raise RuntimeError("no prefill workers alive")
+        return min(self.prefills.values(), key=lambda w: w.pool.stats.in_use)
+
+    def _run_prefill(self, req: Request, tokens: np.ndarray) -> None:
+        w = self._pick_prefill()
+        req.prefill_worker = w.info.worker_id
+        self.first_tokens[req.request_id] = w.prefill(req, tokens)
+        req.to(RequestState.KV_QUEUED)
+
+    def submit(self, tokens: np.ndarray) -> Request:
+        """Prefill immediately (pull-mode: no decode-side reservation)."""
+        req = Request(f"r{next(self._ids)}", len(tokens), 0)
+        self.pending[req.request_id] = (req, tokens)
+        self._run_prefill(req, tokens)
+        return req
+
+    def admit_to_decode(self, req: Request) -> bool:
+        """Pull the KV and make the request resident; False if the decode
+        pool is full (request stays KV_QUEUED; prefill KV stays alive)."""
+        conn = self.conn_mgr.connection(req.prefill_worker)
+        try:
+            self.decode.admit(req, conn, self.first_tokens[req.request_id])
+        except OutOfBlocks:
+            return False
+        return True
+
+    def generate(self, req: Request, max_new: int = 8) -> list[int]:
+        if req.request_id in self.pending and req.state == RequestState.KV_QUEUED:
+            if not self.admit_to_decode(req):
+                raise OutOfBlocks("decode pool full")
+        out = self.decode.decode_round(max_new)[req.request_id]
+        self.decode.finish(req.request_id)
+        self.pending.pop(req.request_id, None)
+        return [self.first_tokens[req.request_id]] + out

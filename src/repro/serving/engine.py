@@ -1,0 +1,172 @@
+"""Serving workers: real JAX compute + real KV bytes through KVDirect.
+
+``PrefillWorker`` runs the model's prefill, lands the produced KV pages
+in its numpy-backed PagedKVCache slab (the registered MR the transfer
+engine reads from), and registers descriptors.  ``DecodeWorker`` pulls
+KV through the transfer engine (pull_kv → one-sided reads + COMPLETE),
+reconstructs a device DecodeState from its own slab, and decodes with
+continuous batching.
+
+This is the CPU-scale end-to-end path (examples/serve_disaggregated.py);
+the pod-scale path is launch/serve.py + the sharded serve_step.  Both
+consume the same caches, descriptors, and engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connection import Connection, DescriptorRegistry, WorkerInfo
+from repro.core.pull_push import pull_kv
+from repro.core.transfer_engine import TransferEngine
+from repro.models.transformer import DecodeState
+from repro.serving.blocks import BlockPool
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestState
+
+__all__ = ["PrefillWorker", "DecodeWorker"]
+
+
+class PrefillWorker:
+    def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256):
+        cfg = model.cfg
+        if not cfg.has_attention or cfg.sliding_window:
+            raise NotImplementedError(
+                "CPU serving path covers paged-KV archs; SSM/SWA archs use "
+                "SlotCache transfer (see tests/test_pull_push.py)")
+        self.info = info
+        self.model = model
+        self.params = params
+        self.block_size = model.BLOCK_SIZE
+        self.cache = PagedKVCache(
+            info.worker_id,
+            num_layers=cfg.num_layers,
+            num_blocks=num_blocks,
+            block_size=self.block_size,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        self.pool = BlockPool(num_blocks, block_size=self.block_size)
+        self.registry = DescriptorRegistry(info.worker_id)
+        for d in self.cache.descriptors():
+            self.registry.register(d)
+
+    def prefill(self, req: Request, tokens: np.ndarray) -> int:
+        """Run prefill, park KV blocks in the slab, return the first token."""
+        req.to(RequestState.PREFILLING)
+        logits, state = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(tokens[None], jnp.int32)},
+            max_blocks_margin=0, remat=False,
+        )
+        k_pages = np.asarray(state.k_pages[:, 0])  # [L, spb, bs, g, hd]
+        v_pages = np.asarray(state.v_pages[:, 0])
+        spb = k_pages.shape[1]
+        req.prefill_blocks = self.pool.allocate(spb)
+        for layer in range(self.cache.num_layers):
+            for j, blk in enumerate(req.prefill_blocks):
+                self.cache.write_block(layer, blk, k_pages[layer, j], v_pages[layer, j])
+        first = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+        return first
+
+    def release(self, req: Request) -> None:
+        """COMPLETE() arrived: free the request's prefill-side blocks."""
+        if req.prefill_blocks:
+            self.pool.free(req.prefill_blocks)
+            req.prefill_blocks = []
+
+
+@dataclasses.dataclass
+class _Resident:
+    req: Request
+    blocks: list[int]
+    context_len: int
+    last_token: int
+
+
+class DecodeWorker:
+    def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
+                 engine: TransferEngine | None = None):
+        cfg = model.cfg
+        self.info = info
+        self.model = model
+        self.params = params
+        self.block_size = model.BLOCK_SIZE
+        self.cache = PagedKVCache(
+            info.worker_id,
+            num_layers=cfg.num_layers,
+            num_blocks=num_blocks,
+            block_size=self.block_size,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            base_address=0x7F80000000,
+        )
+        self.pool = BlockPool(num_blocks, block_size=self.block_size)
+        self.engine = engine or TransferEngine()
+        self.engine.register_memory(self.cache.memory_region())
+        self.resident: dict[str, _Resident] = {}
+
+    # ------------------------------------------------------------ admit
+    def admit(self, req: Request, conn: Connection, first_token: int) -> None:
+        """Pull-mode admission: allocate, TRANSFER all layers, COMPLETE."""
+        req.to(RequestState.KV_TRANSFER)
+        pull_kv(req, conn=conn, engine=self.engine,
+                decode_pool=self.pool, decode_cache=self.cache)
+        req.to(RequestState.QUEUED_DECODE)
+        self.resident[req.request_id] = _Resident(
+            req, req.decode_blocks, req.prompt_len, first_token)
+        req.to(RequestState.DECODING)
+
+    # ------------------------------------------------------------ decode
+    def _build_state(self, batch: list[_Resident], margin_blocks: int) -> DecodeState:
+        """Assemble a per-seq paged DecodeState from slab views."""
+        cfg = self.model.cfg
+        bs = self.block_size
+        L = cfg.num_layers
+        per_seq = max(len(r.blocks) for r in batch) + margin_blocks
+        b = len(batch)
+        k_pages = np.zeros((L, b, per_seq, bs, cfg.num_kv_heads, cfg.head_dim), np.float32)
+        v_pages = np.zeros_like(k_pages)
+        for layer in range(L):
+            kplane, vplane = self.cache.kv_planes(layer)  # [blocks, bs, g, hd]
+            for i, r in enumerate(batch):
+                n = len(r.blocks)
+                k_pages[layer, i, :n] = kplane[r.blocks].astype(np.float32)
+                v_pages[layer, i, :n] = vplane[r.blocks].astype(np.float32)
+        tables = np.broadcast_to(np.arange(per_seq, dtype=np.int32)[None], (b, per_seq))
+        return DecodeState(
+            context_lens=jnp.asarray([r.context_len for r in batch], jnp.int32),
+            k_pages=jnp.asarray(k_pages, jnp.bfloat16),
+            v_pages=jnp.asarray(v_pages, jnp.bfloat16),
+            block_tables=jnp.asarray(tables),
+        )
+
+    def decode_round(self, max_new: int = 8) -> dict[str, list[int]]:
+        """Continuous-batching decode until every resident request has
+        produced ``max_new`` tokens or finished.  Returns generated ids."""
+        if not self.resident:
+            return {}
+        batch = list(self.resident.values())
+        state = self._build_state(batch, margin_blocks=-(-max_new // self.block_size))
+        tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
+        out: dict[str, list[int]] = {r.req.request_id: [] for r in batch}
+        for _ in range(max_new):
+            logits, state = self.model.decode_step(self.params, state, tokens)
+            tokens = jnp.argmax(
+                logits[:, : self.model.cfg.vocab_size].astype(jnp.float32), axis=-1
+            ).astype(jnp.int32)
+            for i, r in enumerate(batch):
+                out[r.req.request_id].append(int(tokens[i]))
+                r.req.tokens_generated += 1
+        for i, r in enumerate(batch):
+            r.context_len = int(state.context_lens[i])
+            r.last_token = int(tokens[i])
+        return out
+
+    def finish(self, req_id: str) -> None:
+        r = self.resident.pop(req_id, None)
+        if r is not None:
+            self.pool.free(r.blocks)
+            r.req.to(RequestState.DONE)

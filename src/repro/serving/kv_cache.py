@@ -1,0 +1,180 @@
+"""Paged KV cache + fixed-size state cache, backed by one real byte slab.
+
+Each worker owns a single contiguous ``uint8`` slab standing in for its
+HBM.  KV tensors are strided views into the slab, and each layer exports
+the exact ``TensorDesc`` of Fig. 5 — ``(Address, Dims, Shape, Stride)``
+with dims ``("B","KV","L","H","D")`` — so the transfer engine can move
+*real bytes* between workers with descriptor-computed one-sided reads.
+
+Layout choice (TPU adaptation): ``block_size`` defaults to 32 tokens so a
+(32, kv_heads·head_dim) block is an (8,128)-tile multiple — the DMA- and
+MXU-friendly unit — instead of the paper's 4 KB GPU pages.
+
+``SlotCache`` is the SSM analogue: attention-free archs (mamba2, hymba's
+SSM half) transfer one *contiguous fixed-size state* per request instead
+of paged blocks — the degenerate (best) case for KVDirect, one coalesced
+transaction per layer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:  # bfloat16 matches the paper's "× 2B" arithmetic
+    import ml_dtypes
+
+    DEFAULT_DTYPE = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    DEFAULT_DTYPE = np.dtype(np.float16)
+
+from repro.core.descriptors import TensorDesc
+from repro.core.transfer_engine import MemoryRegion
+
+__all__ = ["PagedKVCache", "SlotCache", "DEFAULT_DTYPE"]
+
+
+class PagedKVCache:
+    """All-layer paged KV storage for one worker.
+
+    Logical shape per layer: ``[B, KV, L, H, D]`` = ``[num_blocks, 2,
+    block_size, kv_heads, head_dim]`` (paper Fig. 5's dim names), with the
+    paper's KV-major MEMORY layout: all K blocks contiguous, then all V
+    blocks (stride(KV) > stride(B), exactly like Fig. 5's example where
+    stride = (4096, 40960, 256, 128, 1)).  This both matches the paper's
+    worked arithmetic — two disjoint spans per block, K-runs of adjacent
+    blocks coalescable — and gives attention kernels separate dense K/V
+    planes.
+    """
+
+    def __init__(
+        self,
+        worker_id: str,
+        *,
+        num_layers: int,
+        num_blocks: int,
+        block_size: int = 32,
+        kv_heads: int = 8,
+        head_dim: int = 128,
+        dtype: np.dtype = DEFAULT_DTYPE,
+        base_address: int = 0x7F06F40000,  # paper Fig. 5's example base
+    ) -> None:
+        self.worker_id = worker_id
+        self.num_layers = num_layers
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.dtype = np.dtype(dtype)
+        self.base_address = base_address
+
+        self.layer_shape = (num_blocks, 2, block_size, kv_heads, head_dim)
+        self._layer_elems = int(np.prod(self.layer_shape))
+        self._slab = np.zeros(num_layers * self._layer_elems * self.dtype.itemsize, dtype=np.uint8)
+        # Memory order [KV, B, L, H, D]; logical [B, KV, L, H, D] views are
+        # transposes of it (strides carry the layout, per Fig. 5).
+        self._mem = self._slab.view(self.dtype).reshape(
+            (num_layers, 2, num_blocks, block_size, kv_heads, head_dim)
+        )
+        self._view = self._mem.transpose(0, 2, 1, 3, 4, 5)  # [layer, B, KV, L, H, D]
+
+    # ------------------------------------------------------- descriptors
+    def desc(self, layer: int) -> TensorDesc:
+        if not (0 <= layer < self.num_layers):
+            raise IndexError(f"layer {layer} out of range")
+        # element strides of one layer's [B, KV, L, H, D] view
+        s = self._view[layer].strides
+        stride = tuple(x // self.dtype.itemsize for x in s)
+        return TensorDesc(
+            address=self.base_address + layer * self._layer_elems * self.dtype.itemsize,
+            dims=("B", "KV", "L", "H", "D"),
+            shape=self.layer_shape,
+            stride=stride,
+            itemsize=self.dtype.itemsize,
+            worker_id=self.worker_id,
+            tensor_id=f"layer{layer}/kv",
+        )
+
+    def descriptors(self) -> list[TensorDesc]:
+        return [self.desc(l) for l in range(self.num_layers)]
+
+    def memory_region(self) -> MemoryRegion:
+        return MemoryRegion(self.worker_id, self.base_address, self._slab)
+
+    # ------------------------------------------------------------ access
+    def write_block(self, layer: int, block_id: int, k: np.ndarray, v: np.ndarray) -> None:
+        """k, v: [block_size, kv_heads, head_dim] (short final blocks are
+        zero-padded by the caller)."""
+        self._view[layer, block_id, 0] = k.astype(self.dtype)
+        self._view[layer, block_id, 1] = v.astype(self.dtype)
+
+    def read_block(self, layer: int, block_id: int) -> tuple[np.ndarray, np.ndarray]:
+        blk = self._view[layer, block_id]
+        return np.array(blk[0]), np.array(blk[1])
+
+    def layer_array(self, layer: int) -> np.ndarray:
+        """Zero-copy [B, KV, L, H, D] view for compute."""
+        return self._view[layer]
+
+    def kv_planes(self, layer: int) -> tuple[np.ndarray, np.ndarray]:
+        """Zero-copy dense K and V planes, each [B, L, H, D] — the layout
+        attention kernels consume."""
+        return self._mem[layer, 0], self._mem[layer, 1]
+
+    @property
+    def block_nbytes(self) -> int:
+        """Bytes of one K *or* V span of a block (one read transaction)."""
+        return self.block_size * self.kv_heads * self.head_dim * self.dtype.itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self._slab.nbytes
+
+
+class SlotCache:
+    """Fixed-size per-request recurrent state (SSM/conv), contiguous per
+    slot.  dims ("B","E"): slot id × flattened state elements — a single
+    dense span per slot, so each transfer is exactly one transaction."""
+
+    def __init__(
+        self,
+        worker_id: str,
+        *,
+        num_layers: int,
+        num_slots: int,
+        state_elems: int,
+        dtype: np.dtype = DEFAULT_DTYPE,
+        base_address: int = 0x7F20000000,
+    ) -> None:
+        self.worker_id = worker_id
+        self.num_layers = num_layers
+        self.num_slots = num_slots
+        self.state_elems = state_elems
+        self.dtype = np.dtype(dtype)
+        self.base_address = base_address
+        self._slab = np.zeros(
+            num_layers * num_slots * state_elems * self.dtype.itemsize, dtype=np.uint8
+        )
+        self._view = self._slab.view(self.dtype).reshape(num_layers, num_slots, state_elems)
+
+    def desc(self, layer: int) -> TensorDesc:
+        per_layer = self.num_slots * self.state_elems
+        return TensorDesc(
+            address=self.base_address + layer * per_layer * self.dtype.itemsize,
+            dims=("B", "E"),
+            shape=(self.num_slots, self.state_elems),
+            stride=(self.state_elems, 1),
+            itemsize=self.dtype.itemsize,
+            worker_id=self.worker_id,
+            tensor_id=f"layer{layer}/state",
+        )
+
+    def descriptors(self) -> list[TensorDesc]:
+        return [self.desc(l) for l in range(self.num_layers)]
+
+    def memory_region(self) -> MemoryRegion:
+        return MemoryRegion(self.worker_id, self.base_address, self._slab)
+
+    def write_slot(self, layer: int, slot: int, state: np.ndarray) -> None:
+        self._view[layer, slot] = state.reshape(-1).astype(self.dtype)
+
+    def read_slot(self, layer: int, slot: int) -> np.ndarray:
+        return np.array(self._view[layer, slot])

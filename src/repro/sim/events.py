@@ -1,0 +1,379 @@
+"""Discrete-event cluster simulator for disaggregated LLM serving.
+
+Reproduces the paper's latency experiments (Figs. 6, 12, 13, 14, 16, 17)
+at cluster scale on a laptop: Poisson arrivals, xP yD worker topologies,
+continuous-batching decode, KV-capacity admission, pull- vs push-mode
+transfer semantics, and a colocated prefill-prioritizing baseline
+(the paper's vLLM comparison).
+
+Mechanism fidelity:
+  * pull-mode — decode-side KV is allocated only when prefill FINISHES;
+    prefill-side KV is held until COMPLETE (end of transfer); a full
+    decode pool queues requests while their prefill-side KV stays alive
+    and the prefill worker keeps computing other requests (§4.3).
+  * push-mode — decode-side KV is RESERVED at admission (before prefill
+    starts); transfer overlaps prefill layer-by-layer, so its visible
+    tail is one layer's worth; a full decode pool blocks prefill from
+    even starting (Motivation #3).
+  * colocated — one worker pool does both stages, prefill prioritized at
+    iteration boundaries (vLLM-like): a long prefill stalls every
+    resident decode for its duration (the TBT blow-up of Fig. 13).
+
+Timing comes from sim.costs.CostModel; transfer timing shares the SAME
+LinkModel as the real transfer engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable
+
+import numpy as np
+
+from repro.serving.request import Request, RequestState
+from repro.sim.costs import CostModel
+from repro.sim.workloads import SimRequest
+
+__all__ = ["ClusterSim", "SimConfig", "SimResults", "percentile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_prefill: int = 1
+    n_decode: int = 1
+    mode: str = "pull"            # pull | push | colocated
+    transfer_mode: str = "tensor_centric"  # tensor_centric | message
+    coalesce_factor: float = 8.0
+    max_decode_batch: int = 64
+    reserve_response: bool = True  # reserve prompt+response tokens at admission
+    # straggler mitigation: if a prefill exceeds hedge_factor × its nominal
+    # time, duplicate it on an idle worker; first finisher wins
+    hedge_prefill: bool = False
+    hedge_factor: float = 2.0
+
+
+@dataclasses.dataclass
+class SimResults:
+    requests: list[Request]
+
+    def _metric(self, fn) -> list[float]:
+        return [v for v in (fn(r) for r in self.requests) if v is not None]
+
+    def p(self, q: float, fn) -> float:
+        vals = self._metric(fn)
+        return float(np.percentile(vals, q)) if vals else float("nan")
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "n": len(self.requests),
+            "p50_total_s": self.p(50, lambda r: r.total_latency_s),
+            "p90_total_s": self.p(90, lambda r: r.total_latency_s),
+            "p50_ttft_s": self.p(50, lambda r: r.ttft_s),
+            "p90_ttft_s": self.p(90, lambda r: r.ttft_s),
+            "p50_tbt_s": self.p(50, lambda r: r.tbt_s),
+            "p90_tbt_s": self.p(90, lambda r: r.tbt_s),
+            "mean_total_s": float(np.mean(self._metric(lambda r: r.total_latency_s) or [np.nan])),
+        }
+
+    def mean_breakdown(self) -> dict[str, float]:
+        keys = ["prefill_queue_s", "prefill_s", "transfer_s", "decode_queue_s", "decode_s"]
+        acc = {k: 0.0 for k in keys}
+        n = 0
+        for r in self.requests:
+            if r.done_s is None:
+                continue
+            b = r.breakdown()
+            for k in keys:
+                acc[k] += b[k]
+            n += 1
+        return {k: v / max(n, 1) for k, v in acc.items()}
+
+
+def percentile(vals, q):
+    return float(np.percentile(vals, q)) if len(vals) else float("nan")
+
+
+# ----------------------------------------------------------------------
+class _PrefillWorker:
+    def __init__(self, wid: str, cap_tokens: int, slowdown: float = 1.0):
+        self.wid = wid
+        self.busy_until = 0.0
+        self.held_tokens = 0      # KV held until COMPLETE (pull) / pushed (push)
+        self.cap_tokens = cap_tokens
+        self.slowdown = slowdown  # >1 = straggling node
+
+
+class _DecodeWorker:
+    def __init__(self, wid: str, cap_tokens: int, cfg: SimConfig):
+        self.wid = wid
+        self.cap_tokens = cap_tokens
+        self.used_tokens = 0
+        self.active: list[Request] = []
+        self.kv_queue: list[Request] = []      # pull: waiting for decode KV
+        self.nic_free_at = 0.0
+        self.iterating = False
+        self.cfg = cfg
+
+    def free_tokens(self) -> int:
+        return self.cap_tokens - self.used_tokens
+
+
+class ClusterSim:
+    """Heap-driven event loop.  Synchronous callbacks, deterministic."""
+
+    def __init__(self, cost: CostModel, sim_cfg: SimConfig,
+                 *, prefill_slowdowns: dict[str, float] | None = None):
+        self.cost = cost
+        self.cfg = sim_cfg
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        cap = cost.kv_capacity_tokens()
+        slows = prefill_slowdowns or {}
+        self.prefills = [
+            _PrefillWorker(f"p{i}", cap, slows.get(f"p{i}", 1.0))
+            for i in range(sim_cfg.n_prefill)
+        ]
+        self.decodes = [_DecodeWorker(f"d{i}", cap, sim_cfg) for i in range(sim_cfg.n_decode)]
+        self.prefill_queue: list[Request] = []
+        self.push_admission: list[Request] = []
+        self._meta: dict[str, SimRequest] = {}
+        self.finished: list[Request] = []
+
+    # ------------------------------------------------------------ events
+    def _at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def run(self, sim_reqs: list[SimRequest]) -> SimResults:
+        for sr in sim_reqs:
+            self._at(sr.arrival_s, lambda sr=sr: self._arrive(sr))
+        while self._heap:
+            self.now, _, fn = heapq.heappop(self._heap)
+            fn()
+        return SimResults(self.finished)
+
+    # ------------------------------------------------------- disagg flow
+    def _arrive(self, sr: SimRequest) -> None:
+        req = Request(sr.request_id, sr.prompt_len, sr.response_len, arrival_s=self.now)
+        self._meta[sr.request_id] = sr
+        if self.cfg.mode == "colocated":
+            self._co_arrive(req)
+            return
+        if self.cfg.mode == "push":
+            # Fig. 10 step 1: the DECODE worker allocates blocks AT ARRIVAL,
+            # before the prompt is even sent to the prefill worker.  This is
+            # the held-but-idle memory of Motivation #3: while the request
+            # waits for (and runs) prefill, its decode blocks serve nobody.
+            self.push_admission.append(req)
+            self._try_push_admissions()
+            return
+        self.prefill_queue.append(req)
+        self._try_start_prefills()
+
+    def _try_push_admissions(self) -> None:
+        while self.push_admission:
+            req = self.push_admission[0]
+            d = self._pick_decode()
+            if d.free_tokens() < self._reserved_tokens(req):
+                break  # decode pool exhausted by reservations: admissions stall
+            self.push_admission.pop(0)
+            d.used_tokens += self._reserved_tokens(req)
+            req.decode_worker = d.wid
+            self.prefill_queue.append(req)
+        # ALWAYS re-kick prefill: already-admitted requests may be waiting
+        # for the worker even when the head admission stalls
+        self._try_start_prefills()
+
+    def _reserved_tokens(self, req: Request) -> int:
+        extra = req.max_new_tokens if self.cfg.reserve_response else 0
+        return req.prompt_len + extra
+
+    def _try_start_prefills(self) -> None:
+        for w in self.prefills:
+            while self.prefill_queue and w.busy_until <= self.now:
+                req = self.prefill_queue[0]
+                need = req.prompt_len
+                if w.held_tokens + need > w.cap_tokens:
+                    break  # prefill-side HBM full: wait for COMPLETEs
+                self.prefill_queue.pop(0)
+                req.prefill_worker = w.wid
+                w.held_tokens += need
+                req.to(RequestState.PREFILLING)
+                req.prefill_start_s = self.now
+                nominal = self.cost.prefill_s(req.prompt_len)
+                dt = nominal * w.slowdown
+                w.busy_until = self.now + dt
+                self._at(w.busy_until, lambda req=req, w=w: self._prefill_done(req, w))
+                if self.cfg.hedge_prefill:
+                    self._at(self.now + self.cfg.hedge_factor * nominal,
+                             lambda req=req: self._maybe_hedge(req))
+
+    def _maybe_hedge(self, req: Request) -> None:
+        """Straggler mitigation: the prefill blew past hedge_factor × its
+        nominal time — duplicate it on an idle, faster worker (first
+        finisher wins; the loser's completion is ignored)."""
+        if req.state is not RequestState.PREFILLING or req.prefill_end_s is not None:
+            return
+        cand = [w for w in self.prefills
+                if w.busy_until <= self.now and w.wid != req.prefill_worker
+                and w.held_tokens + req.prompt_len <= w.cap_tokens]
+        if not cand:
+            return
+        w = min(cand, key=lambda w: w.slowdown)
+        req.retries += 1
+        w.held_tokens += req.prompt_len
+        dt = self.cost.prefill_s(req.prompt_len) * w.slowdown
+        w.busy_until = self.now + dt
+        self._at(w.busy_until, lambda req=req, w=w: self._prefill_done(req, w))
+
+    def _prefill_done(self, req: Request, w: _PrefillWorker) -> None:
+        if req.prefill_end_s is not None:
+            # a hedge twin already won; just release this copy's KV
+            w.held_tokens -= req.prompt_len
+            self._try_start_prefills()
+            return
+        req.prefill_worker = w.wid  # the winner owns the KV to pull from
+        req.prefill_end_s = self.now
+        req.token_times_s.append(self.now)  # first token from prefill
+        if self.cfg.mode == "push":
+            # transfer overlapped layer-by-layer; visible tail ≈ 1 layer
+            tail = self.cost.transfer_s(req.prompt_len, mode=self.cfg.transfer_mode,
+                                        coalesce_factor=self.cfg.coalesce_factor)
+            tail /= max(self.cost.cfg.num_layers, 1)
+            req.to(RequestState.KV_TRANSFER)
+            req.transfer_start_s, req.transfer_end_s = self.now, self.now + tail
+            w.held_tokens -= req.prompt_len
+            self._at(req.transfer_end_s, lambda req=req: self._join_decode(req))
+        else:
+            req.to(RequestState.KV_QUEUED)
+            d = self._pick_decode()
+            req.decode_worker = d.wid
+            d.kv_queue.append(req)
+            self._try_transfers(d, holder=w)
+        self._try_start_prefills()
+
+    def _pick_decode(self) -> _DecodeWorker:
+        return min(self.decodes, key=lambda d: d.used_tokens + sum(
+            r.prompt_len for r in d.kv_queue))
+
+    def _try_transfers(self, d: _DecodeWorker, holder: _PrefillWorker | None = None) -> None:
+        while d.kv_queue:
+            req = d.kv_queue[0]
+            need = self._reserved_tokens(req)
+            if d.free_tokens() < need:
+                return  # decode pool full: request queues, prefill KV stays alive
+            d.kv_queue.pop(0)
+            d.used_tokens += need
+            req.to(RequestState.KV_TRANSFER)
+            dt = self.cost.transfer_s(req.prompt_len, mode=self.cfg.transfer_mode,
+                                      coalesce_factor=self.cfg.coalesce_factor)
+            start = max(self.now, d.nic_free_at)
+            d.nic_free_at = start + dt
+            req.transfer_start_s, req.transfer_end_s = start, start + dt
+            w = next(p for p in self.prefills if p.wid == req.prefill_worker)
+            self._at(start + dt, lambda req=req, w=w: self._transfer_done(req, w))
+
+    def _transfer_done(self, req: Request, w: _PrefillWorker) -> None:
+        # COMPLETE(): prefill frees its copy
+        w.held_tokens -= req.prompt_len
+        self._try_start_prefills()
+        self._join_decode(req)
+
+    def _join_decode(self, req: Request) -> None:
+        d = next(x for x in self.decodes if x.wid == req.decode_worker)
+        req.to(RequestState.QUEUED_DECODE)
+        d.active.append(req)
+        req.to(RequestState.DECODING)
+        req.decode_start_s = self.now
+        if not d.iterating:
+            self._schedule_iteration(d)
+
+    def _schedule_iteration(self, d: _DecodeWorker) -> None:
+        batch = [r for r in d.active if r.tokens_generated < r.max_new_tokens - 1]
+        if not batch:
+            d.iterating = False
+            return
+        d.iterating = True
+        batch = batch[: self.cfg.max_decode_batch]
+        active_tokens = sum(r.prompt_len + r.tokens_generated for r in batch)
+        dt = self.cost.decode_step_s(active_tokens, len(batch))
+        self._at(self.now + dt, lambda d=d, batch=batch: self._iteration_done(d, batch))
+
+    def _iteration_done(self, d: _DecodeWorker, batch: list[Request]) -> None:
+        for r in batch:
+            r.tokens_generated += 1
+            r.token_times_s.append(self.now)
+            if not self.cfg.reserve_response:
+                d.used_tokens += 1
+            if r.tokens_generated >= r.max_new_tokens - 1:
+                r.done_s = self.now
+                r.to(RequestState.DONE)
+                d.active.remove(r)
+                d.used_tokens -= self._reserved_tokens(r) if self.cfg.reserve_response \
+                    else (r.prompt_len + r.tokens_generated)
+                self.finished.append(r)
+        if self.cfg.mode == "pull":
+            self._try_transfers(d)
+        elif self.cfg.mode == "push":
+            self._try_push_admissions()  # freed KV unblocks stalled arrivals
+        self._schedule_iteration(d)
+
+    # --------------------------------------------------- colocated (vLLM)
+    def _co_arrive(self, req: Request) -> None:
+        d = self._pick_decode()
+        req.decode_worker = d.wid
+        d.kv_queue.append(req)
+        if not d.iterating:
+            self._co_step(d)
+
+    def _co_step(self, d: _DecodeWorker) -> None:
+        """One scheduler iteration: prefill-prioritized (vLLM default)."""
+        # admit a prefill if one fits
+        if d.kv_queue:
+            req = d.kv_queue[0]
+            if d.free_tokens() >= self._reserved_tokens(req):
+                d.kv_queue.pop(0)
+                d.used_tokens += self._reserved_tokens(req)
+                req.to(RequestState.PREFILLING)
+                req.prefill_start_s = self.now
+                d.iterating = True
+                dt = self.cost.prefill_s(req.prompt_len)
+                # the prefill stalls every resident decode for `dt`
+
+                def done(req=req, d=d):
+                    req.prefill_end_s = self.now
+                    req.token_times_s.append(self.now)
+                    req.to(RequestState.KV_TRANSFER)  # zero-cost local handoff
+                    req.transfer_start_s = req.transfer_end_s = self.now
+                    req.to(RequestState.QUEUED_DECODE)
+                    d.active.append(req)
+                    req.to(RequestState.DECODING)
+                    req.decode_start_s = self.now
+                    self._co_step(d)
+
+                self._at(self.now + dt, done)
+                return
+        # otherwise run one decode iteration
+        batch = [r for r in d.active if r.tokens_generated < r.max_new_tokens - 1]
+        if not batch:
+            d.iterating = False
+            return
+        d.iterating = True
+        batch = batch[: self.cfg.max_decode_batch]
+        active_tokens = sum(r.prompt_len + r.tokens_generated for r in batch)
+        dt = self.cost.decode_step_s(active_tokens, len(batch))
+
+        def iter_done(d=d, batch=batch):
+            for r in batch:
+                r.tokens_generated += 1
+                r.token_times_s.append(self.now)
+                if r.tokens_generated >= r.max_new_tokens - 1:
+                    r.done_s = self.now
+                    r.to(RequestState.DONE)
+                    d.active.remove(r)
+                    d.used_tokens -= self._reserved_tokens(r)
+                    self.finished.append(r)
+            self._co_step(d)
+
+        self._at(self.now + dt, iter_done)

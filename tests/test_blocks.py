@@ -1,0 +1,125 @@
+"""Block pool: invariants (hypothesis), reservation semantics, contiguity."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.blocks import BlockPool, OutOfBlocks
+
+
+class TestBasics:
+    def test_allocate_free_roundtrip(self):
+        p = BlockPool(16)
+        bs = p.allocate(4)
+        assert len(bs) == 4 and p.num_free == 12
+        p.free(bs)
+        assert p.num_free == 16
+
+    def test_all_or_nothing(self):
+        p = BlockPool(4)
+        p.allocate(3)
+        with pytest.raises(OutOfBlocks):
+            p.allocate(2)
+        assert p.num_free == 1  # nothing partially taken
+
+    def test_contiguous_preferred(self):
+        p = BlockPool(16)
+        bs = p.allocate(8)
+        assert bs == list(range(bs[0], bs[0] + 8))
+
+    def test_best_fit_leaves_long_runs(self):
+        p = BlockPool(16)
+        a = p.allocate(4)        # [0..3]
+        b = p.allocate(4)        # [4..7]
+        p.free(a)                # free run of 4 at head, run of 8 at tail
+        c = p.allocate(3)
+        assert c == [0, 1, 2]    # tight 4-run used, 8-run preserved
+
+    def test_fragmented_allocation_still_succeeds(self):
+        p = BlockPool(8)
+        a = p.allocate(2)  # 0,1
+        b = p.allocate(2)  # 2,3
+        c = p.allocate(2)  # 4,5
+        p.free(a); p.free(c)
+        got = p.allocate(4)  # must stitch 0,1,4,5 (+6,7 run)
+        assert len(got) == 4 and set(got).isdisjoint(b)
+
+    def test_double_free_rejected(self):
+        p = BlockPool(4)
+        bs = p.allocate(2)
+        p.free(bs)
+        with pytest.raises(KeyError):
+            p.free(bs)
+
+    def test_blocks_for_tokens(self):
+        assert BlockPool.blocks_for_tokens(1, 32) == 1
+        assert BlockPool.blocks_for_tokens(32, 32) == 1
+        assert BlockPool.blocks_for_tokens(33, 32) == 2
+
+
+class TestReservation:
+    def test_reserve_consumes_capacity(self):
+        p = BlockPool(8)
+        r = p.reserve(6)  # push-mode pre-allocation
+        assert p.num_free == 2
+        assert p.stats.reserved == 6 and p.stats.allocated == 0
+        p.commit(r)
+        assert p.stats.reserved == 0 and p.stats.allocated == 6
+
+    def test_free_uncommitted_reservation(self):
+        p = BlockPool(8)
+        r = p.reserve(4)
+        p.free(r)  # request cancelled before push finished
+        assert p.num_free == 8 and p.stats.reserved == 0
+
+    def test_pull_mode_admits_more_than_push_mode(self):
+        # Motivation #3 in miniature: with 8 blocks and 4-block requests,
+        # push-mode reserves for both at admission and fails the third;
+        # pull-mode only holds blocks for requests actually decoding.
+        push = BlockPool(8)
+        push.reserve(4); push.reserve(4)
+        with pytest.raises(OutOfBlocks):
+            push.reserve(4)
+        pull = BlockPool(8)
+        a = pull.allocate(4)        # request 1 decoding
+        pull.free(a)                # finished before request 2 transfers
+        pull.allocate(4); pull.allocate(4)  # 2 and 3 fit fine
+
+
+class TestPrefixSharing:
+    def test_share_and_staged_free(self):
+        p = BlockPool(8)
+        bs = p.allocate(4)
+        p.share(bs)
+        p.free(bs)          # first consumer done
+        assert p.num_free == 4  # still held by second consumer
+        p.free(bs)
+        assert p.num_free == 8
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "reserve", "free", "commit"]),
+                          st.integers(1, 6)), max_size=60))
+def test_pool_invariants_random_ops(ops):
+    """Property: under any interleaving, capacity is conserved, no block is
+    both free and held, and stats match the ground truth."""
+    p = BlockPool(24)
+    live: list[list[int]] = []
+    reserved: list[list[int]] = []
+    for op, n in ops:
+        try:
+            if op == "alloc":
+                live.append(p.allocate(n))
+            elif op == "reserve":
+                reserved.append(p.reserve(n))
+            elif op == "free" and (live or reserved):
+                src = live if live else reserved
+                p.free(src.pop())
+            elif op == "commit" and reserved:
+                bs = reserved.pop()
+                p.commit(bs)
+                live.append(bs)
+        except OutOfBlocks:
+            pass
+        p.check_invariants()
+    held = sum(len(x) for x in live) + sum(len(x) for x in reserved)
+    assert p.num_free == 24 - held

@@ -1,0 +1,128 @@
+"""Cluster scheduler + CONNECT(): dynamic membership, epochs, failures."""
+import pytest
+
+from repro.core.cluster import ClusterScheduler, MembershipEvent
+from repro.core.connection import (
+    ChipInfo,
+    ConnectionManager,
+    DescriptorRegistry,
+    StaleConnectionError,
+    WorkerInfo,
+)
+from repro.core.descriptors import TensorDesc
+
+
+def winfo(wid, role, nchips=2):
+    return WorkerInfo(
+        worker_id=wid, role=role, host_addr=f"10.0.0.{hash(wid) % 250}",
+        chips=tuple(ChipInfo(i, f"ici://{wid}/chip{i}") for i in range(nchips)),
+    )
+
+
+def registry(wid, ntensors=2):
+    reg = DescriptorRegistry(wid)
+    for l in range(ntensors):
+        reg.register(TensorDesc(
+            address=0x1000 + l * 0x10000, dims=("B", "KV", "L", "H", "D"),
+            shape=(4, 2, 16, 2, 128), stride=(4096, 16384, 256, 128, 1),
+            itemsize=2, worker_id=wid, tensor_id=f"layer{l}/kv",
+        ))
+    return reg
+
+
+class TestConnect:
+    def test_handshake_exchanges_descriptors(self):
+        cm = ConnectionManager(winfo("d0", "decode"))
+        conn = cm.connect(winfo("p0", "prefill"), registry("p0"))
+        assert set(conn.descriptors) == {"layer0/kv", "layer1/kv"}
+        assert conn.desc("layer0/kv").worker_id == "p0"
+
+    def test_link_aligned_pairing(self):
+        # §4.2: chip i <-> chip i only (rail alignment).
+        cm = ConnectionManager(winfo("d0", "decode", nchips=4))
+        conn = cm.connect(winfo("p0", "prefill", nchips=4), registry("p0"))
+        assert conn.chip_pairs == ((0, 0), (1, 1), (2, 2), (3, 3))
+
+    def test_decode_to_decode_rejected(self):
+        cm = ConnectionManager(winfo("d0", "decode"))
+        with pytest.raises(ValueError):
+            cm.connect(winfo("d1", "decode"), registry("d1"))
+
+    def test_epoch_bumps_on_reconnect(self):
+        cm = ConnectionManager(winfo("d0", "decode"))
+        c1 = cm.connect(winfo("p0", "prefill"), registry("p0"))
+        cm.disconnect("p0", failed=True)
+        c2 = cm.connect(winfo("p0", "prefill"), registry("p0"))
+        assert c2.epoch > c1.epoch
+        with pytest.raises(StaleConnectionError):
+            cm.validate_epoch("p0", c1.epoch)
+
+    def test_failure_invalidation_callback(self):
+        cm = ConnectionManager(winfo("d0", "decode"))
+        cm.connect(winfo("p0", "prefill"), registry("p0"))
+        dead = []
+        cm.on_invalidate(lambda w, e: dead.append((w, e)))
+        cm.disconnect("p0", failed=True)
+        assert dead == [("p0", 1)]
+        # graceful disconnect does NOT fire invalidation
+        cm.connect(winfo("p1", "prefill"), registry("p1"))
+        cm.disconnect("p1", failed=False)
+        assert len(dead) == 1
+
+
+class TestClusterScheduler:
+    def test_dynamic_add_broadcasts(self):
+        cs = ClusterScheduler()
+        events: list[MembershipEvent] = []
+        cs.subscribe(events.append)
+        cs.add_worker(winfo("p0", "prefill"))
+        cs.add_worker(winfo("d0", "decode"))
+        assert [e.kind for e in events] == ["added", "added"]
+        assert [w.worker_id for w in cs.workers("prefill")] == ["p0"]
+
+    def test_decode_autoconnects_to_new_prefill(self):
+        # The paper's flow: scheduler broadcast -> running decode worker
+        # connects to the new prefill worker without a restart.
+        cs = ClusterScheduler()
+        cm = ConnectionManager(winfo("d0", "decode"))
+        registries = {"p0": registry("p0"), "p1": registry("p1")}
+
+        def on_event(ev: MembershipEvent):
+            if ev.kind == "added" and ev.worker.role == "prefill":
+                cm.connect(ev.worker, registries[ev.worker.worker_id])
+            elif ev.kind in ("removed", "failed") and ev.worker.role == "prefill":
+                cm.disconnect(ev.worker.worker_id, failed=ev.kind == "failed")
+
+        cs.subscribe(on_event)
+        cs.add_worker(winfo("d0", "decode"))
+        cs.add_worker(winfo("p0", "prefill"))
+        assert cm.peers == ("p0",)
+        cs.add_worker(winfo("p1", "prefill"))   # elastic scale-up
+        assert set(cm.peers) == {"p0", "p1"}
+        cs.remove_worker("p0")                   # elastic scale-down
+        assert cm.peers == ("p1",)
+
+    def test_duplicate_worker_rejected(self):
+        cs = ClusterScheduler()
+        cs.add_worker(winfo("p0", "prefill"))
+        with pytest.raises(ValueError):
+            cs.add_worker(winfo("p0", "prefill"))
+
+    def test_heartbeat_reaping(self):
+        cs = ClusterScheduler(heartbeat_timeout_s=1.0)
+        cs.add_worker(winfo("p0", "prefill"), now=0.0)
+        cs.add_worker(winfo("p1", "prefill"), now=0.0)
+        cs.heartbeat("p1", now=2.5)
+        dead = cs.reap_dead(now=3.0)
+        assert dead == ["p0"]
+        assert "p0" not in cs and "p1" in cs
+
+    def test_scheduler_outage_does_not_break_data_plane(self):
+        # Connections live on the decode worker; dropping the scheduler
+        # leaves them usable (§4.2 single-point-of-failure note).
+        cs = ClusterScheduler()
+        cm = ConnectionManager(winfo("d0", "decode"))
+        cs.add_worker(winfo("p0", "prefill"))
+        conn = cm.connect(cs.get("p0"), registry("p0"))
+        del cs  # scheduler gone
+        assert cm.connection("p0") is conn  # data plane unaffected

@@ -1,0 +1,117 @@
+"""§4.1 descriptor arithmetic — including the paper's worked example."""
+import pytest
+
+from repro.core.descriptors import ByteRange, ReadTxn, TensorDesc, build_block_reads
+
+
+def paper_desc(worker="prefill0"):
+    # Figure 5 of the paper, verbatim.
+    return TensorDesc(
+        address=0x7F06F40000,
+        dims=("B", "KV", "L", "H", "D"),
+        shape=(10, 2, 16, 2, 128),
+        stride=(4096, 40960, 256, 128, 1),
+        itemsize=2,
+        worker_id=worker,
+        tensor_id="layer0/kv",
+    )
+
+
+class TestPaperWorkedExample:
+    def test_block8_k_offset(self):
+        d = paper_desc()
+        assert d.byte_offset((8, 0, 0, 0, 0)) == 65536
+
+    def test_block8_v_offset(self):
+        # The paper prints 147453 B; (8*4096 + 40960) * 2 = 147456 B.
+        d = paper_desc()
+        assert d.byte_offset((8, 1, 0, 0, 0)) == 147456
+
+    def test_contiguous_span_covers_LHD(self):
+        d = paper_desc()
+        assert d.contiguous_span(("L", "H", "D")) == 8192  # 16*2*128*2B
+
+    def test_block_ranges_two_disjoint_8192B_spans(self):
+        # Ranges are absolute: base address + relative offset.
+        d = paper_desc()
+        rs = d.block_ranges(8)
+        assert [r.nbytes for r in rs] == [8192, 8192]
+        assert rs[0].offset == d.address + 65536
+        assert rs[1].offset == d.address + 147456
+
+    def test_adjacent_blocks_abut(self):
+        # Blocks 0 and 1: K offsets 0 and 8192 — coalescable (paper: one
+        # 16384 B transaction).
+        d = paper_desc()
+        k0, k1 = d.block_ranges(0)[0], d.block_ranges(1)[0]
+        assert k0.abuts(k1)
+        assert k0.merged(k1).nbytes == 16384
+
+
+class TestTensorDescValidation:
+    def test_rank_mismatch(self):
+        with pytest.raises(ValueError):
+            TensorDesc(0, ("A", "B"), (2,), (1,), 2)
+
+    def test_duplicate_dims(self):
+        with pytest.raises(ValueError):
+            TensorDesc(0, ("B", "B"), (2, 2), (2, 1), 2)
+
+    def test_out_of_range_index(self):
+        with pytest.raises(IndexError):
+            paper_desc().element_offset((10, 0, 0, 0, 0))
+
+    def test_non_dense_span_rejected(self):
+        # Pad H's stride: L/H/D no longer densely packed.
+        d = TensorDesc(0, ("B", "KV", "L", "H", "D"), (10, 2, 16, 2, 128),
+                       (5120, 51200, 320, 160, 1), 2)
+        with pytest.raises(ValueError, match="densely packed"):
+            d.contiguous_span(("L", "H", "D"))
+
+    def test_total_nbytes(self):
+        assert paper_desc().nbytes == 10 * 2 * 16 * 2 * 128 * 2
+
+
+class TestBuildBlockReads:
+    def test_translates_block_pairs(self):
+        remote = paper_desc("prefill0")
+        local = TensorDesc(
+            address=0x1000,
+            dims=("B", "KV", "L", "H", "D"),
+            shape=(10, 2, 16, 2, 128),
+            stride=(4096, 40960, 256, 128, 1),
+            itemsize=2,
+            worker_id="decode0",
+            tensor_id="layer0/kv",
+        )
+        txns = list(build_block_reads("r1", remote, local, [8, 0], [3, 4]))
+        assert len(txns) == 4  # 2 blocks x (K, V)
+        assert all(isinstance(t, ReadTxn) for t in txns)
+        assert txns[0].remote.offset == remote.address + 65536  # remote block 8 K
+        assert txns[0].local.offset == 0x1000 + 3 * 8192        # local block 3 K
+        assert {t.nbytes for t in txns} == {8192}
+        assert all(t.src_worker == "prefill0" and t.dst_worker == "decode0" for t in txns)
+
+    def test_length_mismatch_rejected(self):
+        d = paper_desc()
+        with pytest.raises(ValueError):
+            list(build_block_reads("r", d, d, [0, 1], [0]))
+
+    def test_size_mismatch_rejected(self):
+        remote = paper_desc()
+        local = TensorDesc(0, ("B", "KV", "L", "H", "D"), (10, 2, 8, 2, 128),
+                           (2048, 20480, 256, 128, 1), 2, worker_id="d")
+        with pytest.raises(ValueError, match="layout mismatch"):
+            list(build_block_reads("r", remote, local, [0], [0]))
+
+
+class TestByteRange:
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            ByteRange(-1, 4)
+        with pytest.raises(ValueError):
+            ByteRange(0, 0)
+
+    def test_merge_requires_adjacency(self):
+        with pytest.raises(ValueError):
+            ByteRange(0, 4).merged(ByteRange(8, 4))

@@ -1,0 +1,90 @@
+"""End-to-end disaggregated serving: real model, real bytes, failures.
+
+The critical assertion: generation through the FULL disaggregated path
+(prefill worker → KVDirect one-sided pull → decode worker) produces the
+SAME tokens as running the model monolithically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.serving.disagg import DisaggService
+from repro.serving.request import RequestState
+
+
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def monolithic_generate(model, params, tokens, n):
+    logits, state = model.prefill(params, {"tokens": jnp.asarray(tokens[None])},
+                                  remat=False)
+    out = [int(jnp.argmax(logits[0, : model.cfg.vocab_size]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n):
+        logits, state = model.decode_step(params, state, tok)
+        tok = jnp.argmax(logits[:, : model.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+class TestDisaggEndToEnd:
+    def test_matches_monolithic_generation(self, service_setup):
+        cfg, model, params = service_setup
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        ref = monolithic_generate(model, params, tokens, 4)
+
+        svc = DisaggService(model, params, n_prefill=1, num_blocks=64)
+        req = svc.submit(tokens)
+        got = svc.generate(req, max_new=4)
+        assert got == ref, f"disagg {got} != monolithic {ref}"
+        assert req.state == RequestState.DONE
+
+    def test_complete_frees_prefill_blocks(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, num_blocks=64)
+        rng = np.random.default_rng(1)
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        req = svc.submit(tokens)
+        w = svc.prefills[req.prefill_worker]
+        held = w.pool.stats.in_use
+        assert held > 0
+        svc.generate(req, max_new=2)
+        assert w.pool.stats.in_use == 0  # COMPLETE() released them
+
+    def test_prefill_worker_failure_recovers(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, num_blocks=64)
+        rng = np.random.default_rng(2)
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        ref = monolithic_generate(model, params, tokens, 3)
+
+        req = svc.submit(tokens)
+        victim = req.prefill_worker
+        svc.fail_prefill_worker(victim)          # crash before the pull
+        assert req.prefill_worker != victim       # re-prefilled elsewhere
+        assert req.retries == 1
+        got = svc.generate(req, max_new=3)
+        assert got == ref
+
+    def test_elastic_scale_up_serves_new_worker(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, num_blocks=64)
+        new_wid = svc.add_prefill_worker(num_blocks=64)
+        assert new_wid in svc.conn_mgr.peers  # auto-CONNECTed, no restart
+        # saturate worker p0's accounting so the new worker is chosen
+        svc.prefills["p0"].pool.allocate(60)
+        rng = np.random.default_rng(3)
+        tokens = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        req = svc.submit(tokens)
+        assert req.prefill_worker == new_wid
+        out = svc.generate(req, max_new=2)
+        assert len(out) == 3

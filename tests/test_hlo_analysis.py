@@ -1,0 +1,60 @@
+"""HLO collective-bytes parser: the §Roofline instrument must be right."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, parse_shape_bytes
+
+
+class TestShapeParsing:
+    @pytest.mark.parametrize("s,expected", [
+        ("bf16[128,1024]", 128 * 1024 * 2),
+        ("f32[16]", 64),
+        ("(f32[4], bf16[8,8])", 16 + 128),
+        ("pred[32]", 32),
+        ("s32[2,2,2]", 32),
+        ("token[]", 0),
+        ("u8[100]", 100),
+    ])
+    def test_bytes(self, s, expected):
+        assert parse_shape_bytes(s) == expected
+
+
+class TestCollectiveExtraction:
+    def _compile_psum(self):
+        # build a real 8-device SPMD program with an all-reduce
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        devs = jax.devices()
+        if len(devs) < 2:
+            pytest.skip("needs >1 device (run under dryrun's XLA_FLAGS)")
+        mesh = jax.make_mesh((len(devs),), ("d",))
+        x = jax.ShapeDtypeStruct((len(devs) * 4, 128), jnp.float32)
+        f = jax.jit(
+            lambda x: (x @ x.T).sum(),
+            in_shardings=NamedSharding(mesh, P("d", None)),
+        )
+        return f.lower(x).compile().as_text()
+
+    def test_synthetic_text(self):
+        txt = """
+  %ag = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %p), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %q), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %r), dimensions={0}
+  %done = f32[8]{0} all-reduce-done(f32[8]{0} %s)
+"""
+        st = collective_bytes(txt)
+        assert st.by_kind_count["all-gather"] == 1
+        assert st.by_kind_bytes["all-gather"] == 64 * 128 * 2
+        assert st.by_kind_count["all-reduce"] >= 1
+        # ring model: all-reduce charged 2x
+        assert st.wire_bytes >= st.total_bytes
+        # f32 share tracked for the bf16 adjustment
+        assert 0 < st.f32_wire_bytes <= st.wire_bytes
+        assert st.wire_bytes_bf16_adjusted < st.wire_bytes
+
+    def test_real_compiled_program(self):
+        txt = self._compile_psum()
+        st = collective_bytes(txt)
+        assert st.total_bytes > 0, "expected a collective in a sharded matmul+sum"

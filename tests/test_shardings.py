@@ -1,0 +1,99 @@
+"""Sharding rule engine: the launch-layer PartitionSpec assignments.
+
+These rules decide whether 512 chips do useful work — worth pinning.
+"""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.launch.shardings import batch_spec, logical_spec  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # shape-only use: axis sizes matter, device count doesn't — build the
+    # largest mesh the local device allows and spoof sizes via a stub
+    class _M:
+        shape = {"data": 16, "model": 16}
+    return _M()
+
+
+@pytest.fixture(scope="module")
+def mp_mesh():
+    class _M:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    return _M()
+
+
+class TestParamRules:
+    def test_column_parallel_qkv(self, mesh):
+        # [L, d_model, attn_dim]: out over model, in over data (train)
+        spec = logical_spec(["layers", "attn", "q", "w"], (48, 4096, 4096),
+                            mesh, mode="train")
+        assert spec == P(None, "data", "model")
+
+    def test_row_parallel_o(self, mesh):
+        spec = logical_spec(["layers", "attn", "o", "w"], (48, 4096, 4096),
+                            mesh, mode="train")
+        assert spec == P(None, "model", "data")
+
+    def test_serve_mode_drops_fsdp(self, mesh):
+        spec = logical_spec(["layers", "attn", "q", "w"], (48, 4096, 4096),
+                            mesh, mode="serve")
+        assert spec == P(None, None, "model")
+
+    def test_moe_expert_stack(self, mesh):
+        # [L, E, d, ff]: E over data (EP), ff over model (TP)
+        spec = logical_spec(["layers", "moe", "gate"], (48, 128, 5120, 8192),
+                            mesh, mode="train")
+        assert spec == P(None, "data", None, "model")
+
+    def test_moe_shared_expert_is_dense_rule(self, mesh):
+        spec = logical_spec(["layers", "moe", "shared", "gate", "w"],
+                            (48, 5120, 8192), mesh, mode="train")
+        assert spec == P(None, "data", "model")
+
+    def test_embedding_vocab_over_model(self, mesh):
+        spec = logical_spec(["embed", "table"], (49408, 6144), mesh, mode="serve")
+        assert spec == P("model", None)
+
+    def test_indivisible_dim_stays_unsharded(self, mesh):
+        # hymba o-proj: 25·64=1600 divides, but a 25-head dim would not
+        spec = logical_spec(["layers", "attn", "q", "w"], (32, 1600, 25),
+                            mesh, mode="serve")
+        assert spec == P(None, None, None)  # 25 % 16 != 0 and 1600 is FSDP-only
+
+    def test_norms_replicated(self, mesh):
+        spec = logical_spec(["layers", "attn_norm", "scale"], (48, 4096),
+                            mesh, mode="train")
+        assert spec == P(None, None)
+
+    def test_fold_mode_serve_replicates(self, mesh):
+        spec = logical_spec(["layers", "attn", "q", "w"], (32, 1536, 1536),
+                            mesh, mode="serve", fold_model=True)
+        assert spec == P(None, None, None)
+
+    def test_fold_mode_keeps_ep(self, mesh):
+        spec = logical_spec(["layers", "moe", "down"], (32, 48, 512, 1536),
+                            mesh, mode="train", fold_model=True)
+        assert spec == P(None, "data", "model", None)
+
+
+class TestBatchSpec:
+    def test_divisible_batch(self, mesh):
+        assert batch_spec(mesh, 256) == P(("data",))
+
+    def test_multipod(self, mp_mesh):
+        assert batch_spec(mp_mesh, 256) == P(("pod", "data"))
+
+    def test_batch_one_replicates(self, mp_mesh):
+        assert batch_spec(mp_mesh, 1) == P()
+
+    def test_fold_extends_dp(self, mp_mesh):
+        assert batch_spec(mp_mesh, 1024, fold_model=True) == P(("pod", "data", "model"))
+
+    def test_fold_falls_back_per_divisibility(self, mp_mesh):
+        # 256 doesn't divide 512 → drop 'model'; 256 < pod*data*model
+        assert batch_spec(mp_mesh, 256, fold_model=True) == P(("pod", "data"))

@@ -1,0 +1,142 @@
+"""Transfer engine: real byte movement, coalescing, ordering, modes."""
+import numpy as np
+import pytest
+
+from repro.core.coalesce import coalesce_fifo, coalesce_sorted
+from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn
+from repro.core.transfer_engine import LinkModel, MemoryRegion, TransferEngine
+
+
+def make_engine(mode="tensor_centric", **kw):
+    eng = TransferEngine(mode=mode, **kw)
+    src = np.arange(64 * 1024, dtype=np.uint8) % 251
+    dst = np.zeros(64 * 1024, dtype=np.uint8)
+    eng.register_memory(MemoryRegion("p0", 0, src))
+    eng.register_memory(MemoryRegion("d0", 0, dst))
+    return eng, src, dst
+
+
+def read(rid, roff, loff, n=4096):
+    return ReadTxn(rid, "p0", "d0", ByteRange(roff, n), ByteRange(loff, n))
+
+
+class TestByteMovement:
+    @pytest.mark.parametrize("mode", ["tensor_centric", "message"])
+    def test_bytes_land_exactly(self, mode):
+        eng, src, dst = make_engine(mode)
+        eng.submit([read("r1", 0, 8192), read("r1", 4096, 12288),
+                    CompleteTxn("r1", "p0", "d0")])
+        eng.drain()
+        np.testing.assert_array_equal(dst[8192:16384], src[0:8192])
+        assert eng.stats.bytes_moved == 8192
+        assert eng.stats.completes == 1
+
+    def test_non_adjacent_not_merged_but_correct(self):
+        eng, src, dst = make_engine()
+        eng.submit([read("r1", 0, 0), read("r1", 8192, 8192)])  # gap at 4096
+        eng.drain()
+        np.testing.assert_array_equal(dst[0:4096], src[0:4096])
+        np.testing.assert_array_equal(dst[8192:12288], src[8192:12288])
+        assert eng.stats.reads_posted == 2
+
+    def test_adjacent_coalesce_to_one_read(self):
+        eng, src, dst = make_engine()
+        eng.submit([read("r1", 0, 0), read("r2", 4096, 4096)])
+        eng.drain()
+        assert eng.stats.reads_posted == 1  # one RDMA op for two txns
+        assert eng.stats.coalesce_factor == 2.0
+        np.testing.assert_array_equal(dst[0:8192], src[0:8192])
+
+
+class TestOrderingRules:
+    def test_complete_blocks_window(self):
+        # Reads after a COMPLETE must not coalesce across it.
+        eng, _, _ = make_engine()
+        eng.submit([read("r1", 0, 0), CompleteTxn("r1", "p0", "d0"),
+                    read("r2", 4096, 4096)])
+        eng.drain()
+        assert eng.stats.reads_posted == 2  # window split at COMPLETE
+
+    def test_complete_before_reads_is_a_bug(self):
+        eng, _, _ = make_engine()
+        eng.submit([CompleteTxn("r1", "p0", "d0"), read("r1", 0, 0)])
+        with pytest.raises(RuntimeError, match="COMPLETE"):
+            eng.drain()
+
+    def test_cross_request_interleaving_ok(self):
+        # §4.2: transactions of different requests may interleave freely.
+        eng, src, dst = make_engine()
+        eng.submit([read("r1", 0, 0), read("r2", 4096, 4096),
+                    read("r1", 8192, 8192),
+                    CompleteTxn("r1", "p0", "d0"), CompleteTxn("r2", "p0", "d0")])
+        eng.drain()
+        assert eng.stats.completes == 2
+        np.testing.assert_array_equal(dst[:12288], src[:12288])
+
+
+class TestMessageModeBaseline:
+    def test_staging_rounds_bounded_buffer(self):
+        # Fig. 7a: buffer holds 2 blocks -> 4 blocks = 2 rounds.
+        eng, src, dst = make_engine("message", staging_blocks=2,
+                                    staging_block_bytes=4096)
+        eng.submit([read(f"r", i * 4096, i * 4096) for i in range(4)])
+        eng.drain()
+        assert eng.stats.rounds == 2
+        np.testing.assert_array_equal(dst[:16384], src[:16384])
+
+    def test_message_mode_modeled_slower(self):
+        # Same bytes, message mode pays per-round handshakes (Fig. 3).
+        link = LinkModel()
+        e1, _, _ = make_engine("tensor_centric", link=link)
+        e2, _, _ = make_engine("message", link=link, staging_blocks=2,
+                               staging_block_bytes=4096)
+        txns = [read("r", i * 4096, i * 4096) for i in range(8)]
+        e1.submit(list(txns)); e1.drain()
+        e2.submit(list(txns)); e2.drain()
+        assert e2.stats.modeled_time_s > 10 * e1.stats.modeled_time_s
+
+
+class TestCompletionCallbacks:
+    def test_on_complete_fires_with_request_id(self):
+        eng, _, _ = make_engine()
+        seen = []
+        eng.on_complete(lambda c: seen.append(c.request_id))
+        eng.submit([read("rX", 0, 0), CompleteTxn("rX", "p0", "d0")])
+        eng.drain()
+        assert seen == ["rX"]
+
+    def test_unregistered_worker_fails(self):
+        eng = TransferEngine()
+        eng.submit([read("r", 0, 0)])
+        with pytest.raises(KeyError, match="unregistered"):
+            eng.drain()
+
+
+class TestCoalesceStrategies:
+    def test_fifo_misses_out_of_order_adjacency(self):
+        txns = [read("a", 4096, 4096), read("b", 0, 0)]  # reversed order
+        assert len(coalesce_fifo(txns)) == 2
+        assert len(coalesce_sorted(txns)) == 1  # beyond-paper strategy
+
+    def test_sorted_requires_both_sides_contiguous(self):
+        txns = [read("a", 0, 0), read("b", 4096, 12288)]  # remote adj, local not
+        assert len(coalesce_sorted(txns)) == 2
+
+    def test_merge_preserves_total_bytes(self):
+        txns = [read(f"r{i}", i * 4096, i * 4096) for i in range(10)]
+        merged = coalesce_sorted(txns)
+        assert sum(m.nbytes for m in merged) == 10 * 4096
+        assert len(merged) == 1 and merged[0].n_merged == 10
+
+
+class TestLinkModel:
+    def test_read_time_scales_with_bytes(self):
+        lm = LinkModel()
+        assert lm.read_time(50_000_000_000) == pytest.approx(1.0, rel=0.01)
+
+    def test_message_round_dominated_by_overheads_for_small_blocks(self):
+        lm = LinkModel()
+        t = lm.message_round_time(4096)
+        overhead = lm.rpc_latency_s + lm.gather_launch_s + lm.cpu_sync_s + \
+            lm.scatter_launch_s + lm.notify_s
+        assert overhead / t > 0.99  # the 13.2%-effective pathology of Fig. 3
