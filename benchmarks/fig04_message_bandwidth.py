@@ -19,10 +19,10 @@ def _measure(n_blocks: int, block_bytes: int) -> float:
                          staging_blocks=2, staging_block_bytes=block_bytes,
                          execute_copies=False)
     eng.register_memory(MemoryRegion("p0", 0, np.zeros(1, np.uint8)))
-    eng.register_memory(MemoryRegion("d0", 0, np.zeros(1, np.uint8)))
+    eng.register_memory(MemoryRegion("d0", 1 << 40, np.zeros(1, np.uint8)))
     eng.submit([
         ReadTxn("r", "p0", "d0", ByteRange(i * block_bytes, block_bytes),
-                ByteRange(i * block_bytes, block_bytes))
+                ByteRange((1 << 40) + i * block_bytes, block_bytes))
         for i in range(n_blocks)
     ])
     eng.drain()

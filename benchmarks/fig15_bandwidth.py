@@ -18,6 +18,7 @@ from repro.core.descriptors import ByteRange, ReadTxn
 from repro.core.transfer_engine import LinkModel, MemoryRegion, TransferEngine
 
 N_BLOCKS = 1024
+DST_BASE = 1 << 31  # disjoint from the src MR (engine rejects overlap)
 
 
 def _run_mode(mode: str, block_bytes: int) -> tuple[float, float, float]:
@@ -30,7 +31,7 @@ def _run_mode(mode: str, block_bytes: int) -> tuple[float, float, float]:
         eng = TransferEngine(mode=mode, coalescing="fifo", link=LinkModel.nic_400g(),
                              staging_blocks=2, staging_block_bytes=block_bytes)
         eng.register_memory(MemoryRegion("p0", 0, src))
-        eng.register_memory(MemoryRegion("d0", 0, dst))
+        eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
         # 8-block contiguous runs (the coalescing opportunity of long
         # prompts), scattered run-to-run — the §4.2 pattern
         txns = []
@@ -40,7 +41,7 @@ def _run_mode(mode: str, block_bytes: int) -> tuple[float, float, float]:
                 off = (pr * 8 + j) * block_bytes
                 txns.append(ReadTxn("r", "p0", "d0",
                                     ByteRange(off, block_bytes),
-                                    ByteRange(off, block_bytes)))
+                                    ByteRange(DST_BASE + off, block_bytes)))
         eng.submit(txns)
         eng.drain()
         return eng

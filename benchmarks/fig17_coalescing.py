@@ -29,7 +29,7 @@ def _engine_coalesce_factor(run_len: int) -> float:
     eng = TransferEngine(mode="tensor_centric", coalescing="fifo",
                          execute_copies=False)
     eng.register_memory(MemoryRegion("p0", 0, np.zeros(1, np.uint8)))
-    eng.register_memory(MemoryRegion("d0", 0, np.zeros(1, np.uint8)))
+    eng.register_memory(MemoryRegion("d0", 1 << 40, np.zeros(1, np.uint8)))
     rng = np.random.default_rng(0)
     n_runs = 512 // run_len
     perm = rng.permutation(n_runs)
@@ -38,7 +38,7 @@ def _engine_coalesce_factor(run_len: int) -> float:
         for j in range(run_len):
             off = (int(pr) * run_len + j) * BLOCK
             txns.append(ReadTxn("r", "p0", "d0", ByteRange(off, BLOCK),
-                                ByteRange(off, BLOCK)))
+                                ByteRange((1 << 40) + off, BLOCK)))
     eng.submit(txns)
     eng.drain()
     return eng.stats.coalesce_factor

@@ -1,0 +1,111 @@
+"""Scheduling-policy sweep: policy × workload × QPS → latency percentiles.
+
+Runs the discrete-event simulator over a 2 prefill × 2 decode cluster
+with a skewed network (cross-rail KV pulls 5× slower — the NetKV
+scenario) and sweeps all four ``repro.sched`` policies over both paper
+workloads at several arrival rates.  Reports TTFT / end-to-end
+percentiles plus the SLO policy's admission behavior.
+
+As a benchmark module it emits the usual CSV rows through run.py; run
+directly it also writes the full sweep as JSON:
+
+    PYTHONPATH=src python -m benchmarks.fig_sched_policies \
+        [--out fig_sched_policies.json]
+
+Expected shape: network_aware ≤ round_robin on e2e latency under skew
+(it keeps pulls off the slow links); slo keeps served TTFT bounded at
+overload by rejecting what it cannot serve in time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import ARXIV, SHAREGPT, sample_requests
+
+POLICIES = ("round_robin", "least_loaded", "network_aware", "slo")
+DURATION = 120.0
+SLO_TTFT_S = 15.0
+# cross-rail links 5x slower than the aligned pairs (p_i ↔ d_i)
+LINK_SCALES = {("p0", "d1"): 5.0, ("p1", "d0"): 5.0}
+# last point of each grid overloads 2 prefill workers (util > 1) so the
+# SLO admission controller has something to reject
+QPS_GRID = {"arxiv": (0.25, 0.5, 1.0), "sharegpt": (0.5, 1.0, 2.0)}
+
+
+def sweep() -> list[dict]:
+    cost = CostModel(get_config("mistral-large-123b"), H100_NODE)
+    cells = []
+    for spec in (ARXIV, SHAREGPT):
+        for qps in QPS_GRID[spec.name]:
+            reqs = sample_requests(spec, qps=qps, duration_s=DURATION, seed=11)
+            for policy in POLICIES:
+                sim = ClusterSim(
+                    cost,
+                    SimConfig(n_prefill=2, n_decode=2, mode="pull", policy=policy,
+                              slo_s=SLO_TTFT_S if policy == "slo" else None),
+                    link_scales=LINK_SCALES,
+                )
+                s = sim.run(list(reqs)).summary()
+                cells.append({
+                    "policy": policy,
+                    "workload": spec.name,
+                    "qps": qps,
+                    "n_offered": len(reqs),
+                    "n_served": int(s["n"]),
+                    "n_rejected": int(s["n_rejected"]),
+                    "p50_ttft_s": s["p50_ttft_s"],
+                    "p90_ttft_s": s["p90_ttft_s"],
+                    "p50_total_s": s["p50_total_s"],
+                    "p90_total_s": s["p90_total_s"],
+                    "p90_tbt_s": s["p90_tbt_s"],
+                })
+    return cells
+
+
+def _rows(cells: list[dict]) -> list[Row]:
+    rows = []
+    for c in cells:
+        rows.append(Row(
+            f"sched/{c['workload']}/qps{c['qps']}/{c['policy']}",
+            c["p90_total_s"] * 1e6,
+            f"p90_ttft={c['p90_ttft_s']:.2f}s;p90_e2e={c['p90_total_s']:.2f}s;"
+            f"served={c['n_served']};rejected={c['n_rejected']}",
+        ))
+    # headline: network-aware vs round-robin e2e under skew, per workload
+    for name in ("arxiv", "sharegpt"):
+        na = [c for c in cells if c["workload"] == name and c["policy"] == "network_aware"]
+        rr = [c for c in cells if c["workload"] == name and c["policy"] == "round_robin"]
+        gain = sum(r["p90_total_s"] for r in rr) / max(sum(n["p90_total_s"] for n in na), 1e-9)
+        rows.append(Row(f"sched/{name}/summary", 0.0,
+                        f"network_aware_vs_round_robin_p90_e2e={gain:.2f}x"))
+    return rows
+
+
+def run() -> list[Row]:
+    return _rows(sweep())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="fig_sched_policies.json")
+    args = ap.parse_args()
+    cells = sweep()
+    with open(args.out, "w") as f:
+        json.dump({"config": {"duration_s": DURATION, "slo_ttft_s": SLO_TTFT_S,
+                              "link_scales": {f"{k[0]}->{k[1]}": v
+                                              for k, v in LINK_SCALES.items()},
+                              "topology": "2P x 2D"},
+                   "cells": cells}, f, indent=2)
+    print(f"wrote {len(cells)} cells to {args.out}")
+    print("name,us_per_call,derived")
+    for row in _rows(cells):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ class ClusterScheduler:
         self._workers: dict[str, WorkerInfo] = {}
         self._subs: list[Callable[[MembershipEvent], None]] = []
         self._last_heartbeat: dict[str, float] = {}
+        self._loads: dict[str, object] = {}  # latest LoadReport per worker
         self.heartbeat_timeout_s = heartbeat_timeout_s
 
     # -------------------------------------------------------- membership
@@ -53,22 +54,47 @@ class ClusterScheduler:
         if info is None:
             return
         self._last_heartbeat.pop(worker_id, None)
+        self._loads.pop(worker_id, None)
         self._broadcast(MembershipEvent("failed" if failed else "removed", info))
 
     # --------------------------------------------------------- liveness
-    def heartbeat(self, worker_id: str, now: float) -> None:
+    def heartbeat(self, worker_id: str, now: float, load: object | None = None) -> None:
+        """Liveness ping, optionally piggybacking a ``sched.LoadReport``
+        so the router sees per-worker occupancy without a second control
+        channel (the scheduler stores it opaquely)."""
         if worker_id in self._workers:
-            self._last_heartbeat[worker_id] = now
+            self._last_heartbeat[worker_id] = max(self._last_heartbeat[worker_id], now)
+            if load is not None:
+                self._loads[worker_id] = load
+
+    def report_load(self, worker_id: str, load: object) -> None:
+        """Store a LoadReport WITHOUT refreshing liveness — for control
+        planes that read worker state directly (a colocated serving
+        layer); liveness stays owned by the workers' own heartbeats."""
+        if worker_id in self._workers:
+            self._loads[worker_id] = load
 
     def reap_dead(self, now: float) -> list[str]:
-        """Crash detection: drop workers whose heartbeat lapsed."""
+        """Crash detection: drop workers whose heartbeat lapsed.
+
+        ALL lapsed workers leave membership before any failure event is
+        broadcast — subscribers re-route in-flight work synchronously on
+        the event, and must never be offered a worker that is dead but
+        not yet reaped in the same sweep."""
         dead = [
             w
             for w, t in self._last_heartbeat.items()
             if now - t > self.heartbeat_timeout_s
         ]
+        infos = []
         for w in dead:
-            self.remove_worker(w, failed=True)
+            info = self._workers.pop(w, None)
+            self._last_heartbeat.pop(w, None)
+            self._loads.pop(w, None)
+            if info is not None:
+                infos.append(info)
+        for info in infos:
+            self._broadcast(MembershipEvent("failed", info))
         return dead
 
     # ------------------------------------------------------------ query
@@ -80,6 +106,17 @@ class ClusterScheduler:
 
     def get(self, worker_id: str) -> WorkerInfo:
         return self._workers[worker_id]
+
+    def load(self, worker_id: str):
+        """Latest heartbeat-piggybacked LoadReport (None if never sent)."""
+        return self._loads.get(worker_id)
+
+    def loads(self, role: str | None = None) -> dict[str, object]:
+        return {
+            w.worker_id: self._loads[w.worker_id]
+            for w in self.workers(role)
+            if w.worker_id in self._loads
+        }
 
     def __contains__(self, worker_id: str) -> bool:
         return worker_id in self._workers

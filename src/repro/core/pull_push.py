@@ -41,6 +41,7 @@ def pull_kv(
     decode_pool: BlockPool,
     decode_cache: PagedKVCache,
     drain: bool = True,
+    preallocated: list[int] | None = None,
 ) -> TransferStats:
     """Pull-mode transfer of a whole request: allocate decode blocks,
     TRANSFER() every layer's blocks, COMPLETE().
@@ -48,10 +49,16 @@ def pull_kv(
     Raises OutOfBlocks if the decode pool can't hold the request — the
     caller keeps the request in KV_QUEUED (prefill-side KV stays alive;
     the prefill worker is free to compute other requests meanwhile, which
-    is exactly pull-mode's utilization win).
+    is exactly pull-mode's utilization win).  Callers that must fail
+    BEFORE any request state changes pass ``preallocated`` blocks.
     """
     n = len(req.prefill_blocks)
-    req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
+    if preallocated is not None:
+        if len(preallocated) != n:
+            raise ValueError(f"need {n} preallocated blocks, got {len(preallocated)}")
+        req.decode_blocks = preallocated
+    else:
+        req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
     req.connection_epoch = conn.epoch
     txns = []
     for layer in range(decode_cache.num_layers):

@@ -1,0 +1,55 @@
+"""Load- and network-aware request scheduling (the layer §4.2/§4.3 enable).
+
+KVDirect's pull-based transfer and dynamic membership exist so a fleet of
+prefill and decode workers can be scheduled flexibly; this package is the
+scheduler that exercises that flexibility:
+
+  * ``load``     — ``LoadReport`` telemetry piggybacked on the cluster
+    heartbeat (no second control channel);
+  * ``policies`` — pluggable placement policies (round-robin,
+    least-loaded, KV-locality/network-aware, SLO-aware admission);
+  * ``router``   — ``RequestRouter``: owns request queues, routes each
+    request to a (prefill, decode) pair, projects TTFT for admission,
+    and re-routes on worker failure.
+
+The same policy objects drive both the real serving layer
+(``repro.serving.disagg``) and the discrete-event simulator
+(``repro.sim.events``), so policy experiments in the simulator transfer
+directly to the live service.
+"""
+from repro.sched.load import LoadReport, modeled_transfer_s
+from repro.sched.policies import (
+    DEFAULT_SLO_CLASSES,
+    Candidate,
+    LeastLoadedPolicy,
+    NetworkAwarePolicy,
+    Policy,
+    RoundRobinPolicy,
+    RouteRequest,
+    SLOAwarePolicy,
+    make_policy,
+)
+from repro.sched.router import (
+    AdmissionRejected,
+    NoWorkersError,
+    RequestRouter,
+    RouteDecision,
+)
+
+__all__ = [
+    "AdmissionRejected",
+    "Candidate",
+    "DEFAULT_SLO_CLASSES",
+    "LeastLoadedPolicy",
+    "LoadReport",
+    "NetworkAwarePolicy",
+    "NoWorkersError",
+    "Policy",
+    "RequestRouter",
+    "RoundRobinPolicy",
+    "RouteDecision",
+    "RouteRequest",
+    "SLOAwarePolicy",
+    "make_policy",
+    "modeled_transfer_s",
+]

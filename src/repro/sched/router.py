@@ -1,0 +1,269 @@
+"""``RequestRouter`` — the placement brain between submit() and workers.
+
+The router owns the request backlog and, per request, chooses a
+(prefill, decode) pair through a pluggable policy:
+
+  * candidates come from ``ClusterScheduler`` membership, annotated with
+    the ``LoadReport`` piggybacked on each worker's heartbeat;
+  * decode candidates additionally carry the modeled cost of pulling
+    THIS request's KV footprint over the (prefill, decode) link — the
+    topology map ``links[(pwid, dwid)]`` holds per-pair ``LinkModel``s
+    (rail-aligned NICs, cross-pod DCN hops, ...), defaulting to one
+    uniform link;
+  * a small projected-busy ledger per prefill worker lets the router
+    estimate queue wait, and therefore TTFT = wait + prefill + transfer,
+    without a second control round-trip;
+  * the policy's ``admit`` vote turns that projection into admission
+    control — rejected requests either raise ``AdmissionRejected`` or
+    join the backlog for ``drain_backlog`` to retry when load falls.
+
+Failure handling: ``on_worker_failed`` drops the dead worker's ledger
+entry; the serving layer re-submits in-flight requests through
+``route()`` again, which can only pick live members (the scheduler has
+already removed the dead worker).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Iterable
+
+from repro.core.cluster import ClusterScheduler
+from repro.core.transfer_engine import LinkModel
+from repro.sched.load import LoadReport, modeled_transfer_s
+from repro.sched.policies import Candidate, Policy, RouteRequest, make_policy
+
+__all__ = ["RequestRouter", "RouteDecision", "AdmissionRejected", "NoWorkersError"]
+
+
+class NoWorkersError(RuntimeError):
+    """No live worker of a required role — nothing to route to."""
+
+
+class AdmissionRejected(RuntimeError):
+    """SLO admission control rejected the request: its projected TTFT
+    already exceeds the deadline of its class."""
+
+    def __init__(self, request_id: str, projected_ttft_s: float, deadline_s: float) -> None:
+        super().__init__(
+            f"{request_id}: projected TTFT {projected_ttft_s:.3f}s exceeds "
+            f"SLO deadline {deadline_s:.3f}s"
+        )
+        self.request_id = request_id
+        self.projected_ttft_s = projected_ttft_s
+        self.deadline_s = deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    request_id: str
+    prefill_worker: str
+    decode_worker: str
+    projected_ttft_s: float
+    transfer_cost_s: float
+
+
+def _default_prefill_time(prompt_len: int) -> float:
+    # Generic linear prefill estimate (~50k tok/s) used when the caller
+    # has no calibrated CostModel; only relative projections matter for
+    # placement, absolute ones for SLO admission (callers with real SLOs
+    # pass a calibrated fn).
+    return prompt_len / 50_000.0
+
+
+class RequestRouter:
+    def __init__(
+        self,
+        scheduler: ClusterScheduler,
+        policy: str | Policy = "least_loaded",
+        *,
+        links: dict[tuple[str, str], LinkModel] | None = None,
+        default_link: LinkModel | None = None,
+        prefill_time_fn: Callable[[int], float] | None = None,
+        coalesce_factor: float = 8.0,
+        span_bytes: int = 64 * 1024,
+        **policy_kwargs,
+    ) -> None:
+        self.scheduler = scheduler
+        self.policy = make_policy(policy, **policy_kwargs)
+        self.links = dict(links or {})
+        self.default_link = default_link or LinkModel()
+        self.prefill_time_fn = prefill_time_fn or _default_prefill_time
+        self.coalesce_factor = coalesce_factor
+        self.span_bytes = span_bytes
+
+        self._busy_until: dict[str, float] = {}  # projected prefill completion
+        self._charges: dict[str, tuple[str, float]] = {}  # rid -> (worker, t_prefill)
+        self.backlog: collections.deque[RouteRequest] = collections.deque()
+        self.decisions: dict[str, RouteDecision] = {}
+        self.total_transfer_cost_s = 0.0
+        self.rejected_count = 0
+
+    # ------------------------------------------------------------- links
+    def link(self, prefill_worker: str, decode_worker: str) -> LinkModel:
+        return self.links.get((prefill_worker, decode_worker), self.default_link)
+
+    def transfer_cost_s(self, ctx: RouteRequest, prefill_worker: str,
+                        decode_worker: str) -> float:
+        return modeled_transfer_s(
+            ctx.kv_bytes,
+            self.link(prefill_worker, decode_worker),
+            span_bytes=self.span_bytes,
+            coalesce_factor=self.coalesce_factor,
+        )
+
+    # -------------------------------------------------------- candidates
+    def _candidate(self, worker_id: str, *, ready_s: float = 0.0,
+                   transfer_cost_s: float = 0.0) -> Candidate:
+        rep: LoadReport | None = self.scheduler.load(worker_id)
+        if rep is None:
+            return Candidate(worker_id, ready_s=ready_s, transfer_cost_s=transfer_cost_s)
+        return Candidate(
+            worker_id,
+            free_units=rep.free_blocks,
+            total_units=rep.total_blocks,
+            queued_units=rep.queued_blocks,
+            resident=rep.resident_requests,
+            ready_s=ready_s,
+            transfer_cost_s=transfer_cost_s,
+        )
+
+    def prefill_candidates(self, now: float = 0.0) -> list[Candidate]:
+        return [
+            self._candidate(
+                w.worker_id,
+                ready_s=max(0.0, self._busy_until.get(w.worker_id, 0.0) - now),
+            )
+            for w in self.scheduler.workers("prefill")
+        ]
+
+    def decode_candidates(self, ctx: RouteRequest, prefill_worker: str) -> list[Candidate]:
+        return [
+            self._candidate(
+                w.worker_id,
+                transfer_cost_s=self.transfer_cost_s(ctx, prefill_worker, w.worker_id),
+            )
+            for w in self.scheduler.workers("decode")
+        ]
+
+    def _has_room(self, ctx: RouteRequest, worker_id: str) -> bool:
+        rep: LoadReport | None = self.scheduler.load(worker_id)
+        if rep is None:
+            return True  # no telemetry yet: assume room
+        needed = -(-ctx.prompt_len // max(rep.block_size, 1))
+        return rep.free_blocks >= needed
+
+    def _fitting(self, ctx: RouteRequest, cands: list[Candidate]) -> list[Candidate]:
+        """Only offer candidates that can hold the request's KV right
+        now — a cost-first policy (network_aware) must not pin requests
+        to a full worker while another has room.  Falls back to the full
+        list when nobody fits (the request queues rather than erroring)."""
+        fitting = [c for c in cands if self._has_room(ctx, c.worker_id)]
+        return fitting or cands
+
+    # ------------------------------------------------------------- route
+    def route(self, ctx: RouteRequest, *, now: float = 0.0,
+              queue_on_reject: bool = False, force: bool = False,
+              count_reject: bool = True) -> RouteDecision | None:
+        """Place ``ctx`` on a (prefill, decode) pair.
+
+        Raises ``NoWorkersError`` if a role has no live members and
+        ``AdmissionRejected`` if the policy's admission vote fails —
+        unless ``queue_on_reject``, which parks the request in the
+        backlog and returns None (retry via ``drain_backlog``), or
+        ``force``, which skips the admission vote entirely (failover
+        re-routing of an already-admitted request).
+        """
+        pcands = self.prefill_candidates(now)
+        if not pcands:
+            raise NoWorkersError("no live prefill workers")
+        p = self.policy.pick_prefill(ctx, self._fitting(ctx, pcands))
+
+        dcands = self.decode_candidates(ctx, p.worker_id)
+        if not dcands:
+            raise NoWorkersError("no live decode workers")
+        d = self.policy.pick_decode(ctx, self._fitting(ctx, dcands))
+
+        t_prefill = self.prefill_time_fn(ctx.prompt_len)
+        # Projected TTFT follows the paper's definition (§5.1: TTFT
+        # "includes the waiting time for the KV cache"), so the transfer
+        # term belongs here.  The simulator's own projection omits it
+        # because its measured first token is emitted at prefill
+        # completion — each estimator targets the metric its surface
+        # actually reports.
+        projected = p.ready_s + t_prefill + d.transfer_cost_s
+        if not force and not self.policy.admit(ctx, projected):
+            if count_reject:
+                self.rejected_count += 1
+            if queue_on_reject:
+                self.backlog.append(ctx)
+                return None
+            deadline = getattr(self.policy, "deadline_s", lambda _: float("inf"))(ctx)
+            raise AdmissionRejected(ctx.request_id, projected, deadline)
+
+        self._busy_until[p.worker_id] = now + p.ready_s + t_prefill
+        self._charges[ctx.request_id] = (p.worker_id, t_prefill)
+        decision = RouteDecision(
+            ctx.request_id, p.worker_id, d.worker_id, projected, d.transfer_cost_s
+        )
+        self.decisions[ctx.request_id] = decision
+        self.total_transfer_cost_s += d.transfer_cost_s
+        return decision
+
+    def drain_backlog(self, *, now: float = 0.0) -> list[RouteDecision]:
+        """Retry queued requests in FIFO order; stops at the first that
+        is still rejected (later arrivals must not starve it).  Retries
+        don't re-count toward ``rejected_count``."""
+        routed: list[RouteDecision] = []
+        while self.backlog:
+            ctx = self.backlog.popleft()
+            try:
+                decision = self.route(ctx, now=now, count_reject=False)
+            except (AdmissionRejected, NoWorkersError):
+                self.backlog.appendleft(ctx)  # still blocked: keep FIFO head
+                break
+            routed.append(decision)
+        return routed
+
+    # ---------------------------------------------------------- failover
+    def reassign_decode(self, ctx: RouteRequest, prefill_worker: str) -> str:
+        """Re-pick only the decode side for an already-routed request
+        (decode failover while its prefill KV is still alive).  Keeps the
+        recorded decision and transfer-cost accounting consistent."""
+        cands = self.decode_candidates(ctx, prefill_worker)
+        if not cands:
+            raise NoWorkersError("no live decode workers")
+        d = self.policy.pick_decode(ctx, self._fitting(ctx, cands))
+        old = self.decisions.get(ctx.request_id)
+        if old is not None:
+            self.total_transfer_cost_s += d.transfer_cost_s - old.transfer_cost_s
+            self.decisions[ctx.request_id] = dataclasses.replace(
+                old, decode_worker=d.worker_id, transfer_cost_s=d.transfer_cost_s)
+        return d.worker_id
+
+    def on_worker_failed(self, worker_id: str) -> None:
+        self._busy_until.pop(worker_id, None)
+
+    def forget(self, request_id: str) -> None:
+        """Drop a request's decision AND retire its ledger charge, so a
+        completed (or abandoned) prefill stops counting against future
+        admission projections."""
+        self.decisions.pop(request_id, None)
+        charge = self._charges.pop(request_id, None)
+        if charge is not None:
+            wid, t_prefill = charge
+            if wid in self._busy_until:
+                self._busy_until[wid] -= t_prefill
+
+    # ------------------------------------------------------------- stats
+    def requeue(self, ctx: RouteRequest) -> None:
+        """Put a failed in-flight request back at the head of the line."""
+        self.backlog.appendleft(ctx)
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "routed": float(len(self.decisions)),
+            "rejected": float(self.rejected_count),
+            "backlog": float(len(self.backlog)),
+            "total_transfer_cost_s": self.total_transfer_cost_s,
+        }

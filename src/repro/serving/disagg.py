@@ -1,15 +1,31 @@
 """End-to-end disaggregated serving — the paper's full pipeline on real
-substrate: cluster scheduler + prefill/decode workers + KVDirect engine.
+substrate: cluster scheduler + N prefill × M decode workers + KVDirect
+engine + the ``repro.sched`` request router.
 
 Flow per request (pull-mode, §4.3):
-  submit → least-loaded prefill worker → model prefill (real JAX) → KV
-  blocks land in the prefill worker's registered slab → decode worker
-  allocates + pulls via one-sided reads → COMPLETE frees the prefill
-  copy → continuous-batching decode.
+  submit → router picks a (prefill, decode) pair via the configured
+  policy (round-robin / least-loaded / network-aware / SLO admission) →
+  model prefill (real JAX) → KV blocks land in the prefill worker's
+  registered slab → the ASSIGNED decode worker allocates + pulls via
+  one-sided reads over its own connection table → COMPLETE frees the
+  prefill copy → continuous-batching decode.
 
-Fault tolerance: a prefill worker failure invalidates its connection
-epoch; in-flight requests whose KV lived there are re-queued and
-re-prefilled on a surviving worker (tested in tests/test_disagg.py).
+Topology: every decode worker owns a ``ConnectionManager`` with a live
+connection to every prefill worker (§4.2's decode-side connection table),
+so the router is free to pair any prefill with any decode.  Each worker's
+KV slab gets a distinct, non-overlapping base address from a simple
+bump allocator; the transfer engine rejects overlapping MRs.
+
+Fault tolerance (both roles):
+  * prefill crash → its connection epoch invalidates on every decode
+    worker; in-flight requests whose KV lived there are re-routed and
+    re-prefilled on a survivor;
+  * decode crash → requests assigned there are re-routed: KV_QUEUED
+    requests keep their prefill KV and just get a new decode worker;
+    requests already pulled (prefill copy freed by COMPLETE) restart
+    from prefill;
+  * both paths also fire from liveness reaping
+    (``ClusterScheduler.reap_dead``), not just explicit fail calls.
 """
 from __future__ import annotations
 
@@ -19,12 +35,20 @@ import numpy as np
 
 from repro.core.cluster import ClusterScheduler, MembershipEvent
 from repro.core.connection import ChipInfo, ConnectionManager, WorkerInfo
-from repro.core.transfer_engine import TransferEngine
+from repro.core.transfer_engine import LinkModel, TransferEngine
+from repro.sched import LoadReport, NoWorkersError, RequestRouter, RouteRequest
 from repro.serving.blocks import OutOfBlocks
 from repro.serving.engine import DecodeWorker, PrefillWorker
+from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState
 
 __all__ = ["DisaggService"]
+
+_RETRYABLE = (
+    RequestState.PREFILLING,
+    RequestState.KV_QUEUED,
+    RequestState.KV_TRANSFER,
+)
 
 
 def _winfo(wid: str, role: str) -> WorkerInfo:
@@ -32,108 +56,325 @@ def _winfo(wid: str, role: str) -> WorkerInfo:
 
 
 class DisaggService:
-    def __init__(self, model, params, *, n_prefill: int = 1, num_blocks: int = 256):
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_prefill: int = 1,
+        n_decode: int = 1,
+        num_blocks: int = 256,
+        policy: str = "least_loaded",
+        links: dict[tuple[str, str], LinkModel] | None = None,
+        prefill_time_fn=None,
+        slo_classes: dict[str, float] | None = None,
+    ):
         self.model = model
         self.params = params
         self.scheduler = ClusterScheduler()
         self.engine = TransferEngine(coalescing="sorted")
         self._ids = itertools.count()
+        self._wid_seq = {"p": itertools.count(), "d": itertools.count()}
+        self._next_base = 0x7F00_0000_0000  # bump allocator for KV slabs
+        self.clock = 0.0
 
-        self.decode = DecodeWorker(_winfo("d0", "decode"), model, params,
-                                   num_blocks=num_blocks, engine=self.engine)
-        self.conn_mgr = ConnectionManager(self.decode.info)
         self.prefills: dict[str, PrefillWorker] = {}
-        self.pending: dict[str, tuple[Request, np.ndarray]] = {}  # awaiting retry
+        self.decodes: dict[str, DecodeWorker] = {}
+        self.conn_mgrs: dict[str, ConnectionManager] = {}
+        self.pending: dict[str, tuple[Request, np.ndarray]] = {}  # in flight
         self.first_tokens: dict[str, int] = {}
+
+        policy_kwargs = {"classes": slo_classes} if (
+            policy == "slo" and slo_classes is not None) else {}
+        self.router = RequestRouter(
+            self.scheduler, policy, links=links,
+            prefill_time_fn=prefill_time_fn, **policy_kwargs,
+        )
 
         # COMPLETE() → prefill worker frees its blocks
         self.engine.on_complete(self._on_complete)
-        # membership → connections
+        # membership → connections + failover (explicit fails AND reaping)
         self.scheduler.subscribe(self._on_membership)
-        # failure → re-queue requests whose KV died with the worker
-        self.conn_mgr.on_invalidate(self._on_invalidate)
 
-        self.scheduler.add_worker(self.decode.info)
-        for i in range(n_prefill):
+        for _ in range(n_decode):
+            self.add_decode_worker(num_blocks=num_blocks)
+        for _ in range(n_prefill):
             self.add_prefill_worker(num_blocks=num_blocks)
+
+    # -------------------------------------------------- address space
+    def _slab_bytes(self, num_blocks: int) -> int:
+        cfg = self.model.cfg
+        return PagedKVCache.slab_nbytes(
+            num_layers=cfg.num_layers, num_blocks=num_blocks,
+            block_size=self.model.BLOCK_SIZE, kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim)
+
+    def _alloc_base(self, num_blocks: int) -> int:
+        """Distinct, non-overlapping slab base per worker (1 MiB guard)."""
+        base = self._next_base
+        one_mib = 1 << 20
+        span = -(-self._slab_bytes(num_blocks) // one_mib) * one_mib + one_mib
+        self._next_base += span
+        return base
 
     # ------------------------------------------------------- membership
     def add_prefill_worker(self, *, num_blocks: int = 256) -> str:
-        wid = f"p{len(self.prefills)}"
+        wid = f"p{next(self._wid_seq['p'])}"  # monotonic: ids never reused
         w = PrefillWorker(_winfo(wid, "prefill"), self.model, self.params,
-                          num_blocks=num_blocks)
-        w.cache.base_address = w.cache.base_address  # registered below
+                          num_blocks=num_blocks,
+                          base_address=self._alloc_base(num_blocks))
         self.prefills[wid] = w
         self.engine.register_memory(w.cache.memory_region())
-        self.scheduler.add_worker(w.info)
+        # seed liveness at the CURRENT clock, else a worker added late is
+        # instantly reapable
+        self.scheduler.add_worker(w.info, now=self.clock)  # broadcast → CONNECT
+        return wid
+
+    def add_decode_worker(self, *, num_blocks: int = 256) -> str:
+        wid = f"d{next(self._wid_seq['d'])}"
+        w = DecodeWorker(_winfo(wid, "decode"), self.model, self.params,
+                         num_blocks=num_blocks, engine=self.engine,
+                         base_address=self._alloc_base(num_blocks))
+        cm = ConnectionManager(w.info)
+        cm.on_invalidate(self._on_prefill_invalidate)
+        for pwid, pw in self.prefills.items():
+            cm.connect(pw.info, pw.registry)
+        self.decodes[wid] = w
+        self.conn_mgrs[wid] = cm
+        self.scheduler.add_worker(w.info, now=self.clock)
         return wid
 
     def fail_prefill_worker(self, wid: str) -> None:
         """Simulate a crash: scheduler reaps it; engine deregisters its MR;
-        epochs invalidate; in-flight requests re-queue."""
-        self.engine.deregister_memory(wid)
+        epochs invalidate on every decode worker; in-flight requests
+        re-route."""
         self.scheduler.remove_worker(wid, failed=True)
-        self.prefills.pop(wid, None)
+
+    def fail_decode_worker(self, wid: str) -> None:
+        """Simulate a decode crash: requests assigned there re-route."""
+        self.scheduler.remove_worker(wid, failed=True)
+
+    def reap_dead(self, now: float) -> list[str]:
+        """Liveness-driven failover: lapsed heartbeats → same teardown
+        path as an explicit failure."""
+        self.clock = max(self.clock, now)
+        return self.scheduler.reap_dead(now)
 
     def _on_membership(self, ev: MembershipEvent) -> None:
-        if ev.worker.role != "prefill":
-            return
-        if ev.kind == "added":
-            self.conn_mgr.connect(ev.worker, self.prefills[ev.worker.worker_id].registry)
-        else:
-            self.conn_mgr.disconnect(ev.worker.worker_id, failed=ev.kind == "failed")
+        wid = ev.worker.worker_id
+        if ev.worker.role == "prefill":
+            if ev.kind == "added":
+                for cm in self.conn_mgrs.values():
+                    cm.connect(ev.worker, self.prefills[wid].registry)
+            else:
+                self.engine.deregister_memory(wid)
+                self.prefills.pop(wid, None)
+                self.router.on_worker_failed(wid)
+                for cm in self.conn_mgrs.values():
+                    cm.disconnect(wid, failed=ev.kind == "failed")
+                if ev.kind == "removed":
+                    # graceful leave: no epoch invalidation fires, but the
+                    # KV is leaving with the worker all the same — migrate
+                    self._on_prefill_invalidate(wid, 0)
+        elif ev.kind in ("removed", "failed"):  # decode leaving
+            self.engine.deregister_memory(wid)
+            self.decodes.pop(wid, None)
+            self.conn_mgrs.pop(wid, None)
+            self.router.on_worker_failed(wid)
+            self._on_decode_failed(wid)  # graceful or crash: re-route
+
+    # --------------------------------------------------------- failover
+    def _on_prefill_invalidate(self, dead_worker: str, epoch: int) -> None:
+        """A prefill epoch died (fired once per decode worker's table);
+        re-route every request whose KV lived there.  Idempotent: after
+        the first re-dispatch the request points at a live worker."""
+        for rid, (req, tokens) in list(self.pending.items()):
+            if req.prefill_worker == dead_worker and req.state in _RETRYABLE:
+                self._restart(req, tokens)
+
+    def _on_decode_failed(self, dead_worker: str) -> None:
+        for rid, (req, tokens) in list(self.pending.items()):
+            if req.decode_worker != dead_worker:
+                continue
+            if req.state == RequestState.KV_QUEUED:
+                # prefill copy still alive — only the decode side moves
+                req.retries += 1
+                try:
+                    self._assign_decode(req)
+                except NoWorkersError:
+                    self._park(req)
+            elif req.state in (RequestState.KV_TRANSFER,
+                               RequestState.QUEUED_DECODE,
+                               RequestState.DECODING):
+                # pulled KV died with the worker and the prefill copy was
+                # freed by COMPLETE — restart from prefill
+                self._restart(req, tokens)
+
+    def _park(self, req: Request) -> None:
+        """No capacity to re-route right now: park the request (stays in
+        ``pending``; ``retry_parked`` revives it once capacity returns)."""
+        if req.state is not RequestState.FAILED:
+            req.to(RequestState.FAILED)
+        req.decode_worker = None
+
+    def _restart(self, req: Request, tokens: np.ndarray) -> None:
+        req.retries += 1
+        if req.prefill_blocks and req.prefill_worker in self.prefills:
+            self.prefills[req.prefill_worker].release(req)  # stale live copy
+        req.prefill_blocks = []
+        req.decode_blocks = []
+        if req.state is not RequestState.QUEUED_PREFILL:
+            if req.state is not RequestState.FAILED:
+                req.to(RequestState.FAILED)
+            req.to(RequestState.QUEUED_PREFILL)
+        self.router.forget(req.request_id)
+        try:
+            self._dispatch(req, tokens, force=True)  # already admitted once
+        except (NoWorkersError, OutOfBlocks):
+            # must not escape: callers include the membership broadcast —
+            # a throw there would abort failover for the other requests
+            self._park(req)
+
+    def retry_parked(self, now: float | None = None) -> list[str]:
+        """Re-dispatch requests parked by failover (call after adding
+        workers or freeing capacity).  Returns the revived request ids."""
+        if now is not None:
+            self.clock = max(self.clock, now)
+        revived = []
+        for rid, (req, tokens) in list(self.pending.items()):
+            if req.state is not RequestState.FAILED:
+                continue
+            if req.prefill_blocks and req.prefill_worker in self.prefills:
+                # prefill KV survived (decode-side park): only the decode
+                # assignment was lost — no need to recompute the prefill
+                try:
+                    self._assign_decode(req)
+                except NoWorkersError:
+                    continue
+                req.to(RequestState.KV_QUEUED)
+            else:
+                self._restart(req, tokens)
+                if req.state is RequestState.FAILED:
+                    continue
+            revived.append(rid)
+        return revived
+
+    # ------------------------------------------------------------ loads
+    def _report_loads(self, now: float | None = None) -> None:
+        """Refresh every worker's LoadReport (the payload a worker's own
+        heartbeat would piggyback, §4.2-style single control channel).
+        Deliberately does NOT touch liveness timestamps: the serving
+        layer reporting on a worker's behalf must not mask a dead worker
+        from ``reap_dead`` — liveness comes from real heartbeats."""
+        now = self.clock if now is None else now
+        queued = {}  # KV_QUEUED footprint per decode worker: (tokens, count)
+        for req, _ in self.pending.values():
+            if req.state == RequestState.KV_QUEUED and req.decode_worker:
+                t, c = queued.get(req.decode_worker, (0, 0))
+                queued[req.decode_worker] = (t + req.prompt_len, c + 1)
+        for wid, w in self.prefills.items():
+            self.scheduler.report_load(wid, LoadReport(
+                wid, "prefill", free_blocks=w.pool.num_free,
+                total_blocks=w.pool.stats.capacity,
+                block_size=w.block_size, t=now))
+        for wid, w in self.decodes.items():
+            q_tokens, q_depth = queued.get(wid, (0, 0))
+            self.scheduler.report_load(wid, LoadReport(
+                wid, "decode", free_blocks=w.pool.num_free,
+                total_blocks=w.pool.stats.capacity,
+                resident_requests=len(w.resident),
+                queued_tokens=q_tokens, queue_depth=q_depth,
+                block_size=w.block_size, t=now))
+
+    # ------------------------------------------------------------ serve
+    def _ctx(self, req: Request) -> RouteRequest:
+        blocks = -(-req.prompt_len // self.model.BLOCK_SIZE)
+        return RouteRequest(req.request_id, req.prompt_len,
+                            kv_bytes=self._slab_bytes(blocks),
+                            slo_class=req.slo_class, arrival_s=req.arrival_s)
+
+    def _assign_decode(self, req: Request) -> None:
+        self._report_loads()
+        req.decode_worker = self.router.reassign_decode(
+            self._ctx(req), req.prefill_worker)
+
+    def _dispatch(self, req: Request, tokens: np.ndarray, *, force: bool = False) -> None:
+        self._report_loads()
+        decision = self.router.route(self._ctx(req), now=self.clock, force=force)
+        req.prefill_worker = decision.prefill_worker
+        req.decode_worker = decision.decode_worker
+        w = self.prefills[decision.prefill_worker]
+        try:
+            self.first_tokens[req.request_id] = w.prefill(req, tokens)
+        except Exception:
+            self.router.forget(req.request_id)  # retire the ledger charge
+            raise
+        req.to(RequestState.KV_QUEUED)
+
+    def submit(self, tokens: np.ndarray, *, slo_class: str = "standard",
+               now: float | None = None) -> Request:
+        """Route + prefill immediately (pull-mode: no decode-side
+        reservation).  Raises ``sched.AdmissionRejected`` if the SLO
+        admission controller projects a missed deadline."""
+        if now is not None:
+            self.clock = max(self.clock, now)  # never rewind the clock
+        req = Request(f"r{next(self._ids)}", len(tokens), 0,
+                      arrival_s=self.clock, slo_class=slo_class)
+        self.pending[req.request_id] = (req, tokens)
+        try:
+            self._dispatch(req, tokens)
+        except Exception:
+            self.pending.pop(req.request_id, None)
+            raise
+        return req
 
     def _on_complete(self, txn) -> None:
         w = self.prefills.get(txn.src_worker)
-        req = next((r for r, _ in self.pending.values() if r.request_id == txn.request_id), None)
+        req = next((r for r, _ in self.pending.values()
+                    if r.request_id == txn.request_id), None)
         if w is not None and req is not None:
             w.release(req)
 
-    def _on_invalidate(self, dead_worker: str, epoch: int) -> None:
-        for rid, (req, tokens) in list(self.pending.items()):
-            if req.prefill_worker == dead_worker and req.state in (
-                RequestState.PREFILLING, RequestState.KV_QUEUED, RequestState.KV_TRANSFER,
-            ):
-                req.retries += 1
-                req.prefill_blocks = []
-                req.to(RequestState.FAILED)
-                req.to(RequestState.QUEUED_PREFILL)
-                self._run_prefill(req, tokens)
-
-    # ------------------------------------------------------------ serve
-    def _pick_prefill(self) -> PrefillWorker:
-        if not self.prefills:
-            raise RuntimeError("no prefill workers alive")
-        return min(self.prefills.values(), key=lambda w: w.pool.stats.in_use)
-
-    def _run_prefill(self, req: Request, tokens: np.ndarray) -> None:
-        w = self._pick_prefill()
-        req.prefill_worker = w.info.worker_id
-        self.first_tokens[req.request_id] = w.prefill(req, tokens)
-        req.to(RequestState.KV_QUEUED)
-
-    def submit(self, tokens: np.ndarray) -> Request:
-        """Prefill immediately (pull-mode: no decode-side reservation)."""
-        req = Request(f"r{next(self._ids)}", len(tokens), 0)
-        self.pending[req.request_id] = (req, tokens)
-        self._run_prefill(req, tokens)
-        return req
-
     def admit_to_decode(self, req: Request) -> bool:
-        """Pull the KV and make the request resident; False if the decode
-        pool is full (request stays KV_QUEUED; prefill KV stays alive)."""
-        conn = self.conn_mgr.connection(req.prefill_worker)
+        """Pull the KV into the assigned decode worker; False if its pool
+        is full (request stays KV_QUEUED; prefill KV stays alive)."""
+        cm = self.conn_mgrs[req.decode_worker]
+        conn = cm.connection(req.prefill_worker)
         try:
-            self.decode.admit(req, conn, self.first_tokens[req.request_id])
+            self.decodes[req.decode_worker].admit(
+                req, conn, self.first_tokens[req.request_id])
         except OutOfBlocks:
             return False
         return True
 
     def generate(self, req: Request, max_new: int = 8) -> list[int]:
+        if req.state is RequestState.FAILED:
+            raise RuntimeError(
+                f"{req.request_id} is parked after failover (no capacity); "
+                "add workers / free capacity and call retry_parked()")
         if req.request_id in self.pending and req.state == RequestState.KV_QUEUED:
             if not self.admit_to_decode(req):
                 raise OutOfBlocks("decode pool full")
-        out = self.decode.decode_round(max_new)[req.request_id]
-        self.decode.finish(req.request_id)
+        d = self.decodes[req.decode_worker]
+        out = d.decode_round(max_new)[req.request_id]
+        d.finish(req.request_id)
         self.pending.pop(req.request_id, None)
-        return [self.first_tokens[req.request_id]] + out
+        self.router.forget(req.request_id)  # also retires the ledger charge
+        return [self.first_tokens.pop(req.request_id)] + out
+
+    # ------------------------------------------------- single-decode API
+    @property
+    def decode(self) -> DecodeWorker:
+        """Oldest decode worker (compat for single-decode callers).
+        Numeric sort: ids are monotonic, so lexicographic would misorder
+        d10 before d2."""
+        if not self.decodes:
+            raise NoWorkersError("no live decode workers")
+        return self.decodes[min(self.decodes, key=lambda w: int(w[1:]))]
+
+    @property
+    def conn_mgr(self) -> ConnectionManager:
+        """Oldest decode worker's connection table (compat)."""
+        if not self.conn_mgrs:
+            raise NoWorkersError("no live decode workers")
+        return self.conn_mgrs[min(self.conn_mgrs, key=lambda w: int(w[1:]))]

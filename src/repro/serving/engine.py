@@ -31,7 +31,8 @@ __all__ = ["PrefillWorker", "DecodeWorker"]
 
 
 class PrefillWorker:
-    def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256):
+    def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
+                 base_address: int = 0x7F06F40000):
         cfg = model.cfg
         if not cfg.has_attention or cfg.sliding_window:
             raise NotImplementedError(
@@ -48,6 +49,7 @@ class PrefillWorker:
             block_size=self.block_size,
             kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim,
+            base_address=base_address,
         )
         self.pool = BlockPool(num_blocks, block_size=self.block_size)
         self.registry = DescriptorRegistry(info.worker_id)
@@ -88,7 +90,8 @@ class _Resident:
 
 class DecodeWorker:
     def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
-                 engine: TransferEngine | None = None):
+                 engine: TransferEngine | None = None,
+                 base_address: int = 0x7F80000000):
         cfg = model.cfg
         self.info = info
         self.model = model
@@ -101,7 +104,7 @@ class DecodeWorker:
             block_size=self.block_size,
             kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim,
-            base_address=0x7F80000000,
+            base_address=base_address,
         )
         self.pool = BlockPool(num_blocks, block_size=self.block_size)
         self.engine = engine or TransferEngine()
@@ -110,10 +113,16 @@ class DecodeWorker:
 
     # ------------------------------------------------------------ admit
     def admit(self, req: Request, conn: Connection, first_token: int) -> None:
-        """Pull-mode admission: allocate, TRANSFER all layers, COMPLETE."""
+        """Pull-mode admission: allocate, TRANSFER all layers, COMPLETE.
+
+        Allocation happens BEFORE any state transition so an OutOfBlocks
+        failure leaves the request exactly as it was (KV_QUEUED, prefill
+        KV alive) — the caller's retry contract depends on it."""
+        blocks = self.pool.allocate(len(req.prefill_blocks))  # may raise
         req.to(RequestState.KV_TRANSFER)
         pull_kv(req, conn=conn, engine=self.engine,
-                decode_pool=self.pool, decode_cache=self.cache)
+                decode_pool=self.pool, decode_cache=self.cache,
+                preallocated=blocks)
         req.to(RequestState.QUEUED_DECODE)
         self.resident[req.request_id] = _Resident(
             req, req.decode_blocks, req.prompt_len, first_token)

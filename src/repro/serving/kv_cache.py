@@ -68,13 +68,27 @@ class PagedKVCache:
 
         self.layer_shape = (num_blocks, 2, block_size, kv_heads, head_dim)
         self._layer_elems = int(np.prod(self.layer_shape))
-        self._slab = np.zeros(num_layers * self._layer_elems * self.dtype.itemsize, dtype=np.uint8)
+        self._slab = np.zeros(
+            self.slab_nbytes(num_layers=num_layers, num_blocks=num_blocks,
+                             block_size=block_size, kv_heads=kv_heads,
+                             head_dim=head_dim, dtype=self.dtype),
+            dtype=np.uint8)
         # Memory order [KV, B, L, H, D]; logical [B, KV, L, H, D] views are
         # transposes of it (strides carry the layout, per Fig. 5).
         self._mem = self._slab.view(self.dtype).reshape(
             (num_layers, 2, num_blocks, block_size, kv_heads, head_dim)
         )
         self._view = self._mem.transpose(0, 2, 1, 3, 4, 5)  # [layer, B, KV, L, H, D]
+
+    @classmethod
+    def slab_nbytes(cls, *, num_layers: int, num_blocks: int, block_size: int = 32,
+                    kv_heads: int = 8, head_dim: int = 128,
+                    dtype: np.dtype = DEFAULT_DTYPE) -> int:
+        """Bytes a cache with these dims allocates (one K and one V span
+        per block per layer) — the single source of truth callers use to
+        size address windows and KV footprints."""
+        return int(num_layers * num_blocks * 2 * block_size * kv_heads
+                   * head_dim * np.dtype(dtype).itemsize)
 
     # ------------------------------------------------------- descriptors
     def desc(self, layer: int) -> TensorDesc:

@@ -32,7 +32,9 @@ _TRANSITIONS: dict[RequestState, set[RequestState]] = {
     RequestState.QUEUED_DECODE: {RequestState.DECODING, RequestState.FAILED},
     RequestState.DECODING: {RequestState.DONE, RequestState.FAILED},
     RequestState.DONE: set(),
-    RequestState.FAILED: {RequestState.QUEUED_PREFILL},  # retry after worker failure
+    # retry after worker failure: full re-prefill, or straight back to
+    # KV_QUEUED when the prefill copy survived (decode-side failover)
+    RequestState.FAILED: {RequestState.QUEUED_PREFILL, RequestState.KV_QUEUED},
 }
 
 
@@ -42,6 +44,7 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     arrival_s: float = 0.0
+    slo_class: str = "standard"  # TTFT deadline class (sched.policies)
 
     state: RequestState = RequestState.QUEUED_PREFILL
     prefill_worker: str | None = None

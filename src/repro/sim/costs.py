@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.transfer_engine import LinkModel
+from repro.core.transfer_engine import KVDIRECT_UTIL, LinkModel
 from repro.models.config import ModelConfig
 
 __all__ = ["HardwareProfile", "H100_NODE", "V5E_POD_SLICE", "CostModel"]
@@ -114,7 +114,7 @@ class CostModel:
     #   400 Gbps link ≈ 44.5 %.  The engine microbenches reproduce the
     #   RATIO mechanistically; the simulator uses the paper's absolute
     #   utilizations so its latencies are commensurable with Figs. 13-17.
-    KVDIRECT_UTIL = 0.445
+    KVDIRECT_UTIL = KVDIRECT_UTIL  # shared anchor (core.transfer_engine)
     MESSAGE_UTIL_4KB = 0.018
     MESSAGE_UTIL_CAP = 0.136
 

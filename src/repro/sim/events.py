@@ -31,6 +31,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.sched.policies import Candidate, Policy, RouteRequest, make_policy
 from repro.serving.request import Request, RequestState
 from repro.sim.costs import CostModel
 from repro.sim.workloads import SimRequest
@@ -51,11 +52,18 @@ class SimConfig:
     # time, duplicate it on an idle worker; first finisher wins
     hedge_prefill: bool = False
     hedge_factor: float = 2.0
+    # scheduling: sched.policies name driving prefill/decode placement
+    # (round_robin | least_loaded | network_aware | slo)
+    policy: str = "least_loaded"
+    # TTFT deadline (s) for policy="slo": arrivals whose projected TTFT
+    # exceeds it are rejected at admission instead of degrading everyone
+    slo_s: float | None = None
 
 
 @dataclasses.dataclass
 class SimResults:
     requests: list[Request]
+    rejected: list[Request] = dataclasses.field(default_factory=list)
 
     def _metric(self, fn) -> list[float]:
         return [v for v in (fn(r) for r in self.requests) if v is not None]
@@ -67,6 +75,7 @@ class SimResults:
     def summary(self) -> dict[str, float]:
         return {
             "n": len(self.requests),
+            "n_rejected": len(self.rejected),
             "p50_total_s": self.p(50, lambda r: r.total_latency_s),
             "p90_total_s": self.p(90, lambda r: r.total_latency_s),
             "p50_ttft_s": self.p(50, lambda r: r.ttft_s),
@@ -123,7 +132,8 @@ class ClusterSim:
     """Heap-driven event loop.  Synchronous callbacks, deterministic."""
 
     def __init__(self, cost: CostModel, sim_cfg: SimConfig,
-                 *, prefill_slowdowns: dict[str, float] | None = None):
+                 *, prefill_slowdowns: dict[str, float] | None = None,
+                 link_scales: dict[tuple[str, str], float] | None = None):
         self.cost = cost
         self.cfg = sim_cfg
         self._heap: list = []
@@ -140,6 +150,19 @@ class ClusterSim:
         self.push_admission: list[Request] = []
         self._meta: dict[str, SimRequest] = {}
         self.finished: list[Request] = []
+        self.rejected: list[Request] = []
+        # per-(prefill, decode) link multiplier on transfer time — the
+        # skewed topology the network-aware policy exploits (NetKV)
+        self.link_scales = dict(link_scales or {})
+        if sim_cfg.policy == "slo":
+            if sim_cfg.slo_s is None:
+                raise ValueError(
+                    "SimConfig(policy='slo') requires slo_s — admission "
+                    "against an unconfigured default deadline would "
+                    "silently drop requests")
+            self.policy = make_policy("slo", classes={"standard": sim_cfg.slo_s})
+        else:
+            self.policy = make_policy(sim_cfg.policy)
 
     # ------------------------------------------------------------ events
     def _at(self, t: float, fn: Callable[[], None]) -> None:
@@ -151,12 +174,51 @@ class ClusterSim:
         while self._heap:
             self.now, _, fn = heapq.heappop(self._heap)
             fn()
-        return SimResults(self.finished)
+        return SimResults(self.finished, self.rejected)
+
+    # -------------------------------------------------------- scheduling
+    def _ctx(self, req: Request) -> RouteRequest:
+        return RouteRequest(
+            req.request_id, req.prompt_len,
+            kv_bytes=req.prompt_len * self.cost.kv_bytes_per_token(),
+            slo_class=req.slo_class, arrival_s=req.arrival_s,
+        )
+
+    def _pair_transfer_s(self, req: Request, decode_wid: str) -> float:
+        scale = 1.0
+        if req.prefill_worker is not None:
+            scale = self.link_scales.get((req.prefill_worker, decode_wid), 1.0)
+        return scale * self.cost.transfer_s(
+            req.prompt_len, mode=self.cfg.transfer_mode,
+            coalesce_factor=self.cfg.coalesce_factor)
+
+    def _projected_ttft_s(self, req: Request) -> float:
+        """Admission-time TTFT projection: mean backlog wait + own
+        prefill.  Deliberately NO transfer term — measured TTFT is the
+        first token, which this simulator emits at prefill completion
+        (before the KV pull), and the projection must target the same
+        definition or admission over-rejects."""
+        own = self.cost.prefill_s(req.prompt_len)
+        if self.cfg.mode == "colocated":
+            backlog = sum(self.cost.prefill_s(r.prompt_len)
+                          for d in self.decodes for r in d.kv_queue)
+            return backlog / max(len(self.decodes), 1) + own
+        backlog = sum(self.cost.prefill_s(r.prompt_len) for r in self.prefill_queue)
+        busy = sum(max(0.0, w.busy_until - self.now) for w in self.prefills)
+        return (busy + backlog) / max(len(self.prefills), 1) + own
 
     # ------------------------------------------------------- disagg flow
     def _arrive(self, sr: SimRequest) -> None:
         req = Request(sr.request_id, sr.prompt_len, sr.response_len, arrival_s=self.now)
         self._meta[sr.request_id] = sr
+        # Admission first, in EVERY mode (colocated must not silently
+        # bypass the SLO controller).  Projection is O(queue); only pay
+        # for it if the policy actually implements admission control.
+        if type(self.policy).admit is not Policy.admit and \
+                not self.policy.admit(self._ctx(req), self._projected_ttft_s(req)):
+            req.to(RequestState.FAILED)  # SLO admission: reject up front
+            self.rejected.append(req)
+            return
         if self.cfg.mode == "colocated":
             self._co_arrive(req)
             return
@@ -174,9 +236,14 @@ class ClusterSim:
     def _try_push_admissions(self) -> None:
         while self.push_admission:
             req = self.push_admission[0]
-            d = self._pick_decode()
-            if d.free_tokens() < self._reserved_tokens(req):
-                break  # decode pool exhausted by reservations: admissions stall
+            # only offer workers that can actually hold the reservation —
+            # a policy pick among non-fitting workers must not stall the
+            # queue while another worker has room
+            fitting = [d for d in self.decodes
+                       if d.free_tokens() >= self._reserved_tokens(req)]
+            if not fitting:
+                break  # decode pools exhausted by reservations: admissions stall
+            d = self._pick_decode(req, fitting)
             self.push_admission.pop(0)
             d.used_tokens += self._reserved_tokens(req)
             req.decode_worker = d.wid
@@ -189,25 +256,37 @@ class ClusterSim:
         extra = req.max_new_tokens if self.cfg.reserve_response else 0
         return req.prompt_len + extra
 
+    def _pick_prefill(self, req: Request, cands: list[_PrefillWorker]) -> _PrefillWorker:
+        chosen = self.policy.pick_prefill(self._ctx(req), [
+            Candidate(w.wid,
+                      free_units=w.cap_tokens - w.held_tokens,
+                      total_units=w.cap_tokens,
+                      ready_s=max(0.0, w.busy_until - self.now))
+            for w in cands
+        ])
+        return next(w for w in cands if w.wid == chosen.worker_id)
+
     def _try_start_prefills(self) -> None:
-        for w in self.prefills:
-            while self.prefill_queue and w.busy_until <= self.now:
-                req = self.prefill_queue[0]
-                need = req.prompt_len
-                if w.held_tokens + need > w.cap_tokens:
-                    break  # prefill-side HBM full: wait for COMPLETEs
-                self.prefill_queue.pop(0)
-                req.prefill_worker = w.wid
-                w.held_tokens += need
-                req.to(RequestState.PREFILLING)
-                req.prefill_start_s = self.now
-                nominal = self.cost.prefill_s(req.prompt_len)
-                dt = nominal * w.slowdown
-                w.busy_until = self.now + dt
-                self._at(w.busy_until, lambda req=req, w=w: self._prefill_done(req, w))
-                if self.cfg.hedge_prefill:
-                    self._at(self.now + self.cfg.hedge_factor * nominal,
-                             lambda req=req: self._maybe_hedge(req))
+        while self.prefill_queue:
+            req = self.prefill_queue[0]
+            cands = [w for w in self.prefills
+                     if w.busy_until <= self.now
+                     and w.held_tokens + req.prompt_len <= w.cap_tokens]
+            if not cands:
+                break  # every worker busy or HBM-full: wait
+            w = self._pick_prefill(req, cands)
+            self.prefill_queue.pop(0)
+            req.prefill_worker = w.wid
+            w.held_tokens += req.prompt_len
+            req.to(RequestState.PREFILLING)
+            req.prefill_start_s = self.now
+            nominal = self.cost.prefill_s(req.prompt_len)
+            dt = nominal * w.slowdown
+            w.busy_until = self.now + dt
+            self._at(w.busy_until, lambda req=req, w=w: self._prefill_done(req, w))
+            if self.cfg.hedge_prefill:
+                self._at(self.now + self.cfg.hedge_factor * nominal,
+                         lambda req=req: self._maybe_hedge(req))
 
     def _maybe_hedge(self, req: Request) -> None:
         """Straggler mitigation: the prefill blew past hedge_factor × its
@@ -238,8 +317,7 @@ class ClusterSim:
         req.token_times_s.append(self.now)  # first token from prefill
         if self.cfg.mode == "push":
             # transfer overlapped layer-by-layer; visible tail ≈ 1 layer
-            tail = self.cost.transfer_s(req.prompt_len, mode=self.cfg.transfer_mode,
-                                        coalesce_factor=self.cfg.coalesce_factor)
+            tail = self._pair_transfer_s(req, req.decode_worker)
             tail /= max(self.cost.cfg.num_layers, 1)
             req.to(RequestState.KV_TRANSFER)
             req.transfer_start_s, req.transfer_end_s = self.now, self.now + tail
@@ -247,15 +325,30 @@ class ClusterSim:
             self._at(req.transfer_end_s, lambda req=req: self._join_decode(req))
         else:
             req.to(RequestState.KV_QUEUED)
-            d = self._pick_decode()
+            # like the push path: don't offer exhausted workers to a
+            # cost-first policy while another has room (fall back to all
+            # when everyone is full — the request queues per §4.3)
+            need = self._reserved_tokens(req)
+            fitting = [x for x in self.decodes if x.free_tokens() >= need]
+            d = self._pick_decode(req, fitting or None)
             req.decode_worker = d.wid
             d.kv_queue.append(req)
             self._try_transfers(d, holder=w)
         self._try_start_prefills()
 
-    def _pick_decode(self) -> _DecodeWorker:
-        return min(self.decodes, key=lambda d: d.used_tokens + sum(
-            r.prompt_len for r in d.kv_queue))
+    def _pick_decode(self, req: Request,
+                     cands: list[_DecodeWorker] | None = None) -> _DecodeWorker:
+        cands = self.decodes if cands is None else cands
+        chosen = self.policy.pick_decode(self._ctx(req), [
+            Candidate(d.wid,
+                      free_units=d.free_tokens(),
+                      total_units=d.cap_tokens,
+                      queued_units=sum(r.prompt_len for r in d.kv_queue),
+                      resident=len(d.active),
+                      transfer_cost_s=self._pair_transfer_s(req, d.wid))
+            for d in cands
+        ])
+        return next(d for d in cands if d.wid == chosen.worker_id)
 
     def _try_transfers(self, d: _DecodeWorker, holder: _PrefillWorker | None = None) -> None:
         while d.kv_queue:
@@ -266,8 +359,7 @@ class ClusterSim:
             d.kv_queue.pop(0)
             d.used_tokens += need
             req.to(RequestState.KV_TRANSFER)
-            dt = self.cost.transfer_s(req.prompt_len, mode=self.cfg.transfer_mode,
-                                      coalesce_factor=self.cfg.coalesce_factor)
+            dt = self._pair_transfer_s(req, d.wid)
             start = max(self.now, d.nic_free_at)
             d.nic_free_at = start + dt
             req.transfer_start_s, req.transfer_end_s = start, start + dt
@@ -321,7 +413,7 @@ class ClusterSim:
 
     # --------------------------------------------------- colocated (vLLM)
     def _co_arrive(self, req: Request) -> None:
-        d = self._pick_decode()
+        d = self._pick_decode(req)
         req.decode_worker = d.wid
         d.kv_queue.append(req)
         if not d.iterating:

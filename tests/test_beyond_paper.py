@@ -54,20 +54,20 @@ class TestInt8TransportCodec:
         dst = np.zeros_like(src)
         eng = TransferEngine(codec="int8_transport")
         eng.register_memory(MemoryRegion("p", 0, src))
-        eng.register_memory(MemoryRegion("d", 0, dst))
+        eng.register_memory(MemoryRegion("d", src.nbytes, dst))
         return eng, vals, dst
 
     def test_halves_wire_bytes(self):
         eng, vals, dst = self._engines()
         n = vals.nbytes
-        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, n), ByteRange(0, n))])
+        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, n), ByteRange(n, n))])
         eng.drain()
         assert eng.stats.bytes_moved == n // 2 + 4
 
     def test_error_bounded(self):
         eng, vals, dst = self._engines()
         n = vals.nbytes
-        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, n), ByteRange(0, n))])
+        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, n), ByteRange(n, n))])
         eng.drain()
         got = dst.view(BF16).astype(np.float32)
         ref = vals.astype(np.float32)
@@ -80,7 +80,7 @@ class TestInt8TransportCodec:
         dst = np.zeros_like(src)
         eng = TransferEngine()  # codec none
         eng.register_memory(MemoryRegion("p", 0, src))
-        eng.register_memory(MemoryRegion("d", 0, dst))
-        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, 4096), ByteRange(0, 4096))])
+        eng.register_memory(MemoryRegion("d", 4096, dst))
+        eng.submit([ReadTxn("r", "p", "d", ByteRange(0, 4096), ByteRange(4096, 4096))])
         eng.drain()
         np.testing.assert_array_equal(dst, src)

@@ -1,5 +1,7 @@
 """Block pool: invariants (hypothesis), reservation semantics, contiguity."""
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -9,7 +9,12 @@
 3. Transfer engine: for ANY program of reads (+ final COMPLETEs), the
    destination buffer equals the oracle scatter/gather result.
 """
+import dataclasses
+
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -125,9 +130,16 @@ def test_engine_matches_oracle(window, strategy):
 
     eng = TransferEngine(coalescing=strategy)
     dst = dst0.copy()
+    # disjoint address spaces: rebase the destination MR and the local
+    # ranges by the same constant (the engine rejects overlapping MRs)
+    base = n_pages * page
     eng.register_memory(MemoryRegion("p", 0, src))
-    eng.register_memory(MemoryRegion("d", 0, dst))
-    eng.submit(txns)
+    eng.register_memory(MemoryRegion("d", base, dst))
+    shifted = [
+        dataclasses.replace(t, local=ByteRange(t.local.offset + base, t.local.nbytes))
+        for t in txns
+    ]
+    eng.submit(shifted)
     eng.drain()
     np.testing.assert_array_equal(dst, expect)
     assert eng.stats.reads_posted <= len(txns)

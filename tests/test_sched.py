@@ -1,0 +1,449 @@
+"""Scheduling subsystem: load reports, policies, router, N x M serving.
+
+Acceptance anchors:
+  (a) the network-aware policy beats round-robin on modeled aggregate
+      transfer cost for a skewed topology/workload;
+  (b) the SLO admission controller keeps admitted-request projected TTFT
+      under the deadline while round-robin admits violations;
+plus end-to-end failover for both roles, liveness-driven (reap_dead)
+failover, monotonic worker ids, and MR overlap rejection.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cluster import ClusterScheduler
+from repro.core.connection import ChipInfo, WorkerInfo
+from repro.core.transfer_engine import LinkModel, MemoryRegion, TransferEngine
+from repro.models.registry import build_model
+from repro.sched import (
+    AdmissionRejected,
+    Candidate,
+    LoadReport,
+    NetworkAwarePolicy,
+    RequestRouter,
+    RoundRobinPolicy,
+    RouteRequest,
+    SLOAwarePolicy,
+    make_policy,
+)
+from repro.sched.policies import LeastLoadedPolicy
+from repro.serving.blocks import OutOfBlocks
+from repro.serving.disagg import DisaggService
+from repro.serving.request import RequestState
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import fixed_requests
+
+
+def winfo(wid, role):
+    return WorkerInfo(wid, role, f"host-{wid}", (ChipInfo(0, f"ici://{wid}/0"),))
+
+
+def cluster(n_prefill=2, n_decode=2, *, free=64, total=64):
+    cs = ClusterScheduler()
+    for i in range(n_prefill):
+        cs.add_worker(winfo(f"p{i}", "prefill"))
+        cs.heartbeat(f"p{i}", 0.0, load=LoadReport(f"p{i}", "prefill", free, total))
+    for i in range(n_decode):
+        cs.add_worker(winfo(f"d{i}", "decode"))
+        cs.heartbeat(f"d{i}", 0.0, load=LoadReport(f"d{i}", "decode", free, total))
+    return cs
+
+
+def ctx(rid="r0", prompt=256, kv_bytes=1 << 20, slo="standard"):
+    return RouteRequest(rid, prompt, kv_bytes=kv_bytes, slo_class=slo)
+
+
+# ---------------------------------------------------------------- load
+class TestLoadPiggyback:
+    def test_heartbeat_carries_load_report(self):
+        cs = ClusterScheduler()
+        cs.add_worker(winfo("p0", "prefill"))
+        rep = LoadReport("p0", "prefill", free_blocks=10, total_blocks=64,
+                         queued_tokens=96, t=1.0)
+        cs.heartbeat("p0", 1.0, load=rep)
+        assert cs.load("p0") is rep
+        assert cs.loads("prefill") == {"p0": rep}
+        assert rep.queued_blocks == 3
+        cs.remove_worker("p0")
+        assert cs.load("p0") is None
+
+    def test_plain_heartbeat_keeps_previous_report(self):
+        cs = ClusterScheduler()
+        cs.add_worker(winfo("d0", "decode"))
+        rep = LoadReport("d0", "decode", 5, 64)
+        cs.heartbeat("d0", 1.0, load=rep)
+        cs.heartbeat("d0", 2.0)  # liveness-only ping
+        assert cs.load("d0") is rep
+
+
+# ------------------------------------------------------------- policies
+class TestPolicies:
+    def test_round_robin_cycles(self):
+        p = RoundRobinPolicy()
+        cands = [Candidate("d1"), Candidate("d0")]
+        picks = [p.pick_decode(ctx(), cands).worker_id for _ in range(4)]
+        assert picks == ["d0", "d1", "d0", "d1"]
+
+    def test_least_loaded_counts_queue(self):
+        p = LeastLoadedPolicy()
+        cands = [
+            Candidate("d0", free_units=32, total_units=64, queued_units=40),
+            Candidate("d1", free_units=30, total_units=64, queued_units=0),
+        ]
+        # d0 has more free blocks but a deep queue — d1 wins
+        assert p.pick_decode(ctx(), cands).worker_id == "d1"
+
+    def test_network_aware_minimizes_transfer_cost(self):
+        p = NetworkAwarePolicy()
+        cands = [
+            Candidate("d0", free_units=64, total_units=64, transfer_cost_s=0.010),
+            Candidate("d1", free_units=10, total_units=64, transfer_cost_s=0.002),
+        ]
+        assert p.pick_decode(ctx(), cands).worker_id == "d1"
+
+    def test_slo_admission_boundary(self):
+        p = SLOAwarePolicy({"interactive": 0.5, "batch": float("inf")})
+        assert p.admit(ctx(slo="interactive"), 0.4)
+        assert not p.admit(ctx(slo="interactive"), 0.6)
+        assert p.admit(ctx(slo="batch"), 1e9)
+
+    def test_make_policy_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown policy"):
+            make_policy("lifo")
+
+
+# --------------------------------------------------------------- router
+class TestRouter:
+    def test_routes_to_least_loaded(self):
+        cs = cluster(2, 2)
+        cs.heartbeat("p0", 0.0, load=LoadReport("p0", "prefill", 4, 64))
+        cs.heartbeat("d1", 0.0, load=LoadReport("d1", "decode", 4, 64))
+        r = RequestRouter(cs, "least_loaded")
+        d = r.route(ctx())
+        assert d.prefill_worker == "p1" and d.decode_worker == "d0"
+
+    def test_network_aware_beats_round_robin_on_transfer_cost(self):
+        """Acceptance (a): skewed workload — all KV lands on one hot
+        prefill worker whose link to d1 is ~10x slower; the
+        network-aware router's aggregate modeled transfer cost must come
+        out well below round-robin's (which alternates onto the slow
+        path half the time)."""
+        fast, slow = LinkModel.ici(), LinkModel(bandwidth_Bps=5e9, post_overhead_s=2e-5)
+        links = {("p0", "d0"): fast, ("p0", "d1"): slow}
+        costs = {}
+        for pol in ("round_robin", "network_aware"):
+            r = RequestRouter(cluster(1, 2), pol, links=links)
+            for i in range(16):
+                r.route(ctx(f"r{i}", prompt=4096, kv_bytes=32 << 20), now=float(i))
+            costs[pol] = r.total_transfer_cost_s
+        assert costs["network_aware"] < 0.5 * costs["round_robin"]
+
+    def test_slo_admission_keeps_projected_ttft_under_deadline(self):
+        """Acceptance (b): under a burst, every ADMITTED request's
+        projected TTFT stays under the deadline (the rest are rejected),
+        while round-robin admits requests that already miss it."""
+        deadline = 0.5
+        prefill_fn = lambda n: 0.2  # 0.2 s per prefill, burst at t=0
+
+        slo = RequestRouter(cluster(2, 2), "slo", prefill_time_fn=prefill_fn,
+                            classes={"interactive": deadline})
+        admitted, rejected = [], 0
+        for i in range(12):
+            try:
+                admitted.append(slo.route(ctx(f"r{i}", slo="interactive"), now=0.0))
+            except AdmissionRejected:
+                rejected += 1
+        assert admitted and rejected
+        assert all(d.projected_ttft_s <= deadline for d in admitted)
+
+        rr = RequestRouter(cluster(2, 2), "round_robin", prefill_time_fn=prefill_fn)
+        rr_decisions = [rr.route(ctx(f"r{i}", slo="interactive"), now=0.0)
+                        for i in range(12)]
+        assert any(d.projected_ttft_s > deadline for d in rr_decisions)
+
+    def test_backlog_queues_and_drains(self):
+        prefill_fn = lambda n: 0.2
+        r = RequestRouter(cluster(1, 1), "slo", prefill_time_fn=prefill_fn,
+                          classes={"interactive": 0.5})
+        routed = [r.route(ctx(f"r{i}", slo="interactive"), now=0.0,
+                          queue_on_reject=True) for i in range(4)]
+        assert sum(d is not None for d in routed) == 2  # 0.2s, 0.4s fit
+        assert len(r.backlog) == 2
+        assert r.drain_backlog(now=0.0) == []  # still saturated
+        drained = r.drain_backlog(now=10.0)   # ledger drained by then
+        assert len(drained) == 2 and not r.backlog
+
+    def test_forget_retires_ledger_charge(self):
+        """Regression: a completed prefill must stop counting against
+        future SLO admission projections."""
+        r = RequestRouter(cluster(1, 1), "slo", prefill_time_fn=lambda n: 0.3,
+                          classes={"interactive": 0.5})
+        r.route(ctx("a", slo="interactive"), now=0.0)
+        with pytest.raises(AdmissionRejected):
+            r.route(ctx("b", slo="interactive"), now=0.0)  # a still charged
+        r.forget("a")  # a's prefill completed
+        d = r.route(ctx("c", slo="interactive"), now=0.0)
+        assert d is not None and d.projected_ttft_s <= 0.5
+
+    def test_no_workers_raises(self):
+        from repro.sched import NoWorkersError
+
+        cs = ClusterScheduler()
+        cs.add_worker(winfo("p0", "prefill"))
+        with pytest.raises(NoWorkersError):
+            RequestRouter(cs).route(ctx())
+
+
+# ------------------------------------------------------ transfer engine
+class TestMemoryRegionOverlap:
+    def test_overlapping_mrs_rejected(self):
+        eng = TransferEngine()
+        eng.register_memory(MemoryRegion("p0", 0x1000, np.zeros(4096, np.uint8)))
+        with pytest.raises(ValueError, match="overlaps"):
+            eng.register_memory(MemoryRegion("p1", 0x1800, np.zeros(4096, np.uint8)))
+
+    def test_disjoint_mrs_accepted(self):
+        eng = TransferEngine()
+        eng.register_memory(MemoryRegion("p0", 0x1000, np.zeros(4096, np.uint8)))
+        eng.register_memory(MemoryRegion("p1", 0x2000, np.zeros(4096, np.uint8)))
+
+
+# ------------------------------------------------- end-to-end (real model)
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestMultiWorkerService:
+    def test_n_by_m_round_robin_spreads_both_roles(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=2,
+                            num_blocks=64, policy="round_robin")
+        rng = np.random.default_rng(0)
+        reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+                for _ in range(2)]
+        assert {r.prefill_worker for r in reqs} == {"p0", "p1"}
+        assert {r.decode_worker for r in reqs} == {"d0", "d1"}
+        for r in reqs:
+            out = svc.generate(r, max_new=2)
+            assert len(out) == 3 and r.state == RequestState.DONE
+
+    def test_worker_slabs_are_disjoint(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=3, n_decode=2, num_blocks=64)
+        spans = sorted(
+            (w.cache.base_address, w.cache.base_address + w.cache.nbytes)
+            for w in [*svc.prefills.values(), *svc.decodes.values()]
+        )
+        for (_, hi), (lo, _) in zip(spans, spans[1:]):
+            assert hi <= lo
+
+    def test_worker_ids_monotonic_after_failure(self, service_setup):
+        """Regression: p0 must NOT be reminted after fail_prefill_worker
+        (the old id would collide with the dead worker's epoch)."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1, num_blocks=64)
+        svc.fail_prefill_worker("p0")
+        wid = svc.add_prefill_worker(num_blocks=64)
+        assert wid == "p2"
+        assert set(svc.prefills) == {"p1", "p2"}
+        # and the fresh worker is connected + usable
+        rng = np.random.default_rng(1)
+        svc.prefills["p1"].pool.allocate(60)  # saturate p1 so p2 is picked
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 32).astype(np.int32))
+        assert req.prefill_worker == "p2"
+        assert len(svc.generate(req, max_new=2)) == 3
+
+    def test_decode_failover_kv_queued(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(2)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        victim, survivor = req.decode_worker, None
+        svc.fail_decode_worker(victim)
+        survivor = req.decode_worker
+        assert survivor != victim and survivor in svc.decodes
+        assert req.retries == 1 and req.state == RequestState.KV_QUEUED
+        assert len(svc.generate(req, max_new=2)) == 3
+
+    def test_decode_failover_resident_restarts_from_prefill(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(3)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        assert svc.admit_to_decode(req)
+        victim = req.decode_worker
+        svc.fail_decode_worker(victim)
+        # pulled KV died with the worker; request re-prefilled + re-routed
+        assert req.decode_worker != victim
+        assert req.retries == 1 and req.state == RequestState.KV_QUEUED
+        assert len(svc.generate(req, max_new=2)) == 3
+
+    def test_failover_capacity_exhaustion_parks_and_revives(self, service_setup):
+        """Regression: when the survivor can't hold every re-prefill,
+        OutOfBlocks must not escape the membership broadcast — overflow
+        requests park as FAILED and revive via retry_parked()."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1, num_blocks=8)
+        rng = np.random.default_rng(6)
+        reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+                for _ in range(6)]  # 2 blocks each: both workers 6/8 full
+        svc.fail_prefill_worker("p0")  # must not raise
+        live = [r for r in reqs if r.state == RequestState.KV_QUEUED]
+        parked = [r for r in reqs if r.state == RequestState.FAILED]
+        assert parked and live  # survivor absorbed some, not all
+        assert all(r.prefill_worker == "p1" for r in live)
+        for cm in svc.conn_mgrs.values():
+            assert cm.peers == ("p1",)  # teardown completed despite overflow
+        with pytest.raises(RuntimeError, match="parked"):
+            svc.generate(parked[0], max_new=2)  # meaningful, not KeyError
+        for r in live:  # draining live requests frees survivor capacity
+            assert len(svc.generate(r, max_new=2)) == 3
+        assert set(svc.retry_parked()) == {r.request_id for r in parked}
+        for r in parked:
+            assert len(svc.generate(r, max_new=2)) == 3
+
+    def test_admit_out_of_blocks_keeps_kv_queued_and_retries(self, service_setup):
+        """Regression: a full decode pool must leave the request in
+        KV_QUEUED (not strand it in KV_TRANSFER) so the retry path
+        works once capacity frees."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(9)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        hog = svc.decode.pool.allocate(63)  # leave 1 free block (need 2)
+        with pytest.raises(OutOfBlocks):
+            svc.generate(req, max_new=2)
+        assert req.state == RequestState.KV_QUEUED
+        svc.decode.pool.free(hog)
+        assert len(svc.generate(req, max_new=2)) == 3  # retry succeeds
+
+    def test_reap_multiple_dead_no_cascading_restarts(self, service_setup):
+        """Regression: when several workers lapse, failover must not
+        re-route in-flight work onto a dead-but-not-yet-reaped worker
+        (one wasted prefill per cascade step)."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=3, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(10)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32),
+                         now=0.0)
+        assert req.prefill_worker == "p0"  # least-loaded tie-break
+        svc.scheduler.heartbeat("p2", 10.0)
+        svc.scheduler.heartbeat("d0", 10.0)
+        dead = svc.reap_dead(10.0)
+        assert set(dead) == {"p0", "p1"}
+        assert req.prefill_worker == "p2"
+        assert req.retries == 1  # exactly one re-route, no p1 detour
+        assert len(svc.generate(req, max_new=2)) == 3
+
+    def test_graceful_removal_migrates_requests(self, service_setup):
+        """Regression: scale-DOWN (removed, not failed) must migrate
+        in-flight requests too, for both roles."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(8)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        victim = req.prefill_worker
+        svc.scheduler.remove_worker(victim)  # graceful drain
+        assert req.prefill_worker != victim
+        req2 = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        victim2 = req2.decode_worker
+        svc.scheduler.remove_worker(victim2)
+        assert req2.decode_worker != victim2
+        assert len(svc.generate(req, max_new=2)) == 3
+        assert len(svc.generate(req2, max_new=2)) == 3
+
+    def test_last_decode_worker_death_parks_request(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(7)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        svc.fail_decode_worker("d0")
+        assert req.state == RequestState.FAILED and req.decode_worker is None
+        with pytest.raises(RuntimeError, match="parked"):
+            svc.generate(req, max_new=2)
+        kept_blocks = list(req.prefill_blocks)
+        assert kept_blocks  # prefill KV survived the decode failure
+        svc.add_decode_worker(num_blocks=64)
+        assert svc.retry_parked() == [req.request_id]
+        # revived WITHOUT recomputing prefill: same blocks, no extra retry
+        assert req.prefill_blocks == kept_blocks and req.retries == 1
+        assert len(svc.generate(req, max_new=2)) == 3
+
+    def test_reap_dead_drives_end_to_end_failover(self, service_setup):
+        """Liveness path: lapsed heartbeat → reap_dead → epoch
+        invalidation → router re-routes the in-flight request."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(4)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32),
+                         now=0.0)
+        victim = req.prefill_worker
+        for wid in [*svc.prefills, *svc.decodes]:
+            if wid != victim:
+                svc.scheduler.heartbeat(wid, 10.0)
+        dead = svc.reap_dead(10.0)  # timeout 5s: only the victim lapsed
+        assert dead == [victim]
+        assert victim not in svc.prefills
+        assert req.prefill_worker != victim and req.retries == 1
+        out = svc.generate(req, max_new=2)
+        assert len(out) == 3 and req.state == RequestState.DONE
+
+    def test_slo_service_rejects_and_serves(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64,
+                            policy="slo", prefill_time_fn=lambda n: 0.3,
+                            slo_classes={"interactive": 0.5})
+        rng = np.random.default_rng(5)
+        tok = lambda: rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        req = svc.submit(tok(), slo_class="interactive", now=0.0)
+        with pytest.raises(AdmissionRejected):
+            svc.submit(tok(), slo_class="interactive", now=0.0)
+        assert len(svc.generate(req, max_new=2)) == 3
+
+
+# ------------------------------------------------------------- simulator
+class TestSimPolicies:
+    @pytest.fixture(scope="class")
+    def cost(self):
+        from repro.configs import get_config
+
+        return CostModel(get_config("mistral-large-123b"), H100_NODE)
+
+    @pytest.mark.parametrize("policy", ["round_robin", "least_loaded", "network_aware"])
+    def test_all_requests_finish_under_every_policy(self, cost, policy):
+        reqs = fixed_requests(8192, 64, qps=1.0, duration_s=60, seed=8)
+        sim = ClusterSim(cost, SimConfig(n_prefill=2, n_decode=2, policy=policy))
+        res = sim.run(list(reqs))
+        assert len(res.requests) == len(reqs) and not res.rejected
+        for d in sim.decodes:
+            assert d.used_tokens == 0 and not d.active
+
+    def test_network_aware_beats_round_robin_under_skew(self, cost):
+        # hot prefill worker, one slow decode path: round-robin sends
+        # half the pulls over the 5x-slower link, network-aware none
+        reqs = fixed_requests(32768, 64, qps=0.5, duration_s=120, seed=9)
+        scales = {("p0", "d1"): 5.0}
+        out = {}
+        for pol in ("round_robin", "network_aware"):
+            sim = ClusterSim(cost, SimConfig(n_prefill=1, n_decode=2, policy=pol),
+                             link_scales=scales)
+            out[pol] = sim.run(list(reqs)).summary()["mean_total_s"]
+        assert out["network_aware"] < out["round_robin"]
+
+    def test_slo_admission_bounds_served_ttft_at_overload(self, cost):
+        reqs = fixed_requests(40000, 64, qps=1.0, duration_s=120, seed=10)
+        base = ClusterSim(cost, SimConfig(n_prefill=1, n_decode=1,
+                                          policy="round_robin")).run(list(reqs)).summary()
+        slo = ClusterSim(cost, SimConfig(n_prefill=1, n_decode=1, policy="slo",
+                                         slo_s=10.0)).run(list(reqs))
+        s = slo.summary()
+        assert s["n_rejected"] > 0                  # overload: some rejected
+        assert s["p90_ttft_s"] < base["p90_ttft_s"]  # survivors protected
+        assert s["p90_ttft_s"] < 15.0

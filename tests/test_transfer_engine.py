@@ -7,17 +7,20 @@ from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn
 from repro.core.transfer_engine import LinkModel, MemoryRegion, TransferEngine
 
 
+DST_BASE = 1 << 20  # MRs must be disjoint in the engine's flat address space
+
+
 def make_engine(mode="tensor_centric", **kw):
     eng = TransferEngine(mode=mode, **kw)
     src = np.arange(64 * 1024, dtype=np.uint8) % 251
     dst = np.zeros(64 * 1024, dtype=np.uint8)
     eng.register_memory(MemoryRegion("p0", 0, src))
-    eng.register_memory(MemoryRegion("d0", 0, dst))
+    eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
     return eng, src, dst
 
 
 def read(rid, roff, loff, n=4096):
-    return ReadTxn(rid, "p0", "d0", ByteRange(roff, n), ByteRange(loff, n))
+    return ReadTxn(rid, "p0", "d0", ByteRange(roff, n), ByteRange(DST_BASE + loff, n))
 
 
 class TestByteMovement:
