@@ -192,13 +192,18 @@ class TensorDesc:
 class ReadTxn:
     """One-sided read: pull ``remote`` on ``src_worker`` into ``local`` on
     ``dst_worker``.  Posted by the decode worker; the prefill worker does
-    no work (§4.1 Fig. 7b)."""
+    no work (§4.1 Fig. 7b).
+
+    ``layer`` optionally tags which model layer this read belongs to:
+    layer-streamed pulls submit layer 0 first and the engine reports
+    per-layer completion on the request's ``TransferFuture``."""
 
     request_id: str
     src_worker: str
     dst_worker: str
     remote: ByteRange
     local: ByteRange
+    layer: int | None = None
 
     def __post_init__(self) -> None:
         if self.remote.nbytes != self.local.nbytes:
@@ -230,6 +235,7 @@ def build_block_reads(
     local_blocks: Sequence[int],
     *,
     block_dim: str = "B",
+    layer: int | None = None,
 ) -> Iterator[ReadTxn]:
     """TRANSFER(): translate (remote block id → local block id) pairs into
     read transactions using only descriptor arithmetic — the decode worker
@@ -260,4 +266,5 @@ def build_block_reads(
                 dst_worker=local_desc.worker_id,
                 remote=remote_ranges[pos],
                 local=local_ranges[pos],
+                layer=layer,
             )

@@ -24,13 +24,50 @@ from __future__ import annotations
 from typing import Sequence
 
 from repro.core.connection import Connection
-from repro.core.descriptors import CompleteTxn, build_block_reads
-from repro.core.transfer_engine import TransferEngine, TransferStats
+from repro.core.descriptors import CompleteTxn, Txn, build_block_reads
+from repro.core.transfer_engine import TransferEngine, TransferFuture, TransferStats
 from repro.serving.blocks import BlockPool
 from repro.serving.kv_cache import PagedKVCache, SlotCache
 from repro.serving.request import Request, RequestState
 
-__all__ = ["pull_kv", "push_reserve", "push_layer", "push_finish", "pull_state"]
+__all__ = ["pull_kv", "pull_kv_async", "push_reserve", "push_layer", "push_finish",
+           "pull_state"]
+
+
+def _allocate_decode_blocks(
+    req: Request, decode_pool: BlockPool, preallocated: list[int] | None
+) -> None:
+    n = len(req.prefill_blocks)
+    if preallocated is not None:
+        if len(preallocated) != n:
+            raise ValueError(f"need {n} preallocated blocks, got {len(preallocated)}")
+        req.decode_blocks = preallocated
+    else:
+        req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
+
+
+def _pull_txns(req: Request, conn: Connection, decode_cache: PagedKVCache) -> list[Txn]:
+    """Layer-streamed transaction list: layer 0's reads first, every read
+    tagged with its layer (per-layer completion lands on the future), a
+    single COMPLETE at the tail."""
+    txns: list[Txn] = []
+    for layer in range(decode_cache.num_layers):
+        remote = conn.desc(f"layer{layer}/kv")
+        local = decode_cache.desc(layer)
+        txns.extend(
+            build_block_reads(
+                req.request_id, remote, local, req.prefill_blocks,
+                req.decode_blocks, layer=layer,
+            )
+        )
+    txns.append(
+        CompleteTxn(
+            request_id=req.request_id,
+            src_worker=conn.prefill_worker,
+            dst_worker=conn.decode_worker,
+        )
+    )
+    return txns
 
 
 def pull_kv(
@@ -52,32 +89,32 @@ def pull_kv(
     is exactly pull-mode's utilization win).  Callers that must fail
     BEFORE any request state changes pass ``preallocated`` blocks.
     """
-    n = len(req.prefill_blocks)
-    if preallocated is not None:
-        if len(preallocated) != n:
-            raise ValueError(f"need {n} preallocated blocks, got {len(preallocated)}")
-        req.decode_blocks = preallocated
-    else:
-        req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
+    _allocate_decode_blocks(req, decode_pool, preallocated)
     req.connection_epoch = conn.epoch
-    txns = []
-    for layer in range(decode_cache.num_layers):
-        remote = conn.desc(f"layer{layer}/kv")
-        local = decode_cache.desc(layer)
-        txns.extend(
-            build_block_reads(
-                req.request_id, remote, local, req.prefill_blocks, req.decode_blocks
-            )
-        )
-    txns.append(
-        CompleteTxn(
-            request_id=req.request_id,
-            src_worker=conn.prefill_worker,
-            dst_worker=conn.decode_worker,
-        )
-    )
-    engine.submit(txns)
+    engine.submit(_pull_txns(req, conn, decode_cache))
     return engine.drain() if drain else engine.stats
+
+
+def pull_kv_async(
+    req: Request,
+    *,
+    conn: Connection,
+    engine: TransferEngine,
+    decode_pool: BlockPool,
+    decode_cache: PagedKVCache,
+    preallocated: list[int] | None = None,
+) -> TransferFuture:
+    """Non-blocking pull: same allocation contract and byte movement as
+    ``pull_kv`` but nothing executes yet — the caller advances the
+    transfer with ``engine.progress()`` (interleaved with decode compute)
+    and observes completion through the returned future, per layer via
+    ``future.layers_done`` and per request via ``future.done()``."""
+    _allocate_decode_blocks(req, decode_pool, preallocated)
+    req.connection_epoch = conn.epoch
+    engine.submit(_pull_txns(req, conn, decode_cache))
+    fut = engine.future(req.request_id)
+    assert fut is not None  # just submitted, cannot have resolved
+    return fut
 
 
 def pull_state(
@@ -97,7 +134,8 @@ def pull_state(
         remote = conn.desc(f"layer{layer}/state")
         local = decode_cache.desc(layer)
         txns.extend(
-            build_block_reads(req.request_id, remote, local, [remote_slot], [local_slot])
+            build_block_reads(req.request_id, remote, local, [remote_slot],
+                              [local_slot], layer=layer)
         )
     txns.append(
         CompleteTxn(

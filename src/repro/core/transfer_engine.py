@@ -36,7 +36,15 @@ import numpy as np
 from repro.core.coalesce import CoalescedRead, coalesce
 from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn, Txn
 
-__all__ = ["KVDIRECT_UTIL", "LinkModel", "TransferStats", "MemoryRegion", "TransferEngine"]
+__all__ = [
+    "KVDIRECT_UTIL",
+    "LinkModel",
+    "TransferStats",
+    "MemoryRegion",
+    "TransferEngine",
+    "TransferFuture",
+    "ConnectionTornError",
+]
 
 # Paper Fig. 15: KVDirect sustains 22.23 GB/s of a 400 Gbps link ≈ 44.5 %
 # effective utilization.  Single source of truth — the simulator's cost
@@ -121,6 +129,79 @@ class TransferStats:
         return self.bytes_moved / self.modeled_time_s if self.modeled_time_s else 0.0
 
 
+class ConnectionTornError(KeyError):
+    """An MR was torn down (or never registered) while transactions
+    referencing it were still in flight.  Subclasses ``KeyError`` for
+    backward compatibility with callers that caught the engine's old bare
+    ``KeyError``; carries the torn worker and the affected request ids so
+    the serving layer can park / re-route those requests cleanly."""
+
+    def __init__(self, worker_id: str, request_ids: Sequence[str]) -> None:
+        self.worker_id = worker_id
+        self.request_ids = tuple(request_ids)
+        super().__init__(
+            f"unregistered worker {worker_id!r} with transactions in flight "
+            f"for requests {self.request_ids} (connection torn down?)"
+        )
+
+    def __str__(self) -> str:  # KeyError.__str__ repr-quotes; keep it readable
+        return self.args[0]
+
+
+class TransferFuture:
+    """Completion handle for one request's in-flight transfer.
+
+    Resolves when the request's COMPLETE executes (success) or when an MR
+    it depends on is torn down mid-transfer (failure, ``exception()`` is a
+    ``ConnectionTornError``).  ``layers_done`` exposes layer-streamed
+    progress: a layer index appears as soon as every read tagged with it
+    has executed, so layer-0 KV is observable before the pull finishes.
+    """
+
+    __slots__ = ("request_id", "_resolved", "_error", "_layers_done", "_cbs")
+
+    def __init__(self, request_id: str) -> None:
+        self.request_id = request_id
+        self._resolved = False
+        self._error: Exception | None = None
+        self._layers_done: list[int] = []
+        self._cbs: list[Callable[["TransferFuture"], None]] = []
+
+    def done(self) -> bool:
+        return self._resolved
+
+    @property
+    def failed(self) -> bool:
+        return self._resolved and self._error is not None
+
+    def exception(self) -> Exception | None:
+        return self._error
+
+    @property
+    def layers_done(self) -> tuple[int, ...]:
+        return tuple(self._layers_done)
+
+    def result(self) -> str:
+        """The request id, or raises the transfer's error.  Raises
+        ``RuntimeError`` if the transfer is still in flight (call
+        ``progress()``/``drain()`` first — there is no blocking wait)."""
+        if not self._resolved:
+            raise RuntimeError(f"transfer of {self.request_id!r} still in flight")
+        if self._error is not None:
+            raise self._error
+        return self.request_id
+
+    def add_done_callback(self, cb: Callable[["TransferFuture"], None]) -> None:
+        if self._resolved:
+            cb(self)
+        else:
+            self._cbs.append(cb)
+
+    def __repr__(self) -> str:
+        state = ("failed" if self.failed else "done") if self._resolved else "pending"
+        return f"TransferFuture({self.request_id!r}, {state}, layers={self._layers_done})"
+
+
 @dataclasses.dataclass
 class MemoryRegion:
     """A registered MR: a worker's slab of 'HBM' the engine may touch."""
@@ -140,7 +221,15 @@ class MemoryRegion:
 
 
 class TransferEngine:
-    """Drains a transaction queue into coalesced one-sided reads.
+    """Event-driven transaction queue drained into coalesced one-sided reads.
+
+    The engine is incremental: ``submit()`` returns a ``TransferFuture``
+    per request, ``progress(budget)`` executes up to ``budget`` queued
+    transactions (so a decode worker can interleave transfer work with
+    decode compute), ``poll()`` drains the completion queue of futures
+    that resolved since the last poll, and ``drain()`` is simply
+    progress-until-empty for legacy blocking callers — byte movement is
+    identical either way.
 
     Ordering rules (§4.2):
       * reads are asynchronous and may complete out of order ACROSS
@@ -152,6 +241,11 @@ class TransferEngine:
       * COMPLETEs on one connection are serialized by an ACK so a later
         COMPLETE cannot overwrite an unconsumed mailbox slot (WAW).
         Reads are never blocked by a pending ACK.
+
+    Teardown during transfer: ``deregister_memory`` drops every queued
+    transaction touching the torn MR and fails the affected requests'
+    futures with ``ConnectionTornError`` (instead of surfacing a bare
+    ``KeyError`` later in ``_copy``), so the serving layer can re-route.
     """
 
     def __init__(
@@ -184,6 +278,19 @@ class TransferEngine:
         self._regions: dict[str, MemoryRegion] = {}
         self._queue: collections.deque[Txn] = collections.deque()
         self._outstanding_reads: collections.Counter[str] = collections.Counter()
+        self._outstanding_layer: collections.Counter[tuple[str, int]] = collections.Counter()
+        self._futures: dict[str, TransferFuture] = {}  # unresolved, by request
+        # Completion notifications are a convenience view — the futures
+        # themselves carry the resolved state — so the queue is bounded:
+        # blocking callers that never poll() must not leak one entry per
+        # request served over a long-lived engine.
+        self._completions: collections.deque[TransferFuture] = collections.deque(
+            maxlen=4096)
+        # Requests torn mid-execution whose CompleteTxn is still queued:
+        # that COMPLETE must be swallowed, not executed — the bytes never
+        # fully landed, so completion callbacks (prefill-side free!) must
+        # not fire for it.
+        self._torn_completes: set[str] = set()
         self._complete_cbs: list[Callable[[CompleteTxn], None]] = []
         self.stats = TransferStats()
 
@@ -205,38 +312,150 @@ class TransferEngine:
         self._regions[region.worker_id] = region
 
     def deregister_memory(self, worker_id: str) -> None:
+        """Tear down a worker's MR.  Queued transactions that reference it
+        are dropped and the affected requests' futures fail with
+        ``ConnectionTornError`` — a crash mid-pull becomes a typed, per-
+        request failure the serving layer can re-route, not a late
+        ``KeyError`` deep in ``_copy``."""
         self._regions.pop(worker_id, None)
+        if not self._queue:
+            return
+        survivors: collections.deque[Txn] = collections.deque()
+        torn: list[Txn] = []
+        for t in self._queue:
+            if t.src_worker == worker_id or t.dst_worker == worker_id:
+                torn.append(t)
+            else:
+                survivors.append(t)
+        if not torn:
+            return
+        self._queue = survivors
+        torn_rids: dict[str, None] = {}  # ordered set
+        for t in torn:
+            torn_rids[t.request_id] = None
+            if isinstance(t, ReadTxn):
+                self._outstanding_reads[t.request_id] -= 1
+                if t.layer is not None:
+                    key = (t.request_id, t.layer)
+                    self._outstanding_layer[key] -= 1
+                    if self._outstanding_layer[key] <= 0:
+                        del self._outstanding_layer[key]  # dropped, NOT done
+            else:
+                # its COMPLETE was dropped with the reads: a future re-pull
+                # under the same request id must not have ITS complete
+                # swallowed by a stale torn marker
+                self._torn_completes.discard(t.request_id)
+        for rid in torn_rids:
+            fut = self._futures.get(rid)
+            if fut is not None:
+                self._resolve(fut, ConnectionTornError(worker_id, (rid,)))
 
     def on_complete(self, cb: Callable[[CompleteTxn], None]) -> None:
         self._complete_cbs.append(cb)
 
     # ------------------------------------------------------------ submit
-    def submit(self, txns: Iterable[Txn]) -> None:
+    def submit(self, txns: Iterable[Txn]) -> list[TransferFuture]:
+        """Enqueue transactions; returns the futures newly created by this
+        call (one per request id not already in flight).  Existing callers
+        that ignore the return value are unaffected."""
+        created: list[TransferFuture] = []
         for t in txns:
             if isinstance(t, ReadTxn):
                 self._outstanding_reads[t.request_id] += 1
+                if t.layer is not None:
+                    self._outstanding_layer[(t.request_id, t.layer)] += 1
                 self.stats.txns_submitted += 1
+            if t.request_id not in self._futures:
+                fut = TransferFuture(t.request_id)
+                self._futures[t.request_id] = fut
+                created.append(fut)
             self._queue.append(t)
+        return created
+
+    def future(self, request_id: str) -> TransferFuture | None:
+        """The unresolved future for ``request_id``, if any."""
+        return self._futures.get(request_id)
+
+    @property
+    def pending(self) -> int:
+        """Queued transactions not yet executed."""
+        return len(self._queue)
+
+    # ----------------------------------------------------------- resolve
+    def _resolve(self, fut: TransferFuture, error: Exception | None = None) -> None:
+        fut._resolved = True
+        fut._error = error
+        self._futures.pop(fut.request_id, None)
+        self._completions.append(fut)
+        for cb in fut._cbs:
+            cb(fut)
+        fut._cbs.clear()
+
+    def poll(self) -> list[TransferFuture]:
+        """Futures resolved (success or failure) since the last poll."""
+        out = list(self._completions)
+        self._completions.clear()
+        return out
+
+    # ---------------------------------------------------------- progress
+    def progress(self, budget: int | None = None) -> int:
+        """Execute up to ``budget`` queued transactions (all of them when
+        ``budget`` is None) and return how many were processed.  This is
+        the incremental heart of the engine: a decode worker calls it
+        between decode steps so transfer time hides behind compute.
+
+        A budget may split what would have been one coalescing window —
+        bytes moved are identical, only ``reads_posted`` can differ from a
+        one-shot ``drain()``."""
+        processed = 0
+        while self._queue and (budget is None or processed < budget):
+            if isinstance(self._queue[0], CompleteTxn):
+                self._do_complete(self._queue.popleft())  # type: ignore[arg-type]
+                processed += 1
+                continue
+            window: list[ReadTxn] = []
+            room = None if budget is None else budget - processed
+            while self._queue and isinstance(self._queue[0], ReadTxn) and (
+                    room is None or len(window) < room):
+                window.append(self._queue.popleft())  # type: ignore[arg-type]
+            if self.mode == "tensor_centric":
+                self._post_reads(window)
+            else:
+                self._message_rounds(window)
+            processed += len(window)
+        return processed
 
     # ------------------------------------------------------------- drain
     def drain(self) -> TransferStats:
-        """Process the whole queue.  Returns cumulative stats."""
+        """Process the whole queue (progress-until-empty).  Returns
+        cumulative stats — the legacy blocking API."""
         while self._queue:
-            window: list[ReadTxn] = []
-            while self._queue and isinstance(self._queue[0], ReadTxn):
-                window.append(self._queue.popleft())  # type: ignore[arg-type]
-            if window:
-                if self.mode == "tensor_centric":
-                    self._post_reads(window)
-                else:
-                    self._message_rounds(window)
-            if self._queue and isinstance(self._queue[0], CompleteTxn):
-                self._do_complete(self._queue.popleft())  # type: ignore[arg-type]
+            self.progress()
         return self.stats
+
+    def _filter_torn(self, window: Sequence[ReadTxn]) -> tuple[list[ReadTxn], ConnectionTornError | None]:
+        """Split out reads whose MR is gone (stale submission after a
+        teardown): fail their futures NOW and keep the healthy remainder,
+        so one torn request cannot poison requests sharing its window.
+        Returns (healthy reads, first torn error or None)."""
+        if not self.execute_copies:
+            return list(window), None  # timed-only engines never touch MRs
+        healthy: list[ReadTxn] = []
+        first: ConnectionTornError | None = None
+        for t in window:
+            missing = next((w for w in (t.src_worker, t.dst_worker)
+                            if w not in self._regions), None)
+            if missing is None:
+                healthy.append(t)
+            else:
+                err = self._torn(missing, t)
+                first = first or err
+        return healthy, first
 
     # --------------------------------------------------- tensor-centric
     def _post_reads(self, window: Sequence[ReadTxn]) -> None:
-        merged = coalesce(window, strategy=self.coalescing)
+        healthy, torn_err = self._filter_torn(window)
+        merged = coalesce(healthy, strategy=self.coalescing)
         t0 = time.perf_counter()
         for op in merged:
             self._copy(op)
@@ -245,17 +464,22 @@ class TransferEngine:
             self.stats.bytes_moved += wire
             self.stats.modeled_time_s += self.link.read_time(wire)
         self.stats.wall_time_s += time.perf_counter() - t0
-        for t in window:
-            self._outstanding_reads[t.request_id] -= 1
+        # torn reads are accounted too — consumed (future already failed),
+        # not executed — so a queued COMPLETE for them stays inert instead
+        # of raising "reads still queued"
+        self._account_executed(window)
+        if torn_err is not None:
+            raise torn_err
 
     # ---------------------------------------------------- message mode
     def _message_rounds(self, window: Sequence[ReadTxn]) -> None:
         """Fig. 7a: bounded staging buffer, per-round RPC + gather + send +
         scatter + notify, with REAL double copies under memcpy."""
+        healthy, torn_err = self._filter_torn(window)
         t0 = time.perf_counter()
         round_txns: list[ReadTxn] = []
         round_bytes = 0
-        for t in list(window) + [None]:  # type: ignore[list-item]
+        for t in list(healthy) + [None]:  # type: ignore[list-item]
             flush = t is None or (round_bytes + t.nbytes > self.staging_bytes and round_txns)
             if flush and round_txns:
                 staging = np.empty(round_bytes, dtype=np.uint8) if self.execute_copies else None
@@ -279,15 +503,56 @@ class TransferEngine:
                 round_txns.append(t)
                 round_bytes += t.nbytes
         self.stats.wall_time_s += time.perf_counter() - t0
-        for t in window:
-            self._outstanding_reads[t.request_id] -= 1
+        self._account_executed(window)
+        if torn_err is not None:
+            raise torn_err
 
     # ------------------------------------------------------------ common
+    def _account_executed(self, window: Sequence[ReadTxn]) -> None:
+        """Post-execution bookkeeping: outstanding-read counters and
+        per-layer completion marks on the requests' futures."""
+        for t in window:
+            self._outstanding_reads[t.request_id] -= 1
+            if t.layer is None:
+                continue
+            key = (t.request_id, t.layer)
+            self._outstanding_layer[key] -= 1
+            if self._outstanding_layer[key] <= 0:
+                del self._outstanding_layer[key]
+                fut = self._futures.get(t.request_id)
+                if fut is not None:
+                    fut._layers_done.append(t.layer)
+
+    @staticmethod
+    def _op_request_ids(op: ReadTxn | CoalescedRead) -> tuple[str, ...]:
+        if isinstance(op, ReadTxn):
+            return (op.request_id,)
+        return tuple(dict.fromkeys(op.request_ids))
+
+    def _torn(self, worker_id: str, op: ReadTxn | CoalescedRead) -> ConnectionTornError:
+        """Fail the affected futures and build the typed error.  The
+        requests' queued COMPLETEs are marked for swallowing: their bytes
+        never fully landed, so completion callbacks must not fire."""
+        rids = self._op_request_ids(op)
+        err = ConnectionTornError(worker_id, rids)
+        for rid in rids:
+            self._torn_completes.add(rid)
+            fut = self._futures.get(rid)
+            if fut is not None:
+                self._resolve(fut, err)
+        return err
+
     def _src_view(self, op: ReadTxn | CoalescedRead) -> np.ndarray:
-        return self._regions[op.src_worker].view(op.remote)
+        region = self._regions.get(op.src_worker)
+        if region is None:
+            raise self._torn(op.src_worker, op)
+        return region.view(op.remote)
 
     def _dst_view(self, op: ReadTxn | CoalescedRead) -> np.ndarray:
-        return self._regions[op.dst_worker].view(op.local)
+        region = self._regions.get(op.dst_worker)
+        if region is None:
+            raise self._torn(op.dst_worker, op)
+        return region.view(op.local)
 
     def _copy(self, op: CoalescedRead) -> None:
         if not self.execute_copies:
@@ -295,10 +560,7 @@ class TransferEngine:
         src = self._regions.get(op.src_worker)
         dst = self._regions.get(op.dst_worker)
         if src is None or dst is None:
-            raise KeyError(
-                f"unregistered worker in read {op.src_worker!r}->{op.dst_worker!r} "
-                f"(connection torn down?)"
-            )
+            raise self._torn(op.src_worker if src is None else op.dst_worker, op)
         if self.codec == "none":
             dst.view(op.local)[...] = src.view(op.remote)
             return
@@ -312,6 +574,12 @@ class TransferEngine:
         dst.view(op.local)[...] = deq.view(np.uint8)
 
     def _do_complete(self, txn: CompleteTxn) -> None:
+        if txn.request_id in self._torn_completes:
+            # the transfer failed mid-flight (future already failed):
+            # swallow its COMPLETE so the prefill side keeps the only
+            # surviving KV copy for the re-route
+            self._torn_completes.discard(txn.request_id)
+            return
         if self._outstanding_reads[txn.request_id] > 0:
             raise RuntimeError(
                 f"COMPLETE for {txn.request_id!r} with "
@@ -324,3 +592,6 @@ class TransferEngine:
         self.stats.modeled_time_s += self.link.ack_rtt_s
         for cb in self._complete_cbs:
             cb(txn)
+        fut = self._futures.get(txn.request_id)
+        if fut is not None:
+            self._resolve(fut)

@@ -225,6 +225,62 @@ class RequestRouter:
             routed.append(decision)
         return routed
 
+    # --------------------------------------------------------- admission
+    def plan_admissions(
+        self,
+        queued: Iterable[tuple[RouteRequest, str]],
+        *,
+        max_batch: int | None = None,
+    ) -> dict[str, list[str]]:
+        """Batch KV_QUEUED admissions per decode worker.
+
+        ``queued`` is (request, assigned decode worker) for every request
+        whose prefill KV is ready to pull.  Instead of the serving layer
+        admitting them one call at a time, the router hands back one batch
+        per worker — FIFO by arrival, capped by the worker's reported free
+        blocks (each batch is admissible as a whole, so the decode worker
+        can submit every pull before any byte moves and let the transfers
+        pipeline behind decode compute) and optionally by ``max_batch``
+        (None or 0 = uncapped, matching ``SimConfig.admission_batch``).
+        A worker's batch is strictly head-of-line: when its oldest queued
+        request doesn't fit the remaining budget, the worker admits
+        nothing behind it — admitting younger, smaller requests around it
+        would starve it indefinitely under a steady small-request stream
+        (the same FIFO-fairness contract as ``DecodeWorker.admit_batch``).
+        The one exception is a request larger than the worker's TOTAL
+        capacity: it can never fit there, so it is skipped rather than
+        wedging the worker forever.  Requests that don't fit stay
+        KV_QUEUED for the next planning round; their prefill-side KV
+        stays alive meanwhile (§4.3)."""
+        max_batch = max_batch or None  # 0 means uncapped, like the sim knob
+        batches: dict[str, list[str]] = {}
+        budget: dict[str, float] = {}
+        reports: dict[str, LoadReport | None] = {}  # one snapshot per worker
+        closed: set[str] = set()  # head-of-line blocked this round
+        # Stable sort on arrival only: ties keep the caller's submission
+        # order (a request_id tie-break would sort "r10" before "r2").
+        for ctx, wid in sorted(queued, key=lambda q: q[0].arrival_s):
+            if wid in closed:
+                continue
+            if wid not in reports:
+                reports[wid] = self.scheduler.load(wid)
+                rep = reports[wid]
+                budget[wid] = float("inf") if rep is None else float(rep.free_blocks)
+            rep = reports[wid]
+            batch = batches.setdefault(wid, [])
+            if max_batch is not None and len(batch) >= max_batch:
+                closed.add(wid)
+                continue
+            needed = -(-ctx.prompt_len // max(rep.block_size, 1)) if rep else 0
+            if rep is not None and needed > rep.total_blocks:
+                continue  # can NEVER fit this worker: don't wedge its queue
+            if budget[wid] < needed:
+                closed.add(wid)  # head of line waits; nobody jumps it
+                continue
+            budget[wid] -= needed
+            batch.append(ctx.request_id)
+        return {wid: rids for wid, rids in batches.items() if rids}
+
     # ---------------------------------------------------------- failover
     def reassign_decode(self, ctx: RouteRequest, prefill_worker: str) -> str:
         """Re-pick only the decode side for an already-routed request

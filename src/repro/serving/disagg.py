@@ -221,6 +221,9 @@ class DisaggService:
         req.retries += 1
         if req.prefill_blocks and req.prefill_worker in self.prefills:
             self.prefills[req.prefill_worker].release(req)  # stale live copy
+        dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
+        if dw is not None:
+            dw.abort(req.request_id)  # drop a dead in-flight pull, free blocks
         req.prefill_blocks = []
         req.decode_blocks = []
         if req.state is not RequestState.QUEUED_PREFILL:
@@ -346,6 +349,115 @@ class DisaggService:
         except OutOfBlocks:
             return False
         return True
+
+    # -------------------------------------------------- batched admission
+    def admit_queued(self, *, max_batch: int | None = None,
+                     only: set[str] | None = None) -> dict[str, list[str]]:
+        """Router-planned admission batches: every KV_QUEUED request
+        (restricted to ``only`` when given) is grouped by its assigned
+        decode worker (capacity-capped, FIFO by arrival) and its pull is
+        SUBMITTED — not drained.  The transfers advance via ``pump()`` /
+        the decode workers' interleaved rounds, so transfer time hides
+        behind decode compute.  Returns the request ids actually admitted
+        per worker."""
+        self._report_loads()
+        queued = [
+            (self._ctx(req), req.decode_worker)
+            for req, _ in self.pending.values()
+            if req.state is RequestState.KV_QUEUED
+            and req.decode_worker in self.decodes
+            and (only is None or req.request_id in only)
+        ]
+        if not queued:
+            return {}
+        plan = self.router.plan_admissions(queued, max_batch=max_batch)
+        admitted: dict[str, list[str]] = {}
+        for wid, rids in plan.items():
+            dw = self.decodes[wid]
+            cm = self.conn_mgrs[wid]
+            batch = [
+                (self.pending[rid][0],
+                 cm.connection(self.pending[rid][0].prefill_worker),
+                 self.first_tokens[rid])
+                for rid in rids
+            ]
+            futures = dw.admit_batch(batch)
+            if futures:
+                admitted[wid] = [f.request_id for f in futures]
+        return admitted
+
+    def pump(self, budget: int | None = None) -> list[str]:
+        """Advance in-flight pulls on every decode worker; returns request
+        ids promoted to DECODING."""
+        promoted: list[str] = []
+        for dw in list(self.decodes.values()):
+            promoted.extend(dw.pump(budget))
+        return promoted
+
+    def generate_many(self, reqs: list[Request], max_new: int = 8, *,
+                      pump_budget: int | None = 32) -> dict[str, list[int]]:
+        """Overlapped serving loop for a set of submitted requests:
+        batched admission per decode worker, decode rounds interleaved
+        with transfer progress (wave N's decode hides wave N+1's pulls),
+        each request decoded for ``max_new`` tokens then finished.
+
+        The loop only nudges the engine by ``pump_budget`` transactions
+        per pass — the bulk of the transfer work is done INSIDE
+        ``decode_round`` between decode steps, which is where the hiding
+        happens.  Only when no worker has anything resident to decode
+        (first wave, or a transfer-bound tail) does it run the engine
+        freely — there is no compute to overlap with.
+
+        One driver per decode worker: ``decode_round`` batches ALL of a
+        worker's residents, so requests made resident by a concurrent
+        caller would be decoded here with their tokens discarded — don't
+        interleave ``generate_many`` with other admission/decode drivers
+        on the same workers (admission of requests outside ``reqs`` is
+        already excluded via ``only=``).
+
+        Requests parked by failover (no capacity) are skipped — revive
+        them with ``retry_parked()`` and call again.  Returns
+        request_id → [first_token, *decoded] for every finished request."""
+        remaining = {r.request_id: r for r in reqs}
+        results: dict[str, list[int]] = {}
+        while remaining:
+            for rid, req in list(remaining.items()):
+                if req.state in (RequestState.FAILED, RequestState.DONE):
+                    remaining.pop(rid)  # parked (or externally finished)
+            if not remaining:
+                break
+            # only OUR requests: a concurrent caller's KV_QUEUED request
+            # must not be admitted (and its tokens silently dropped) here
+            admitted = bool(self.admit_queued(only=set(remaining)))
+            promoted = bool(self.pump(pump_budget))
+            decoded = False
+            for wid, dw in list(self.decodes.items()):
+                round_ids = [rid for rid in dw.resident if rid in remaining]
+                if not round_ids:
+                    continue
+                # pumps in-flight pulls between decode steps
+                out = dw.decode_round(max_new, pump_budget=pump_budget)
+                for rid in round_ids:
+                    req = remaining.pop(rid)
+                    dw.finish(rid)
+                    self.pending.pop(rid, None)
+                    self.router.forget(rid)
+                    results[rid] = [self.first_tokens.pop(rid)] + out[rid]
+                decoded = True
+            if decoded or not remaining:
+                continue
+            if self.engine.pending:
+                # nothing resident anywhere: no compute to hide behind, so
+                # run the engine directly — worker pump()s only progress
+                # their OWN inflight pulls and would spin on foreign txns
+                self.engine.progress()
+                self.pump(0)  # promote whatever resolved
+            elif not (admitted or promoted):
+                stuck = ", ".join(sorted(remaining))
+                raise RuntimeError(
+                    f"generate_many stalled: {stuck} cannot be admitted "
+                    "(decode pools too small for the request?)")
+        return results
 
     def generate(self, req: Request, max_new: int = 8) -> list[int]:
         if req.state is RequestState.FAILED:

@@ -14,16 +14,17 @@ consume the same caches, descriptors, and engine.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.connection import Connection, DescriptorRegistry, WorkerInfo
-from repro.core.pull_push import pull_kv
-from repro.core.transfer_engine import TransferEngine
+from repro.core.pull_push import pull_kv_async
+from repro.core.transfer_engine import TransferEngine, TransferFuture
 from repro.models.transformer import DecodeState
-from repro.serving.blocks import BlockPool
+from repro.serving.blocks import BlockPool, OutOfBlocks
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState
 
@@ -86,6 +87,20 @@ class _Resident:
     blocks: list[int]
     context_len: int
     last_token: int
+    # float32 page cache built lazily from the slab: [L, n, bs, heads, hd].
+    # Rebuilt only when blocks are appended — decode_round no longer
+    # re-gathers and re-casts every resident block every round.
+    k_cached: np.ndarray | None = None
+    v_cached: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """An admission whose KV pull is still in the air."""
+
+    req: Request
+    first_token: int
+    future: TransferFuture
 
 
 class DecodeWorker:
@@ -110,27 +125,135 @@ class DecodeWorker:
         self.engine = engine or TransferEngine()
         self.engine.register_memory(self.cache.memory_region())
         self.resident: dict[str, _Resident] = {}
+        self.inflight: dict[str, _InFlight] = {}
 
     # ------------------------------------------------------------ admit
-    def admit(self, req: Request, conn: Connection, first_token: int) -> None:
-        """Pull-mode admission: allocate, TRANSFER all layers, COMPLETE.
+    def admit_async(self, req: Request, conn: Connection, first_token: int) -> TransferFuture:
+        """Event-driven pull-mode admission: allocate, submit the layer-
+        streamed pull, return immediately.  The transfer advances when the
+        worker calls ``pump()`` (typically interleaved with decode steps),
+        and the request is promoted to DECODING the moment its future
+        resolves.
 
         Allocation happens BEFORE any state transition so an OutOfBlocks
         failure leaves the request exactly as it was (KV_QUEUED, prefill
         KV alive) — the caller's retry contract depends on it."""
         blocks = self.pool.allocate(len(req.prefill_blocks))  # may raise
         req.to(RequestState.KV_TRANSFER)
-        pull_kv(req, conn=conn, engine=self.engine,
-                decode_pool=self.pool, decode_cache=self.cache,
-                preallocated=blocks)
-        req.to(RequestState.QUEUED_DECODE)
-        self.resident[req.request_id] = _Resident(
-            req, req.decode_blocks, req.prompt_len, first_token)
-        req.to(RequestState.DECODING)
+        fut = pull_kv_async(req, conn=conn, engine=self.engine,
+                            decode_pool=self.pool, decode_cache=self.cache,
+                            preallocated=blocks)
+        self.inflight[req.request_id] = _InFlight(req, first_token, fut)
+        return fut
+
+    def admit_batch(
+        self, admissions: Sequence[tuple[Request, Connection, int]]
+    ) -> list[TransferFuture]:
+        """Admit a batch of KV_QUEUED requests in one go: every pull is
+        submitted before any byte moves, so the whole batch pipelines
+        behind decode compute instead of serializing admission-by-
+        admission (coalescing itself stays per-request — each COMPLETE
+        ends a window).  Admits in order, stopping at the first request
+        that doesn't fit (FIFO fairness — later arrivals must not starve
+        it); returns the futures of the admitted prefix."""
+        futures: list[TransferFuture] = []
+        for req, conn, first_token in admissions:
+            try:
+                futures.append(self.admit_async(req, conn, first_token))
+            except OutOfBlocks:
+                break
+        return futures
+
+    def admit(self, req: Request, conn: Connection, first_token: int) -> None:
+        """Blocking admission (legacy): submit the pull and drain it to
+        completion before returning.  Byte-identical to the async path —
+        it IS the async path, progressed until resolved."""
+        fut = self.admit_async(req, conn, first_token)
+        try:
+            self.engine.drain()
+        except Exception:
+            # drain may raise ANOTHER request's torn error; only clean up
+            # our admission if OUR pull actually died (abort requires a
+            # resolved future — queued reads must not write freed blocks)
+            if fut.failed:
+                self.abort(req.request_id)
+            raise
+        if fut.failed:
+            self.abort(req.request_id)
+            raise fut.exception()
+        self.pump(0)  # promote (no more transfer work to do)
+        assert req.request_id in self.resident
+
+    def abort(self, request_id: str) -> bool:
+        """Drop an in-flight admission whose pull died (connection torn /
+        failover): free the decode-side blocks and forget the entry.  The
+        caller must only abort once the future is resolved — queued reads
+        into the freed blocks would otherwise still execute."""
+        fl = self.inflight.pop(request_id, None)
+        if fl is None:
+            return False
+        if fl.req.decode_blocks:
+            self.pool.free(fl.req.decode_blocks)
+            fl.req.decode_blocks = []
+        return True
+
+    # -------------------------------------------------------------- pump
+    def pump(self, budget: int | None = None) -> list[str]:
+        """Advance in-flight pulls by up to ``budget`` transactions and
+        promote every request whose future resolved to DECODING.  Returns
+        the promoted request ids.  Failed futures (torn connections) are
+        aborted here — their requests stay in KV_TRANSFER for the serving
+        layer's failover to re-route."""
+        if self.inflight and self.engine.pending:
+            self.engine.progress(budget)
+        self.engine.poll()  # keep the shared completion queue drained
+        promoted: list[str] = []
+        for rid, fl in list(self.inflight.items()):
+            if not fl.future.done():
+                continue
+            if fl.future.failed:
+                self.abort(rid)  # one owner for the torn-pull cleanup
+                continue
+            del self.inflight[rid]
+            req = fl.req
+            req.to(RequestState.QUEUED_DECODE)
+            self.resident[rid] = _Resident(
+                req, req.decode_blocks, req.prompt_len, fl.first_token)
+            req.to(RequestState.DECODING)
+            promoted.append(rid)
+        return promoted
 
     # ------------------------------------------------------------ decode
+    def _gather_pages(self, blocks: list[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Slab → float32 pages for ``blocks``: [L, n, bs, heads, hd]."""
+        cfg = self.model.cfg
+        k = np.empty((cfg.num_layers, len(blocks), self.block_size,
+                      cfg.num_kv_heads, cfg.head_dim), np.float32)
+        v = np.empty_like(k)
+        for layer in range(cfg.num_layers):
+            kplane, vplane = self.cache.kv_planes(layer)  # [blocks, bs, g, hd]
+            k[layer] = kplane[blocks].astype(np.float32)
+            v[layer] = vplane[blocks].astype(np.float32)
+        return k, v
+
+    def _resident_pages(self, r: _Resident) -> tuple[np.ndarray, np.ndarray]:
+        """Per-request page cache: gather/cast from the slab only for
+        blocks not seen before, reuse the rest.  Today a resident's block
+        list is fixed at promotion, so the append branch runs once; it
+        future-proofs decode-time block growth / layer-streamed
+        consumption without a rewrite."""
+        cached = 0 if r.k_cached is None else r.k_cached.shape[1]
+        if cached < len(r.blocks):
+            k_new, v_new = self._gather_pages(r.blocks[cached:])
+            r.k_cached = k_new if r.k_cached is None else np.concatenate(
+                [r.k_cached, k_new], axis=1)
+            r.v_cached = v_new if r.v_cached is None else np.concatenate(
+                [r.v_cached, v_new], axis=1)
+        return r.k_cached, r.v_cached
+
     def _build_state(self, batch: list[_Resident], margin_blocks: int) -> DecodeState:
-        """Assemble a per-seq paged DecodeState from slab views."""
+        """Assemble a per-seq paged DecodeState from the residents' page
+        caches (slab reads only for newly pulled blocks)."""
         cfg = self.model.cfg
         bs = self.block_size
         L = cfg.num_layers
@@ -138,12 +261,11 @@ class DecodeWorker:
         b = len(batch)
         k_pages = np.zeros((L, b, per_seq, bs, cfg.num_kv_heads, cfg.head_dim), np.float32)
         v_pages = np.zeros_like(k_pages)
-        for layer in range(L):
-            kplane, vplane = self.cache.kv_planes(layer)  # [blocks, bs, g, hd]
-            for i, r in enumerate(batch):
-                n = len(r.blocks)
-                k_pages[layer, i, :n] = kplane[r.blocks].astype(np.float32)
-                v_pages[layer, i, :n] = vplane[r.blocks].astype(np.float32)
+        for i, r in enumerate(batch):
+            k, v = self._resident_pages(r)
+            n = len(r.blocks)
+            k_pages[:, i, :n] = k[:, :n]
+            v_pages[:, i, :n] = v[:, :n]
         tables = np.broadcast_to(np.arange(per_seq, dtype=np.int32)[None], (b, per_seq))
         return DecodeState(
             context_lens=jnp.asarray([r.context_len for r in batch], jnp.int32),
@@ -152,17 +274,27 @@ class DecodeWorker:
             block_tables=jnp.asarray(tables),
         )
 
-    def decode_round(self, max_new: int = 8) -> dict[str, list[int]]:
+    def decode_round(self, max_new: int = 8, *,
+                     pump_budget: int | None = 32) -> dict[str, list[int]]:
         """Continuous-batching decode until every resident request has
-        produced ``max_new`` tokens or finished.  Returns generated ids."""
+        produced ``max_new`` tokens or finished.  Returns generated ids.
+
+        Between decode steps the worker pumps the transfer engine by
+        ``pump_budget`` transactions, so in-flight pulls make progress
+        behind decode compute; requests whose pull resolves mid-round are
+        promoted immediately and join the batch at the next round."""
         if not self.resident:
-            return {}
+            self.pump(pump_budget)
+            if not self.resident:
+                return {}
         batch = list(self.resident.values())
         state = self._build_state(batch, margin_blocks=-(-max_new // self.block_size))
         tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
         out: dict[str, list[int]] = {r.req.request_id: [] for r in batch}
         for _ in range(max_new):
             logits, state = self.model.decode_step(self.params, state, tokens)
+            if self.inflight:
+                self.pump(pump_budget)  # transfer hides behind the step
             tokens = jnp.argmax(
                 logits[:, : self.model.cfg.vocab_size].astype(jnp.float32), axis=-1
             ).astype(jnp.int32)

@@ -144,3 +144,12 @@ class CostModel:
         if mode == "message":
             return total_bytes / (self._message_util(span) * bw)
         raise ValueError(mode)
+
+    def transfer_layer_tail_s(self, prompt_len: int, **kw) -> float:
+        """Visible tail of a LAYER-STREAMED transfer: the consumer may
+        start on layer 0 while layers 1..L-1 are still in flight, so the
+        un-overlappable part is one layer's share.  Applies to paged KV
+        and to per-layer SSM state alike (``pull_state``/``push_layer``
+        both move one layer at a time) — the same tail the sim's push
+        path has always modeled, now shared with the overlapped pull."""
+        return self.transfer_s(prompt_len, **kw) / max(self.cfg.num_layers, 1)

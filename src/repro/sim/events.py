@@ -58,6 +58,28 @@ class SimConfig:
     # TTFT deadline (s) for policy="slo": arrivals whose projected TTFT
     # exceeds it are rejected at admission instead of degrading everyone
     slo_s: float | None = None
+    # Transfer-engine model (pull mode): how a decode worker's KV pulls
+    # interact with its decode iterations.
+    #   "pipelined"  — pulls serialize on the NIC but never block decode;
+    #                  a request joins decode when its whole pull lands.
+    #   "blocking"   — the synchronous engine: the worker sits in drain()
+    #                  for the whole pull, so decode iterations and
+    #                  transfers mutually exclude on the worker.
+    #   "overlapped" — the async engine with layer-streamed pull: decode
+    #                  never blocks AND a request joins decode once its
+    #                  layer-0 KV lands (visible tail = one layer's
+    #                  share); COMPLETE — and the prefill-side free —
+    #                  still waits for the last byte.  NOTE: the engine
+    #                  exposes per-layer completion (future.layers_done)
+    #                  but the real decode step does not consume it yet
+    #                  (ROADMAP: layer-streamed decode consumption), so
+    #                  today's serving path realizes the admission/NIC
+    #                  overlap of this mode while its layer-0 join models
+    #                  the engine's exposed-but-unconsumed capability.
+    transfer_overlap: str = "pipelined"
+    # max KV_QUEUED admissions started per scheduling opportunity
+    # (0 = admit everything that fits; 1 = one-shot admission)
+    admission_batch: int = 0
 
 
 @dataclasses.dataclass
@@ -67,6 +89,12 @@ class SimResults:
 
     def _metric(self, fn) -> list[float]:
         return [v for v in (fn(r) for r in self.requests) if v is not None]
+
+    @staticmethod
+    def _ttft_kv(r: Request) -> float | None:
+        if r.decode_start_s is None:
+            return None
+        return r.decode_start_s - r.arrival_s
 
     def p(self, q: float, fn) -> float:
         vals = self._metric(fn)
@@ -82,6 +110,11 @@ class SimResults:
             "p90_ttft_s": self.p(90, lambda r: r.ttft_s),
             "p50_tbt_s": self.p(50, lambda r: r.tbt_s),
             "p90_tbt_s": self.p(90, lambda r: r.tbt_s),
+            # KV-inclusive TTFT (paper §5.1: TTFT "includes the waiting
+            # time for the KV cache"): arrival → request decodable on the
+            # decode worker.  The metric the transfer-overlap engine moves.
+            "p50_ttft_kv_s": self.p(50, self._ttft_kv),
+            "p90_ttft_kv_s": self.p(90, self._ttft_kv),
             "mean_total_s": float(np.mean(self._metric(lambda r: r.total_latency_s) or [np.nan])),
         }
 
@@ -121,6 +154,8 @@ class _DecodeWorker:
         self.active: list[Request] = []
         self.kv_queue: list[Request] = []      # pull: waiting for decode KV
         self.nic_free_at = 0.0
+        self.pull_busy_until = 0.0  # blocking engine: worker stuck in drain()
+        self.iter_end = 0.0         # end of the in-flight decode iteration
         self.iterating = False
         self.cfg = cfg
 
@@ -154,6 +189,10 @@ class ClusterSim:
         # per-(prefill, decode) link multiplier on transfer time — the
         # skewed topology the network-aware policy exploits (NetKV)
         self.link_scales = dict(link_scales or {})
+        if sim_cfg.transfer_overlap not in ("pipelined", "blocking", "overlapped"):
+            raise ValueError(
+                f"transfer_overlap must be pipelined|blocking|overlapped, "
+                f"got {sim_cfg.transfer_overlap!r}")
         if sim_cfg.policy == "slo":
             if sim_cfg.slo_s is None:
                 raise ValueError(
@@ -184,11 +223,21 @@ class ClusterSim:
             slo_class=req.slo_class, arrival_s=req.arrival_s,
         )
 
+    def _link_scale(self, req: Request, decode_wid: str) -> float:
+        if req.prefill_worker is None:
+            return 1.0
+        return self.link_scales.get((req.prefill_worker, decode_wid), 1.0)
+
     def _pair_transfer_s(self, req: Request, decode_wid: str) -> float:
-        scale = 1.0
-        if req.prefill_worker is not None:
-            scale = self.link_scales.get((req.prefill_worker, decode_wid), 1.0)
-        return scale * self.cost.transfer_s(
+        return self._link_scale(req, decode_wid) * self.cost.transfer_s(
+            req.prompt_len, mode=self.cfg.transfer_mode,
+            coalesce_factor=self.cfg.coalesce_factor)
+
+    def _pair_layer_tail_s(self, req: Request, decode_wid: str) -> float:
+        """Layer-streamed pull: delay from transfer start to the request
+        becoming decodable (layer 0 landed; later layers hide behind the
+        per-layer decode pipeline)."""
+        return self._link_scale(req, decode_wid) * self.cost.transfer_layer_tail_s(
             req.prompt_len, mode=self.cfg.transfer_mode,
             coalesce_factor=self.cfg.coalesce_factor)
 
@@ -317,8 +366,7 @@ class ClusterSim:
         req.token_times_s.append(self.now)  # first token from prefill
         if self.cfg.mode == "push":
             # transfer overlapped layer-by-layer; visible tail ≈ 1 layer
-            tail = self._pair_transfer_s(req, req.decode_worker)
-            tail /= max(self.cost.cfg.num_layers, 1)
+            tail = self._pair_layer_tail_s(req, req.decode_worker)
             req.to(RequestState.KV_TRANSFER)
             req.transfer_start_s, req.transfer_end_s = self.now, self.now + tail
             w.held_tokens -= req.prompt_len
@@ -351,26 +399,44 @@ class ClusterSim:
         return next(d for d in cands if d.wid == chosen.worker_id)
 
     def _try_transfers(self, d: _DecodeWorker, holder: _PrefillWorker | None = None) -> None:
+        started = 0
         while d.kv_queue:
+            if self.cfg.admission_batch and started >= self.cfg.admission_batch:
+                return  # batch cap: the rest waits for the next opportunity
             req = d.kv_queue[0]
             need = self._reserved_tokens(req)
             if d.free_tokens() < need:
                 return  # decode pool full: request queues, prefill KV stays alive
             d.kv_queue.pop(0)
             d.used_tokens += need
+            started += 1
             req.to(RequestState.KV_TRANSFER)
             dt = self._pair_transfer_s(req, d.wid)
             start = max(self.now, d.nic_free_at)
+            if self.cfg.transfer_overlap == "blocking" and d.iterating:
+                # the synchronous engine can't post reads mid-iteration:
+                # the worker thread is in the decode step
+                start = max(start, d.iter_end)
             d.nic_free_at = start + dt
+            if self.cfg.transfer_overlap == "blocking":
+                # ...and once it enters drain() it is stuck there
+                d.pull_busy_until = max(d.pull_busy_until, start + dt)
             req.transfer_start_s, req.transfer_end_s = start, start + dt
             w = next(p for p in self.prefills if p.wid == req.prefill_worker)
             self._at(start + dt, lambda req=req, w=w: self._transfer_done(req, w))
+            if self.cfg.transfer_overlap == "overlapped":
+                # layer-streamed pull: decodable once layer 0 lands
+                join_at = start + min(dt, self._pair_layer_tail_s(req, d.wid))
+                self._at(join_at, lambda req=req: self._join_decode(req))
 
     def _transfer_done(self, req: Request, w: _PrefillWorker) -> None:
         # COMPLETE(): prefill frees its copy
         w.held_tokens -= req.prompt_len
         self._try_start_prefills()
-        self._join_decode(req)
+        if self.cfg.transfer_overlap != "overlapped":
+            self._join_decode(req)  # overlapped mode joined at layer 0
+        d = next(x for x in self.decodes if x.wid == req.decode_worker)
+        self._try_transfers(d)  # NIC freed: admit the next batch
 
     def _join_decode(self, req: Request) -> None:
         d = next(x for x in self.decodes if x.wid == req.decode_worker)
@@ -387,10 +453,16 @@ class ClusterSim:
             d.iterating = False
             return
         d.iterating = True
+        start = self.now
+        if self.cfg.transfer_overlap == "blocking":
+            # synchronous engine: the worker is in drain() until the pull
+            # finishes — decode iterations can't start underneath it
+            start = max(start, d.pull_busy_until)
         batch = batch[: self.cfg.max_decode_batch]
         active_tokens = sum(r.prompt_len + r.tokens_generated for r in batch)
         dt = self.cost.decode_step_s(active_tokens, len(batch))
-        self._at(self.now + dt, lambda d=d, batch=batch: self._iteration_done(d, batch))
+        d.iter_end = start + dt
+        self._at(start + dt, lambda d=d, batch=batch: self._iteration_done(d, batch))
 
     def _iteration_done(self, d: _DecodeWorker, batch: list[Request]) -> None:
         for r in batch:

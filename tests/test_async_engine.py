@@ -1,0 +1,525 @@
+"""Async transfer engine: futures, incremental progress, layer-streamed
+pulls, teardown-during-transfer, router admission batches, and the
+overlapped serving path end to end.
+
+The byte-movement invariant throughout: the incremental (budgeted) path
+and the legacy one-shot ``drain()`` produce IDENTICAL destination bytes —
+only scheduling differs.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.connection import ChipInfo, ConnectionManager, DescriptorRegistry, WorkerInfo
+from repro.core.cluster import ClusterScheduler
+from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn
+from repro.core.pull_push import pull_kv, pull_kv_async
+from repro.core.transfer_engine import (
+    ConnectionTornError,
+    MemoryRegion,
+    TransferEngine,
+)
+from repro.models.registry import build_model
+from repro.sched import LoadReport, RequestRouter
+from repro.sched.policies import RouteRequest
+from repro.serving.blocks import BlockPool
+from repro.serving.disagg import DisaggService
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestState
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import SHAREGPT, sample_requests
+
+DST_BASE = 1 << 20
+
+
+def make_engine(**kw):
+    eng = TransferEngine(**kw)
+    src = np.arange(64 * 1024, dtype=np.uint8) % 251
+    dst = np.zeros(64 * 1024, dtype=np.uint8)
+    eng.register_memory(MemoryRegion("p0", 0, src))
+    eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
+    return eng, src, dst
+
+
+def read(rid, roff, loff, n=4096, layer=None):
+    return ReadTxn(rid, "p0", "d0", ByteRange(roff, n), ByteRange(DST_BASE + loff, n),
+                   layer=layer)
+
+
+def winfo(wid, role):
+    return WorkerInfo(wid, role, "10.0.0.1", (ChipInfo(0, f"ici://{wid}/0"),))
+
+
+class TestFutures:
+    def test_submit_returns_future_resolved_on_complete(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit([read("r1", 0, 0), CompleteTxn("r1", "p0", "d0")])
+        assert fut.request_id == "r1" and not fut.done()
+        eng.drain()
+        assert fut.done() and not fut.failed
+        assert fut.result() == "r1"
+
+    def test_resolve_order_is_submission_independent(self):
+        # r1's reads are submitted FIRST but its COMPLETE arrives last:
+        # r2 must resolve before r1 even though it was submitted later.
+        eng, _, _ = make_engine()
+        (f1,) = eng.submit([read("r1", 0, 0)])
+        (f2,) = eng.submit([read("r2", 4096, 4096), CompleteTxn("r2", "p0", "d0")])
+        eng.submit([CompleteTxn("r1", "p0", "d0")])
+        eng.drain()
+        resolved = [f.request_id for f in eng.poll()]
+        assert resolved == ["r2", "r1"]
+        assert f1.done() and f2.done()
+
+    def test_complete_before_reads_still_a_bug_incrementally(self):
+        eng, _, _ = make_engine()
+        eng.submit([CompleteTxn("r1", "p0", "d0"), read("r1", 0, 0)])
+        with pytest.raises(RuntimeError, match="COMPLETE"):
+            while eng.pending:
+                eng.progress(1)
+
+    def test_done_callback_fires_on_resolution(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit([read("r1", 0, 0), CompleteTxn("r1", "p0", "d0")])
+        seen = []
+        fut.add_done_callback(lambda f: seen.append(f.request_id))
+        assert seen == []
+        eng.drain()
+        assert seen == ["r1"]
+        # late registration fires immediately
+        fut.add_done_callback(lambda f: seen.append("late"))
+        assert seen == ["r1", "late"]
+
+    def test_result_raises_while_in_flight(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit([read("r1", 0, 0)])
+        with pytest.raises(RuntimeError, match="in flight"):
+            fut.result()
+
+
+class TestIncrementalProgress:
+    def test_budget_caps_processed_txns(self):
+        eng, _, _ = make_engine()
+        eng.submit([read("r", i * 4096, i * 4096) for i in range(8)])
+        assert eng.progress(3) == 3
+        assert eng.pending == 5
+        assert eng.progress() == 5
+        assert eng.pending == 0
+
+    @pytest.mark.parametrize("budget", [1, 3])
+    def test_budgeted_progress_byte_identical_to_drain(self, budget):
+        # Same transactions through drain() and through a budgeted
+        # progress loop: destination bytes, bytes_moved, and completes
+        # must match exactly (only reads_posted/coalescing may differ).
+        txns = [read("r1", 0, 8192), read("r1", 4096, 12288),
+                read("r2", 20480, 0, 2048), CompleteTxn("r1", "p0", "d0"),
+                CompleteTxn("r2", "p0", "d0")]
+        e1, _, dst1 = make_engine()
+        e1.submit(list(txns))
+        e1.drain()
+        e2, _, dst2 = make_engine()
+        e2.submit(list(txns))
+        while eng_pending := e2.pending:
+            e2.progress(budget)
+            assert e2.pending < eng_pending  # always advances
+        np.testing.assert_array_equal(dst1, dst2)
+        assert e1.stats.bytes_moved == e2.stats.bytes_moved
+        assert e1.stats.completes == e2.stats.completes
+
+    def test_drain_is_progress_until_empty(self):
+        eng, src, dst = make_engine()
+        eng.submit([read("r1", 0, 0), CompleteTxn("r1", "p0", "d0")])
+        eng.drain()
+        np.testing.assert_array_equal(dst[:4096], src[:4096])
+        assert eng.pending == 0
+
+
+class TestTeardownDuringTransfer:
+    def test_deregister_fails_queued_futures_typed(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit([read("rX", 0, 0), CompleteTxn("rX", "p0", "d0")])
+        eng.deregister_memory("p0")
+        assert fut.done() and fut.failed
+        err = fut.exception()
+        assert isinstance(err, ConnectionTornError)
+        assert isinstance(err, KeyError)  # legacy callers still catch it
+        assert err.worker_id == "p0"
+        assert err.request_ids == ("rX",)
+        assert eng.pending == 0  # torn transactions dropped, not executed
+        with pytest.raises(ConnectionTornError):
+            fut.result()
+
+    def test_deregister_spares_unrelated_requests(self):
+        eng = TransferEngine()
+        src0 = np.arange(8192, dtype=np.uint8) % 251
+        src1 = np.arange(8192, dtype=np.uint8) % 199
+        dst = np.zeros(16384, dtype=np.uint8)
+        eng.register_memory(MemoryRegion("p0", 0, src0))
+        eng.register_memory(MemoryRegion("p1", 1 << 16, src1))
+        eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
+        (f0,) = eng.submit([
+            ReadTxn("r0", "p0", "d0", ByteRange(0, 4096), ByteRange(DST_BASE, 4096)),
+            CompleteTxn("r0", "p0", "d0")])
+        (f1,) = eng.submit([
+            ReadTxn("r1", "p1", "d0", ByteRange(1 << 16, 4096),
+                    ByteRange(DST_BASE + 4096, 4096)),
+            CompleteTxn("r1", "p1", "d0")])
+        eng.deregister_memory("p0")
+        assert f0.failed and not f1.done()
+        eng.drain()
+        assert f1.done() and not f1.failed
+        np.testing.assert_array_equal(dst[4096:8192], src1[:4096])
+
+    def test_stale_submission_spares_cowindowed_request(self):
+        # Reads submitted AFTER an MR was torn down share a coalescing
+        # window with a healthy request: the torn read must fail only its
+        # own future, the healthy request's bytes land and its COMPLETE
+        # resolves normally on the next progress.
+        eng = TransferEngine()
+        src1 = np.arange(8192, dtype=np.uint8) % 199
+        dst = np.zeros(16384, dtype=np.uint8)
+        eng.register_memory(MemoryRegion("p0", 0, np.zeros(8192, np.uint8)))
+        eng.register_memory(MemoryRegion("p1", 1 << 16, src1))
+        eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
+        eng.deregister_memory("p0")  # queue empty: nothing to drop yet
+        completed = []
+        eng.on_complete(lambda c: completed.append(c.request_id))
+        (f0,) = eng.submit([  # stale connection still posting to p0
+            ReadTxn("r0", "p0", "d0", ByteRange(0, 4096), ByteRange(DST_BASE, 4096)),
+            CompleteTxn("r0", "p0", "d0")])
+        (f1,) = eng.submit([
+            ReadTxn("r1", "p1", "d0", ByteRange(1 << 16, 4096),
+                    ByteRange(DST_BASE + 4096, 4096)),
+            CompleteTxn("r1", "p1", "d0")])
+        with pytest.raises(ConnectionTornError):
+            eng.drain()
+        assert f0.failed and not f1.done()
+        eng.drain()  # caller recovers: the healthy request is unharmed
+        assert f1.done() and not f1.failed
+        np.testing.assert_array_equal(dst[4096:8192], src1[:4096])
+        # the torn request's COMPLETE was swallowed: its bytes never fully
+        # landed, so the prefill-free callback must only fire for r1
+        assert completed == ["r1"]
+
+    def test_unregistered_read_raises_typed_error(self):
+        eng = TransferEngine()
+        (fut,) = eng.submit([read("r", 0, 0)])
+        with pytest.raises(ConnectionTornError, match="unregistered"):
+            eng.drain()
+        assert fut.failed and fut.exception().request_ids == ("r",)
+
+
+LAYERS, BLOCKS, BS, KVH, HD = 3, 16, 16, 2, 64
+
+
+def kv_setup():
+    pre = PagedKVCache("p0", num_layers=LAYERS, num_blocks=BLOCKS, block_size=BS,
+                       kv_heads=KVH, head_dim=HD, base_address=0x1000_0000)
+    dec = PagedKVCache("d0", num_layers=LAYERS, num_blocks=BLOCKS, block_size=BS,
+                       kv_heads=KVH, head_dim=HD, base_address=0x2000_0000)
+    eng = TransferEngine(coalescing="fifo")
+    eng.register_memory(pre.memory_region())
+    eng.register_memory(dec.memory_region())
+    reg = DescriptorRegistry("p0")
+    for d in pre.descriptors():
+        reg.register(d)
+    cm = ConnectionManager(winfo("d0", "decode"))
+    conn = cm.connect(winfo("p0", "prefill"), reg)
+    return pre, dec, eng, conn
+
+
+def fill_blocks(cache, blocks, seed=0):
+    rng = np.random.default_rng(seed)
+    data = {}
+    for layer in range(cache.num_layers):
+        for b in blocks:
+            k = rng.standard_normal((BS, KVH, HD)).astype(np.float32)
+            v = rng.standard_normal((BS, KVH, HD)).astype(np.float32)
+            cache.write_block(layer, b, k, v)
+            data[(layer, b)] = cache.read_block(layer, b)
+    return data
+
+
+class TestLayerStreamedPull:
+    def test_layers_complete_in_order_layer0_first(self):
+        pre, dec, eng, conn = kv_setup()
+        pre_pool, dec_pool = BlockPool(BLOCKS, block_size=BS), BlockPool(BLOCKS, block_size=BS)
+        req = Request("r1", prompt_len=4 * BS, max_new_tokens=8)
+        req.prefill_blocks = pre_pool.allocate(4)
+        truth = fill_blocks(pre, req.prefill_blocks)
+
+        fut = pull_kv_async(req, conn=conn, engine=eng, decode_pool=dec_pool,
+                            decode_cache=dec)
+        assert fut.layers_done == ()
+        seen_layer0_before_done = False
+        layer_history = []
+        while eng.pending:
+            eng.progress(2)
+            layer_history.append(fut.layers_done)
+            if 0 in fut.layers_done and not fut.done():
+                # layer-0 KV must already be byte-exact in the decode slab
+                # while the rest of the pull is still in flight
+                for pb, db in zip(req.prefill_blocks, req.decode_blocks):
+                    k, v = dec.read_block(0, db)
+                    k_t, v_t = truth[(0, pb)]
+                    np.testing.assert_array_equal(k, k_t)
+                    np.testing.assert_array_equal(v, v_t)
+                seen_layer0_before_done = True
+        assert seen_layer0_before_done
+        assert fut.done() and fut.layers_done == (0, 1, 2)  # strictly layer order
+        # monotone growth, never reordered
+        for a, b in zip(layer_history, layer_history[1:]):
+            assert b[: len(a)] == a
+
+    def test_async_pull_byte_identical_to_blocking_pull(self):
+        # legacy pull_kv(drain=True) vs pull_kv_async + budgeted progress
+        results = []
+        for mode in ("drain", "async"):
+            pre, dec, eng, conn = kv_setup()
+            pre_pool, dec_pool = BlockPool(BLOCKS, block_size=BS), BlockPool(BLOCKS, block_size=BS)
+            req = Request("r1", prompt_len=4 * BS, max_new_tokens=8)
+            req.prefill_blocks = pre_pool.allocate(4)
+            fill_blocks(pre, req.prefill_blocks)
+            if mode == "drain":
+                pull_kv(req, conn=conn, engine=eng, decode_pool=dec_pool,
+                        decode_cache=dec)
+            else:
+                fut = pull_kv_async(req, conn=conn, engine=eng,
+                                    decode_pool=dec_pool, decode_cache=dec)
+                while not fut.done():
+                    eng.progress(3)
+            results.append(
+                np.concatenate([dec.memory_region().buffer]))
+        np.testing.assert_array_equal(results[0], results[1])
+
+
+class TestRouterAdmissionBatches:
+    def _router(self):
+        sched = ClusterScheduler()
+        for wid in ("d0", "d1"):
+            sched.add_worker(winfo(wid, "decode"))
+        return sched, RequestRouter(sched, "least_loaded")
+
+    def _ctx(self, rid, prompt_len, arrival):
+        return RouteRequest(rid, prompt_len, arrival_s=arrival)
+
+    def test_batches_grouped_per_worker_fifo(self):
+        _, router = self._router()
+        queued = [
+            (self._ctx("r2", 32, 2.0), "d0"),
+            (self._ctx("r0", 32, 0.0), "d0"),
+            (self._ctx("r1", 32, 1.0), "d1"),
+        ]
+        plan = router.plan_admissions(queued)
+        assert plan == {"d0": ["r0", "r2"], "d1": ["r1"]}
+
+    def test_capacity_caps_the_batch(self):
+        sched, router = self._router()
+        # d0 reports 3 free blocks of 32 tokens: only 3 one-block requests fit
+        sched.report_load("d0", LoadReport("d0", "decode", free_blocks=3,
+                                           total_blocks=8, block_size=32))
+        queued = [(self._ctx(f"r{i}", 32, float(i)), "d0") for i in range(5)]
+        plan = router.plan_admissions(queued)
+        assert plan == {"d0": ["r0", "r1", "r2"]}
+
+    def test_max_batch_cap(self):
+        _, router = self._router()
+        queued = [(self._ctx(f"r{i}", 32, float(i)), "d0") for i in range(5)]
+        plan = router.plan_admissions(queued, max_batch=2)
+        assert plan == {"d0": ["r0", "r1"]}
+
+    def test_impossible_request_skipped_not_wedging_the_worker(self):
+        sched, router = self._router()
+        sched.report_load("d0", LoadReport("d0", "decode", free_blocks=4,
+                                           total_blocks=8, block_size=32))
+        queued = [
+            (self._ctx("big", 32 * 100, 0.0), "d0"),   # needs 100 > total 8
+            (self._ctx("small", 32, 1.0), "d0"),
+        ]
+        plan = router.plan_admissions(queued)
+        assert plan == {"d0": ["small"]}  # can NEVER fit: don't wedge d0
+
+    def test_head_of_line_blocks_batch_no_starvation(self):
+        # The head request fits the worker (6 <= total 8) but not the
+        # CURRENT budget (4 free): younger smaller requests must NOT jump
+        # it, or it starves under a steady small-request stream.
+        sched, router = self._router()
+        sched.report_load("d0", LoadReport("d0", "decode", free_blocks=4,
+                                           total_blocks=8, block_size=32))
+        queued = [
+            (self._ctx("head", 32 * 6, 0.0), "d0"),
+            (self._ctx("young", 32, 1.0), "d0"),
+        ]
+        assert router.plan_admissions(queued) == {}
+
+
+class TestSimOverlap:
+    @pytest.fixture(scope="class")
+    def cost(self):
+        return CostModel(get_config("mistral-large-123b"), H100_NODE)
+
+    @pytest.mark.parametrize("qps", [0.5, 2.0])
+    def test_overlapped_ttft_strictly_below_blocking(self, cost, qps):
+        # The acceptance shape of fig_overlap: batched overlapped
+        # admission beats the one-shot blocking pull at every QPS on the
+        # KV-inclusive TTFT.
+        reqs = sample_requests(SHAREGPT, qps=qps, duration_s=60, seed=11)
+        block = ClusterSim(cost, SimConfig(
+            n_prefill=2, n_decode=2, transfer_overlap="blocking",
+            admission_batch=1)).run(list(reqs)).summary()
+        over = ClusterSim(cost, SimConfig(
+            n_prefill=2, n_decode=2, transfer_overlap="overlapped",
+            admission_batch=8)).run(list(reqs)).summary()
+        assert over["p50_ttft_kv_s"] < block["p50_ttft_kv_s"]
+        assert over["p90_ttft_kv_s"] < block["p90_ttft_kv_s"]
+
+    def test_all_modes_conserve_requests(self, cost):
+        reqs = sample_requests(SHAREGPT, qps=0.5, duration_s=60, seed=7)
+        for overlap in ("pipelined", "blocking", "overlapped"):
+            sim = ClusterSim(cost, SimConfig(transfer_overlap=overlap,
+                                             admission_batch=2))
+            res = sim.run(list(reqs))
+            assert len(res.requests) == len(reqs)
+            assert all(r.done_s is not None for r in res.requests)
+            for d in sim.decodes:
+                assert d.used_tokens == 0 and not d.active and not d.kv_queue
+            for p in sim.prefills:
+                assert p.held_tokens == 0
+
+    def test_bad_overlap_value_rejected(self, cost):
+        with pytest.raises(ValueError, match="transfer_overlap"):
+            ClusterSim(cost, SimConfig(transfer_overlap="asap"))
+
+
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def monolithic_generate(model, params, tokens, n):
+    import jax.numpy as jnp
+    logits, state = model.prefill(params, {"tokens": jnp.asarray(tokens[None])},
+                                  remat=False)
+    out = [int(jnp.argmax(logits[0, : model.cfg.vocab_size]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n):
+        logits, state = model.decode_step(params, state, tok)
+        tok = jnp.argmax(logits[:, : model.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+class TestOverlappedService:
+    def test_generate_many_matches_monolithic(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(0)
+        toks = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32) for _ in range(4)]
+        reqs = [svc.submit(t) for t in toks]
+        # router plans per-decode-worker batches; pulls overlap decode
+        got = svc.generate_many(reqs, max_new=4)
+        for req, t in zip(reqs, toks):
+            assert got[req.request_id] == monolithic_generate(model, params, t, 4)
+            assert req.state is RequestState.DONE
+        assert not svc.pending
+
+    def test_admit_queued_is_batched_per_worker(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(1)
+        reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 32).astype(np.int32))
+                for _ in range(4)]
+        assert all(r.state is RequestState.KV_QUEUED for r in reqs)
+        plan = svc.admit_queued()
+        assert sorted(rid for rids in plan.values() for rid in rids) == \
+            sorted(r.request_id for r in reqs)
+        # pulls submitted but nothing promoted yet until the engine runs
+        assert all(r.state is RequestState.KV_TRANSFER for r in reqs)
+        while svc.engine.pending:
+            svc.pump(8)
+        svc.pump(0)
+        assert all(r.state is RequestState.DECODING for r in reqs)
+        svc.generate_many(reqs, max_new=2)
+
+    def test_decode_rounds_overlap_inflight_pulls(self, service_setup):
+        # The point of the refactor: decode compute must run while later
+        # waves' transfer transactions are still queued in the engine.
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(5)
+        reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+                for _ in range(4)]
+        dw = svc.decode
+        pending_at_round = []
+        orig = dw.decode_round
+
+        def spy(max_new=8, **kw):
+            pending_at_round.append(svc.engine.pending)
+            return orig(max_new, **kw)
+
+        dw.decode_round = spy
+        got = svc.generate_many(reqs, max_new=2)
+        assert len(got) == 4
+        assert any(p > 0 for p in pending_at_round), \
+            "no decode round started while transfer txns were in flight"
+
+    def test_mid_pull_prefill_death_reroutes(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(2)
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        ref = monolithic_generate(model, params, tokens, 3)
+        req = svc.submit(tokens)
+        victim = req.prefill_worker
+        svc.admit_queued()  # pull submitted, NOT drained
+        assert req.state is RequestState.KV_TRANSFER
+        fut = svc.decode.inflight[req.request_id].future
+        svc.fail_prefill_worker(victim)  # mid-pull crash
+        assert fut.failed and isinstance(fut.exception(), ConnectionTornError)
+        # the router re-routed the request to the surviving prefill worker
+        assert req.prefill_worker != victim
+        assert req.retries == 1
+        got = svc.generate_many([req], max_new=3)[req.request_id]
+        assert got == ref
+
+    def test_mid_pull_decode_death_restarts_from_prefill(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2, num_blocks=64)
+        rng = np.random.default_rng(3)
+        tokens = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        ref = monolithic_generate(model, params, tokens, 3)
+        req = svc.submit(tokens)
+        svc.admit_queued()
+        victim = req.decode_worker
+        svc.fail_decode_worker(victim)
+        assert req.decode_worker != victim
+        got = svc.generate_many([req], max_new=3)[req.request_id]
+        assert got == ref
+        assert req.retries == 1
+
+    def test_build_state_page_cache_matches_fresh_gather(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        rng = np.random.default_rng(4)
+        reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+                for _ in range(2)]
+        svc.admit_queued()
+        svc.engine.drain()
+        dw = svc.decode
+        dw.pump(0)
+        batch = list(dw.resident.values())
+        cached = dw._build_state(batch, margin_blocks=1)
+        for r in batch:  # drop the caches: force a full slab re-gather
+            assert r.k_cached is not None  # the cache was actually used
+            r.k_cached = r.v_cached = None
+        fresh = dw._build_state(batch, margin_blocks=1)
+        np.testing.assert_array_equal(np.asarray(cached.k_pages),
+                                      np.asarray(fresh.k_pages))
+        np.testing.assert_array_equal(np.asarray(cached.v_pages),
+                                      np.asarray(fresh.v_pages))
+        svc.generate_many(reqs, max_new=2)
