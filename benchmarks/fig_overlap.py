@@ -1,25 +1,35 @@
-"""Transfer/decode overlap sweep: admission batch size × QPS → TTFT.
+"""Transfer/decode overlap sweep: consumer mode × admission batch × QPS.
 
-Compares the two ends of the async-engine refactor on the discrete-event
-simulator (2 prefill × 2 decode, pull mode):
+Compares the engine generations on the discrete-event simulator
+(2 prefill × 2 decode, pull mode):
 
   * ``blocking``   — the old synchronous engine: one-shot admission
     (batch = 1) and the decode worker sits in ``drain()`` for the whole
     multi-layer pull, so decode iterations and transfers mutually
     exclude on the worker;
-  * ``overlapped`` — the async engine: router-batched admissions pipeline
-    on the NIC while decode keeps iterating, and the layer-streamed pull
-    makes a request decodable as soon as its layer-0 KV lands.  (The
-    engine exposes per-layer completion; today's decode step still waits
-    for COMPLETE, so the layer-0 join term models the exposed capability
-    a pipelined decode consumer would realize — see ROADMAP.)
+  * ``overlapped`` — the async engine with FULL-PULL consumption
+    (``DisaggService(consume="full")``, the PR 2 baseline): router-batched
+    admissions pipeline on the NIC while decode keeps iterating, but the
+    first decode step still waits for COMPLETE — the join point is the
+    last byte;
+  * ``layerwise``  — the pipelined attention consumer
+    (``DisaggService(consume="layerwise")``): the first decode step runs
+    layer *l*'s attention as soon as layer *l*'s reads land, so the
+    request is decodable once its layer-0 KV arrives and the rest of the
+    pull hides behind per-layer compute.
 
 The reported metric is the KV-INCLUSIVE TTFT (paper §5.1: TTFT
 "includes the waiting time for the KV cache"): arrival → the request is
-decodable on its decode worker.  Expected shape: overlapped strictly
-below blocking at EVERY swept QPS — at low load the layer-0 tail beats
-the full-pull wait; at high load the un-stalled decode loop and batched
-admissions also drain the KV queue faster.
+decodable on its decode worker.  Expected shape: layerwise ≤ overlapped
+at EVERY swept QPS (the layer-0 tail can only shrink the wait), and both
+below the one-shot blocking pull.
+
+Beyond the simulator, ``real_cells()`` measures the same contrast
+END-TO-END on the real substrate (JAX compute + real bytes through the
+transfer engine): wall-clock time from admission to the first completed
+decode step under ``consume="full"`` vs ``consume="layerwise"``, plus the
+engine backlog observed when the first step began — >0 only when
+attention genuinely ran while the pull was still in flight.
 
 As a benchmark module it emits CSV rows through run.py; run directly it
 writes the full sweep as JSON:
@@ -30,6 +40,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 from benchmarks.common import Row
 from repro.configs import get_config
@@ -39,13 +50,15 @@ from repro.sim.workloads import SHAREGPT, sample_requests
 
 DURATION = 120.0
 QPS_GRID = (0.25, 0.5, 1.0, 2.0)
-# Swept for BOTH engines.  blocking × batch>1 shows the synchronous
+# Swept for EVERY engine.  blocking × batch>1 shows the synchronous
 # trade-off (longer drain() stalls vs better NIC utilization); for the
-# overlapped engine the cap stops mattering — admissions are re-kicked at
+# async engines the cap stops mattering — admissions are re-kicked at
 # every transfer/iteration completion, so the NIC stays busy even at
 # batch=1 and the cells come out flat.  blocking/b1 is the one-shot
-# baseline the acceptance comparison uses.
+# baseline; overlapped is the PR 2 full-pull baseline the layerwise
+# acceptance comparison uses.
 BATCH_GRID = (1, 4, 16)
+ENGINES = ("blocking", "overlapped", "layerwise")
 SEED = 11
 
 
@@ -59,7 +72,7 @@ def sweep() -> list[dict]:
     cells = []
     for qps in QPS_GRID:
         reqs = sample_requests(SHAREGPT, qps=qps, duration_s=DURATION, seed=SEED)
-        for engine in ("blocking", "overlapped"):
+        for engine in ENGINES:
             for batch in BATCH_GRID:
                 s = _run(SimConfig(n_prefill=2, n_decode=2, mode="pull",
                                    transfer_overlap=engine,
@@ -73,7 +86,77 @@ def sweep() -> list[dict]:
     return cells
 
 
-def _rows(cells: list[dict]) -> list[Row]:
+# ------------------------------------------------------------- real path
+def real_cells(n_requests: int = 4, prompt_len: int = 64,
+               max_new: int = 4) -> list[dict]:
+    """End-to-end consumer-mode comparison on the real serving substrate
+    (CPU-scale: smoke model, memcpy engine, real KV bytes).
+
+    For each mode: submit → admit (pulls queued, nothing drained) → drive
+    ``decode_round`` until the first round completes.  Records the
+    wall-clock admission→first-round time and the engine backlog at the
+    moment the first decode step started (layerwise must show >0 backlog:
+    attention over early layers while the pull is in flight).  Token
+    streams are asserted identical across modes."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import DecoderLM
+    from repro.serving.disagg import DisaggService
+
+    cfg = get_smoke_config("deepseek-67b")
+    model = DecoderLM(cfg, unroll=True)  # python-loop layers: both consumer
+    # modes run identical per-op math, so tokens are bit-comparable
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    toks = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+            for _ in range(n_requests)]
+
+    cells = []
+    token_streams = {}
+    for mode in ("full", "layerwise"):
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=256, consume=mode)
+        reqs = [svc.submit(t) for t in toks]
+        svc.admit_queued()
+        dw = svc.decode
+
+        t0 = time.perf_counter()
+        out: dict[str, list[int]] = {}
+        empty_rounds = rounds = 0
+        first = None  # (pending txns before the round, outputs, seconds)
+        while len(out) < n_requests:
+            backlog = svc.engine.pending
+            got = dw.decode_round(max_new, pump_budget=8)
+            rounds += 1
+            if got and first is None:
+                first = (backlog, len(got), time.perf_counter() - t0)
+            if not got:
+                empty_rounds += 1
+                if not (dw.resident or dw.inflight):
+                    break
+            for rid, toks_out in got.items():  # finished: leave the batch
+                dw.finish(rid)
+                svc.pending.pop(rid, None)
+                svc.router.forget(rid)
+                out[rid] = toks_out
+        total_s = time.perf_counter() - t0
+        token_streams[mode] = {r.request_id: out.get(r.request_id) for r in reqs}
+        cells.append({
+            "mode": mode, "n": n_requests, "prompt_len": prompt_len,
+            "max_new": max_new, "rounds": rounds, "empty_rounds": empty_rounds,
+            "admit_to_first_tokens_s": first[2] if first else float("nan"),
+            "admit_to_done_s": total_s,
+            "first_round_outputs": first[1] if first else 0,
+            "pending_before_first_output_round": first[0] if first else 0,
+        })
+    assert token_streams["full"] == token_streams["layerwise"], \
+        "consumer modes diverged on the real path"
+    return cells
+
+
+def _rows(cells: list[dict], real: list[dict] | None = None) -> list[Row]:
     rows = []
     for c in cells:
         rows.append(Row(
@@ -83,36 +166,57 @@ def _rows(cells: list[dict]) -> list[Row]:
             f"p90_ttft_kv={c['p90_ttft_kv_s']:.3f}s;"
             f"p90_e2e={c['p90_total_s']:.2f}s",
         ))
-    # headline: best overlapped batch vs the one-shot blocking pull per QPS
+    # headlines per QPS: layerwise vs the PR 2 overlapped full-pull
+    # baseline (same batch), and best-batch layerwise vs one-shot blocking
     for qps in QPS_GRID:
         base = next(c for c in cells if c["qps"] == qps
                     and c["engine"] == "blocking" and c["batch"] == 1)
-        best = min((c for c in cells if c["qps"] == qps and c["engine"] == "overlapped"),
-                   key=lambda c: c["p90_ttft_kv_s"])
-        gain = base["p90_ttft_kv_s"] / max(best["p90_ttft_kv_s"], 1e-9)
+        best_lw = min((c for c in cells if c["qps"] == qps
+                       and c["engine"] == "layerwise"),
+                      key=lambda c: c["p90_ttft_kv_s"])
+        worst_ratio = max(
+            next(lw for lw in cells if lw["qps"] == qps
+                 and lw["engine"] == "layerwise" and lw["batch"] == ov["batch"]
+                 )["p90_ttft_kv_s"] / max(ov["p90_ttft_kv_s"], 1e-9)
+            for ov in cells if ov["qps"] == qps and ov["engine"] == "overlapped")
+        gain = base["p90_ttft_kv_s"] / max(best_lw["p90_ttft_kv_s"], 1e-9)
         rows.append(Row(
             f"overlap/qps{qps}/summary", 0.0,
-            f"blocking_vs_overlapped_p90_ttft_kv={gain:.2f}x(batch={best['batch']})"))
+            f"layerwise_vs_fullpull_worst_p90_ratio={worst_ratio:.3f};"
+            f"blocking_vs_layerwise_p90_ttft_kv={gain:.2f}x"
+            f"(batch={best_lw['batch']})"))
+    for c in real or []:
+        rows.append(Row(
+            f"overlap/real/{c['mode']}",
+            c["admit_to_first_tokens_s"] * 1e6,
+            f"admit_to_done={c['admit_to_done_s']:.3f}s;"
+            f"first_round_outputs={c['first_round_outputs']}/{c['n']};"
+            f"empty_rounds={c['empty_rounds']};"
+            f"pending_before_first_output_round="
+            f"{c['pending_before_first_output_round']}"))
     return rows
 
 
 def run() -> list[Row]:
-    return _rows(sweep())
+    return _rows(sweep(), real_cells())
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="fig_overlap.json")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="sim sweep only (no JAX model build)")
     args = ap.parse_args()
     cells = sweep()
+    real = [] if args.skip_real else real_cells()
     with open(args.out, "w") as f:
         json.dump({"config": {"duration_s": DURATION, "workload": "sharegpt",
                               "topology": "2P x 2D", "qps_grid": QPS_GRID,
-                              "batch_grid": BATCH_GRID},
-                   "cells": cells}, f, indent=2)
-    print(f"wrote {len(cells)} cells to {args.out}")
+                              "batch_grid": BATCH_GRID, "engines": ENGINES},
+                   "cells": cells, "real": real}, f, indent=2)
+    print(f"wrote {len(cells)} sim cells + {len(real)} real cells to {args.out}")
     print("name,us_per_call,derived")
-    for row in _rows(cells):
+    for row in _rows(cells, real):
         print(row.csv())
 
 

@@ -156,16 +156,25 @@ class TransferFuture:
     ``ConnectionTornError``).  ``layers_done`` exposes layer-streamed
     progress: a layer index appears as soon as every read tagged with it
     has executed, so layer-0 KV is observable before the pull finishes.
+
+    ``wait_layer(i)`` is the pipelined consumer's primitive: it advances
+    the owning engine until layer ``i``'s bytes are resident (or the
+    transfer dies), so a decode step can run layer ``i``'s attention
+    while layers ``i+1..L-1`` are still in flight.  ``add_layer_callback``
+    is the event-driven form of the same signal.
     """
 
-    __slots__ = ("request_id", "_resolved", "_error", "_layers_done", "_cbs")
+    __slots__ = ("request_id", "_resolved", "_error", "_layers_done", "_cbs",
+                 "_layer_cbs", "_engine")
 
-    def __init__(self, request_id: str) -> None:
+    def __init__(self, request_id: str, engine: "TransferEngine | None" = None) -> None:
         self.request_id = request_id
         self._resolved = False
         self._error: Exception | None = None
         self._layers_done: list[int] = []
         self._cbs: list[Callable[["TransferFuture"], None]] = []
+        self._layer_cbs: list[Callable[["TransferFuture", int], None]] = []
+        self._engine = engine
 
     def done(self) -> bool:
         return self._resolved
@@ -180,6 +189,43 @@ class TransferFuture:
     @property
     def layers_done(self) -> tuple[int, ...]:
         return tuple(self._layers_done)
+
+    def layer_done(self, layer: int) -> bool:
+        return layer in self._layers_done
+
+    def wait_layer(self, layer: int, *, budget: int | None = 32) -> None:
+        """Advance the owning engine until every read tagged ``layer`` has
+        executed.  Progresses ``budget`` transactions at a time (None =
+        run the queue dry) so foreign work interleaves fairly.  Raises the
+        transfer's error if it dies first (``ConnectionTornError`` on a
+        mid-pull teardown — possibly BETWEEN layers, which is exactly the
+        window the layerwise decode consumer must survive), and
+        ``RuntimeError`` if the engine's queue empties without the layer
+        completing (the pull was never layer-tagged, or the layer index is
+        out of range)."""
+        budget = None if budget is None else max(1, budget)
+        while not self._resolved and layer not in self._layers_done:
+            if self._engine is None or not self._engine.pending:
+                raise RuntimeError(
+                    f"transfer of {self.request_id!r} cannot reach layer {layer}: "
+                    "engine queue is empty (untagged pull or bad layer index?)"
+                )
+            self._engine.progress(budget)
+        if self._error is not None:
+            raise self._error
+        if layer not in self._layers_done:
+            raise RuntimeError(
+                f"transfer of {self.request_id!r} completed without layer {layer} "
+                "(untagged pull or bad layer index?)"
+            )
+
+    def add_layer_callback(self, cb: Callable[["TransferFuture", int], None]) -> None:
+        """``cb(future, layer)`` fires when a layer's reads all execute;
+        fires immediately for layers already done."""
+        for layer in list(self._layers_done):
+            cb(self, layer)
+        if not self._resolved:
+            self._layer_cbs.append(cb)
 
     def result(self) -> str:
         """The request id, or raises the transfer's error.  Raises
@@ -366,7 +412,7 @@ class TransferEngine:
                     self._outstanding_layer[(t.request_id, t.layer)] += 1
                 self.stats.txns_submitted += 1
             if t.request_id not in self._futures:
-                fut = TransferFuture(t.request_id)
+                fut = TransferFuture(t.request_id, engine=self)
                 self._futures[t.request_id] = fut
                 created.append(fut)
             self._queue.append(t)
@@ -390,6 +436,7 @@ class TransferEngine:
         for cb in fut._cbs:
             cb(fut)
         fut._cbs.clear()
+        fut._layer_cbs.clear()
 
     def poll(self) -> list[TransferFuture]:
         """Futures resolved (success or failure) since the last poll."""
@@ -522,6 +569,10 @@ class TransferEngine:
                 fut = self._futures.get(t.request_id)
                 if fut is not None:
                     fut._layers_done.append(t.layer)
+                    # layer callbacks may tear down workers (failover
+                    # fires from them in tests): snapshot the list
+                    for cb in list(fut._layer_cbs):
+                        cb(fut, t.layer)
 
     @staticmethod
     def _op_request_ids(op: ReadTxn | CoalescedRead) -> tuple[str, ...]:

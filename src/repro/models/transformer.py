@@ -491,6 +491,56 @@ class DecoderLM:
         new_state.context_lens = state.context_lens + 1
         return logits, new_state
 
+    # ------------------------------------------- layerwise decode step
+    def decode_step_layerwise(self, params, state: DecodeState, tokens,
+                              fetch_layer):
+        """One decode step for paged-attention archs where layer ``l``'s
+        KV pages are produced ON DEMAND by ``fetch_layer(l) ->
+        (k_pages_l, v_pages_l)`` (each ``[b, per_seq, bs, g, hd]``)
+        immediately before layer ``l``'s attention runs.
+
+        This is the compute half of KVDirect's layer-streamed pull: the
+        transfer engine lands layer 0 first, so a decode worker's
+        ``fetch_layer`` can block on ``TransferFuture.wait_layer(l)`` and
+        start attending over early layers while later layers are still in
+        flight.  The math is the per-layer body of ``decode_step`` run as
+        a python loop instead of a ``lax.scan`` — same primitives on the
+        same values, so logits and the new KV pages are bit-identical to
+        the full-state step (tests/test_layerwise.py pins this).
+
+        ``state.k_pages``/``v_pages`` may be None; the returned state
+        carries the stacked per-layer pages, so subsequent steps go
+        through the ordinary ``decode_step``.
+        """
+        cfg = self.cfg
+        if not cfg.has_attention or cfg.sliding_window or cfg.has_ssm:
+            raise NotImplementedError(
+                "layerwise decode covers paged-KV attention archs; ring/SSM "
+                "caches have no layer-streamed pull to consume")
+        x = params["embed"]["table"][tokens]
+        pos = state.context_lens
+        new_k: list = [None] * cfg.num_layers
+        new_v: list = [None] * cfg.num_layers
+        for step in range(self.n_steps):
+            p = jax.tree.map(lambda a: a[step], params["layers"])
+            for i in range(self.group):
+                layer = step * self.group + i
+                sub_p = p if self.group == 1 else p[f"sub{i}"]
+                k_pages, v_pages = fetch_layer(layer)
+                cache = {"k_pages": k_pages, "v_pages": v_pages}
+                x, nc = self._sub_decode(sub_p, x, pos, state, cache,
+                                         self._sub_kind(i))
+                new_k[layer], new_v[layer] = nc["k_pages"], nc["v_pages"]
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        new_state = dataclasses.replace(
+            state,
+            k_pages=jnp.stack(new_k),
+            v_pages=jnp.stack(new_v),
+            context_lens=state.context_lens + 1,
+        )
+        return logits, new_state
+
     def _per_layer_caches(self, state: DecodeState) -> dict:
         c = {}
         if state.k_pages is not None:

@@ -68,7 +68,15 @@ class DisaggService:
         links: dict[tuple[str, str], LinkModel] | None = None,
         prefill_time_fn=None,
         slo_classes: dict[str, float] | None = None,
+        consume: str = "full",
     ):
+        """``consume`` ("full" | "layerwise") is the decode workers' pull
+        consumption mode: "layerwise" starts a request's first decode step
+        on early layers while the tail of its KV pull is still in flight
+        (see DecodeWorker)."""
+        if consume not in ("full", "layerwise"):
+            raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
+        self.consume = consume
         self.model = model
         self.params = params
         self.scheduler = ClusterScheduler()
@@ -134,7 +142,8 @@ class DisaggService:
         wid = f"d{next(self._wid_seq['d'])}"
         w = DecodeWorker(_winfo(wid, "decode"), self.model, self.params,
                          num_blocks=num_blocks, engine=self.engine,
-                         base_address=self._alloc_base(num_blocks))
+                         base_address=self._alloc_base(num_blocks),
+                         consume=self.consume)
         cm = ConnectionManager(w.info)
         cm.on_invalidate(self._on_prefill_invalidate)
         for pwid, pw in self.prefills.items():
@@ -426,24 +435,33 @@ class DisaggService:
                     remaining.pop(rid)  # parked (or externally finished)
             if not remaining:
                 break
+            snapshot = {rid: (req.state, req.prefill_worker, req.decode_worker)
+                        for rid, req in remaining.items()}
             # only OUR requests: a concurrent caller's KV_QUEUED request
             # must not be admitted (and its tokens silently dropped) here
             admitted = bool(self.admit_queued(only=set(remaining)))
             promoted = bool(self.pump(pump_budget))
             decoded = False
             for wid, dw in list(self.decodes.items()):
-                round_ids = [rid for rid in dw.resident if rid in remaining]
-                if not round_ids:
+                has_work = any(rid in remaining for rid in dw.resident) or (
+                    dw.consume == "layerwise"
+                    and any(rid in remaining for rid in dw.inflight))
+                if not has_work:
                     continue
-                # pumps in-flight pulls between decode steps
+                # pumps in-flight pulls between decode steps; layerwise
+                # workers additionally stream in-flight admissions into
+                # the round's first step, so finish by what the round
+                # actually completed, not by who was resident before it
                 out = dw.decode_round(max_new, pump_budget=pump_budget)
-                for rid in round_ids:
-                    req = remaining.pop(rid)
+                for rid in out:
+                    if rid not in remaining:
+                        continue
+                    remaining.pop(rid)
                     dw.finish(rid)
                     self.pending.pop(rid, None)
                     self.router.forget(rid)
                     results[rid] = [self.first_tokens.pop(rid)] + out[rid]
-                decoded = True
+                    decoded = True
             if decoded or not remaining:
                 continue
             if self.engine.pending:
@@ -453,6 +471,16 @@ class DisaggService:
                 self.engine.progress()
                 self.pump(0)  # promote whatever resolved
             elif not (admitted or promoted):
+                if any(req.state in (RequestState.FAILED, RequestState.DONE)
+                       for req in remaining.values()):
+                    continue  # parked/finished mid-round: prune next pass
+                if any(snapshot[rid] != (req.state, req.prefill_worker,
+                                         req.decode_worker)
+                       for rid, req in remaining.items()):
+                    # failover moved a request mid-pass (e.g. a teardown
+                    # fired from inside pump/decode_round and re-routed
+                    # it): that's progress — admission retries next pass
+                    continue
                 stuck = ", ".join(sorted(remaining))
                 raise RuntimeError(
                     f"generate_many stalled: {stuck} cannot be admitted "

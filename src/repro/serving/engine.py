@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.connection import Connection, DescriptorRegistry, WorkerInfo
 from repro.core.pull_push import pull_kv_async
-from repro.core.transfer_engine import TransferEngine, TransferFuture
+from repro.core.transfer_engine import ConnectionTornError, TransferEngine, TransferFuture
 from repro.models.transformer import DecodeState
 from repro.serving.blocks import BlockPool, OutOfBlocks
 from repro.serving.kv_cache import PagedKVCache
@@ -104,9 +104,31 @@ class _InFlight:
 
 
 class DecodeWorker:
+    """Continuous-batching decode over KV pulled through the engine.
+
+    ``consume`` picks the synchronization contract between a request's KV
+    pull and its first decode step:
+
+    * ``"full"`` (default) — a request joins decode only after its whole
+      pull resolved (COMPLETE executed).  Transfer still overlaps OTHER
+      requests' decode compute via ``pump``.
+    * ``"layerwise"`` — the pipelined consumer: an in-flight admission
+      joins the next ``decode_round`` as soon as its KV starts landing;
+      the round's FIRST step fetches layer *l*'s pages via
+      ``TransferFuture.wait_layer(l)`` right before layer *l*'s attention
+      runs, so early layers compute while late layers are still on the
+      wire.  A teardown BETWEEN layers fails the torn request's future
+      (``ConnectionTornError``); the step is re-run without it, so
+      survivors' tokens are unchanged (see docs/transfer.md).
+    """
+
     def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
                  engine: TransferEngine | None = None,
-                 base_address: int = 0x7F80000000):
+                 base_address: int = 0x7F80000000,
+                 consume: str = "full"):
+        if consume not in ("full", "layerwise"):
+            raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
+        self.consume = consume
         cfg = model.cfg
         self.info = info
         self.model = model
@@ -251,13 +273,26 @@ class DecodeWorker:
                 [r.v_cached, v_new], axis=1)
         return r.k_cached, r.v_cached
 
+    def _round_margin(self, max_new: int) -> int:
+        """Page-margin for one decode round: room for max_new appends."""
+        return -(-max_new // self.block_size)
+
+    @staticmethod
+    def _batch_tables(batch: list[_Resident], margin_blocks: int):
+        """Shared batch layout (per_seq width + identity block tables) —
+        ONE definition so the full and layerwise paths cannot diverge."""
+        per_seq = max(len(r.blocks) for r in batch) + margin_blocks
+        tables = np.broadcast_to(
+            np.arange(per_seq, dtype=np.int32)[None], (len(batch), per_seq))
+        return per_seq, jnp.asarray(tables)
+
     def _build_state(self, batch: list[_Resident], margin_blocks: int) -> DecodeState:
         """Assemble a per-seq paged DecodeState from the residents' page
         caches (slab reads only for newly pulled blocks)."""
         cfg = self.model.cfg
         bs = self.block_size
         L = cfg.num_layers
-        per_seq = max(len(r.blocks) for r in batch) + margin_blocks
+        per_seq, tables = self._batch_tables(batch, margin_blocks)
         b = len(batch)
         k_pages = np.zeros((L, b, per_seq, bs, cfg.num_kv_heads, cfg.head_dim), np.float32)
         v_pages = np.zeros_like(k_pages)
@@ -266,13 +301,105 @@ class DecodeWorker:
             n = len(r.blocks)
             k_pages[:, i, :n] = k[:, :n]
             v_pages[:, i, :n] = v[:, :n]
-        tables = np.broadcast_to(np.arange(per_seq, dtype=np.int32)[None], (b, per_seq))
         return DecodeState(
             context_lens=jnp.asarray([r.context_len for r in batch], jnp.int32),
             k_pages=jnp.asarray(k_pages, jnp.bfloat16),
             v_pages=jnp.asarray(v_pages, jnp.bfloat16),
-            block_tables=jnp.asarray(tables),
+            block_tables=tables,
         )
+
+    def _argmax_tokens(self, logits) -> jnp.ndarray:
+        return jnp.argmax(
+            logits[:, : self.model.cfg.vocab_size].astype(jnp.float32), axis=-1
+        ).astype(jnp.int32)
+
+    # ----------------------------------------- layerwise first step
+    def _layerwise_first_step(self, streaming: list[_InFlight], max_new: int,
+                              pump_budget: int | None):
+        """One decode step where ``streaming`` (in-flight) admissions join
+        the resident batch, consuming each layer's KV as its reads land
+        (``wait_layer`` pumps the engine between layers).  Returns
+        ``(batch, state, tokens, out)`` with the first round token already
+        recorded; raises ``ConnectionTornError`` if any streaming pull
+        dies mid-step (the caller retries without it)."""
+        cfg = self.model.cfg
+        bs = self.block_size
+        residents = list(self.resident.values())
+        batch = residents + [
+            _Resident(fl.req, fl.req.decode_blocks, fl.req.prompt_len,
+                      fl.first_token)
+            for fl in streaming
+        ]
+        b = len(batch)
+        per_seq, tables = self._batch_tables(batch, self._round_margin(max_new))
+
+        def fetch(layer: int):
+            # the synchronization point of the whole design: block until
+            # THIS layer's reads executed, not until the pull resolves
+            for fl in streaming:
+                fl.future.wait_layer(layer, budget=pump_budget)
+            k = np.zeros((b, per_seq, bs, cfg.num_kv_heads, cfg.head_dim),
+                         np.float32)
+            v = np.zeros_like(k)
+            kplane, vplane = self.cache.kv_planes(layer)
+            for i, r in enumerate(batch):
+                n = len(r.blocks)
+                if i < len(residents):
+                    # resident: reuse the float32 page cache instead of
+                    # re-gathering/re-casting from the slab every round
+                    rk, rv = self._resident_pages(r)
+                    k[i, :n], v[i, :n] = rk[layer, :n], rv[layer, :n]
+                else:  # streaming: this layer's bytes just landed
+                    k[i, :n] = kplane[r.blocks].astype(np.float32)
+                    v[i, :n] = vplane[r.blocks].astype(np.float32)
+            return jnp.asarray(k, jnp.bfloat16), jnp.asarray(v, jnp.bfloat16)
+
+        state = DecodeState(
+            context_lens=jnp.asarray([r.context_len for r in batch], jnp.int32),
+            block_tables=tables,
+        )
+        tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
+        logits, state = self.model.decode_step_layerwise(
+            self.params, state, tokens, fetch)
+        # All layers landed; the pulls' COMPLETE tails resolve now.  A
+        # failure here (torn after the last layer, COMPLETE swallowed)
+        # invalidates the admission exactly like a mid-layer tear.
+        for fl in streaming:
+            while not fl.future.done():
+                if not self.engine.pending:
+                    raise RuntimeError(
+                        f"transfer of {fl.req.request_id!r} has no COMPLETE queued")
+                self.engine.progress(pump_budget)
+        for fl in streaming:
+            if fl.future.failed:
+                raise fl.future.exception()
+        self.pump(0)  # promote the resolved admissions (no transfer work)
+        for r in batch[len(residents):]:
+            # keep OUR entry: it reflects the step this round already ran
+            self.resident[r.req.request_id] = r
+        tokens = self._argmax_tokens(logits)
+        out: dict[str, list[int]] = {r.req.request_id: [] for r in batch}
+        for i, r in enumerate(batch):
+            out[r.req.request_id].append(int(tokens[i]))
+            r.req.tokens_generated += 1
+        return batch, state, tokens, out
+
+    def _streaming_step(self, max_new: int, pump_budget: int | None):
+        """Run the layerwise first step over every in-flight admission,
+        dropping (and aborting) admissions whose pull is torn mid-step and
+        retrying with the survivors — a teardown BETWEEN layers must not
+        change the survivors' tokens, so the step restarts cleanly (no
+        tokens or state were committed yet)."""
+        while self.inflight and max_new > 0:
+            streaming = list(self.inflight.values())
+            try:
+                return self._layerwise_first_step(streaming, max_new, pump_budget)
+            except ConnectionTornError:
+                # torn futures are resolved; pump aborts their admissions
+                # (frees decode blocks) and keeps the healthy ones in
+                # flight for the retry
+                self.pump(0)
+        return None
 
     def decode_round(self, max_new: int = 8, *,
                      pump_budget: int | None = 32) -> dict[str, list[int]]:
@@ -281,23 +408,32 @@ class DecodeWorker:
 
         Between decode steps the worker pumps the transfer engine by
         ``pump_budget`` transactions, so in-flight pulls make progress
-        behind decode compute; requests whose pull resolves mid-round are
-        promoted immediately and join the batch at the next round."""
-        if not self.resident:
-            self.pump(pump_budget)
+        behind decode compute.  With ``consume="full"`` requests whose
+        pull resolves mid-round are promoted immediately and join the
+        batch at the NEXT round; with ``consume="layerwise"`` in-flight
+        admissions join THIS round — the first step consumes their KV
+        layer by layer while the tail of the pull is still in flight."""
+        stream = None
+        if self.consume == "layerwise" and self.inflight:
+            stream = self._streaming_step(max_new, pump_budget)
+        if stream is not None:
+            batch, state, tokens, out = stream
+            steps_left = max_new - 1
+        else:
             if not self.resident:
-                return {}
-        batch = list(self.resident.values())
-        state = self._build_state(batch, margin_blocks=-(-max_new // self.block_size))
-        tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
-        out: dict[str, list[int]] = {r.req.request_id: [] for r in batch}
-        for _ in range(max_new):
+                self.pump(pump_budget)
+                if not self.resident:
+                    return {}
+            batch = list(self.resident.values())
+            state = self._build_state(batch, margin_blocks=self._round_margin(max_new))
+            tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
+            out = {r.req.request_id: [] for r in batch}
+            steps_left = max_new
+        for _ in range(steps_left):
             logits, state = self.model.decode_step(self.params, state, tokens)
             if self.inflight:
                 self.pump(pump_budget)  # transfer hides behind the step
-            tokens = jnp.argmax(
-                logits[:, : self.model.cfg.vocab_size].astype(jnp.float32), axis=-1
-            ).astype(jnp.int32)
+            tokens = self._argmax_tokens(logits)
             for i, r in enumerate(batch):
                 out[r.req.request_id].append(int(tokens[i]))
                 r.req.tokens_generated += 1

@@ -151,5 +151,7 @@ class CostModel:
         un-overlappable part is one layer's share.  Applies to paged KV
         and to per-layer SSM state alike (``pull_state``/``push_layer``
         both move one layer at a time) — the same tail the sim's push
-        path has always modeled, now shared with the overlapped pull."""
+        path has always modeled, now realized by the pull path's
+        ``transfer_overlap="layerwise"`` consumer
+        (``DecodeWorker(consume="layerwise")``)."""
         return self.transfer_s(prompt_len, **kw) / max(self.cfg.num_layers, 1)

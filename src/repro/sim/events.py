@@ -59,23 +59,28 @@ class SimConfig:
     # exceeds it are rejected at admission instead of degrading everyone
     slo_s: float | None = None
     # Transfer-engine model (pull mode): how a decode worker's KV pulls
-    # interact with its decode iterations.
-    #   "pipelined"  — pulls serialize on the NIC but never block decode;
-    #                  a request joins decode when its whole pull lands.
+    # interact with its decode iterations, and WHEN a request becomes
+    # decodable (its consumer mode).
     #   "blocking"   — the synchronous engine: the worker sits in drain()
     #                  for the whole pull, so decode iterations and
     #                  transfers mutually exclude on the worker.
-    #   "overlapped" — the async engine with layer-streamed pull: decode
-    #                  never blocks AND a request joins decode once its
-    #                  layer-0 KV lands (visible tail = one layer's
-    #                  share); COMPLETE — and the prefill-side free —
-    #                  still waits for the last byte.  NOTE: the engine
-    #                  exposes per-layer completion (future.layers_done)
-    #                  but the real decode step does not consume it yet
-    #                  (ROADMAP: layer-streamed decode consumption), so
-    #                  today's serving path realizes the admission/NIC
-    #                  overlap of this mode while its layer-0 join models
-    #                  the engine's exposed-but-unconsumed capability.
+    #   "pipelined"  — pulls serialize on the NIC but never block decode;
+    #                  a request joins decode when its whole pull lands.
+    #   "overlapped" — the async engine with FULL-PULL consumption (the
+    #                  serving path's consume="full"): decode never
+    #                  blocks, admissions batch, but the first decode
+    #                  step still waits for COMPLETE — so the join point
+    #                  is the last byte, same as "pipelined".  Kept as a
+    #                  distinct name so sweeps can label the engine
+    #                  generation they model.
+    #   "layerwise"  — the pipelined attention consumer (the serving
+    #                  path's consume="layerwise"): the first decode step
+    #                  runs layer l's attention as soon as layer l's
+    #                  reads land, so the request joins decode once its
+    #                  layer-0 KV arrives (visible tail = one layer's
+    #                  share, costs.transfer_layer_tail_s); COMPLETE —
+    #                  and the prefill-side free — still waits for the
+    #                  last byte.
     transfer_overlap: str = "pipelined"
     # max KV_QUEUED admissions started per scheduling opportunity
     # (0 = admit everything that fits; 1 = one-shot admission)
@@ -189,10 +194,11 @@ class ClusterSim:
         # per-(prefill, decode) link multiplier on transfer time — the
         # skewed topology the network-aware policy exploits (NetKV)
         self.link_scales = dict(link_scales or {})
-        if sim_cfg.transfer_overlap not in ("pipelined", "blocking", "overlapped"):
+        if sim_cfg.transfer_overlap not in (
+                "pipelined", "blocking", "overlapped", "layerwise"):
             raise ValueError(
-                f"transfer_overlap must be pipelined|blocking|overlapped, "
-                f"got {sim_cfg.transfer_overlap!r}")
+                f"transfer_overlap must be pipelined|blocking|overlapped|"
+                f"layerwise, got {sim_cfg.transfer_overlap!r}")
         if sim_cfg.policy == "slo":
             if sim_cfg.slo_s is None:
                 raise ValueError(
@@ -424,8 +430,8 @@ class ClusterSim:
             req.transfer_start_s, req.transfer_end_s = start, start + dt
             w = next(p for p in self.prefills if p.wid == req.prefill_worker)
             self._at(start + dt, lambda req=req, w=w: self._transfer_done(req, w))
-            if self.cfg.transfer_overlap == "overlapped":
-                # layer-streamed pull: decodable once layer 0 lands
+            if self.cfg.transfer_overlap == "layerwise":
+                # layer-streamed consumption: decodable once layer 0 lands
                 join_at = start + min(dt, self._pair_layer_tail_s(req, d.wid))
                 self._at(join_at, lambda req=req: self._join_decode(req))
 
@@ -433,8 +439,8 @@ class ClusterSim:
         # COMPLETE(): prefill frees its copy
         w.held_tokens -= req.prompt_len
         self._try_start_prefills()
-        if self.cfg.transfer_overlap != "overlapped":
-            self._join_decode(req)  # overlapped mode joined at layer 0
+        if self.cfg.transfer_overlap != "layerwise":
+            self._join_decode(req)  # layerwise mode joined at layer 0
         d = next(x for x in self.decodes if x.wid == req.decode_worker)
         self._try_transfers(d)  # NIC freed: admit the next batch
 

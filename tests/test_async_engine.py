@@ -362,9 +362,10 @@ class TestSimOverlap:
 
     @pytest.mark.parametrize("qps", [0.5, 2.0])
     def test_overlapped_ttft_strictly_below_blocking(self, cost, qps):
-        # The acceptance shape of fig_overlap: batched overlapped
-        # admission beats the one-shot blocking pull at every QPS on the
-        # KV-inclusive TTFT.
+        # The acceptance shape of fig_overlap: batched async admission
+        # beats the one-shot blocking pull at every QPS on the
+        # KV-inclusive TTFT, and the layerwise consumer (join at the
+        # layer-0 tail) sits at or below the full-pull async engine.
         reqs = sample_requests(SHAREGPT, qps=qps, duration_s=60, seed=11)
         block = ClusterSim(cost, SimConfig(
             n_prefill=2, n_decode=2, transfer_overlap="blocking",
@@ -372,12 +373,18 @@ class TestSimOverlap:
         over = ClusterSim(cost, SimConfig(
             n_prefill=2, n_decode=2, transfer_overlap="overlapped",
             admission_batch=8)).run(list(reqs)).summary()
+        layer = ClusterSim(cost, SimConfig(
+            n_prefill=2, n_decode=2, transfer_overlap="layerwise",
+            admission_batch=8)).run(list(reqs)).summary()
         assert over["p50_ttft_kv_s"] < block["p50_ttft_kv_s"]
         assert over["p90_ttft_kv_s"] < block["p90_ttft_kv_s"]
+        assert layer["p50_ttft_kv_s"] <= over["p50_ttft_kv_s"]
+        assert layer["p90_ttft_kv_s"] <= over["p90_ttft_kv_s"]
+        assert layer["p90_ttft_kv_s"] < block["p90_ttft_kv_s"]
 
     def test_all_modes_conserve_requests(self, cost):
         reqs = sample_requests(SHAREGPT, qps=0.5, duration_s=60, seed=7)
-        for overlap in ("pipelined", "blocking", "overlapped"):
+        for overlap in ("pipelined", "blocking", "overlapped", "layerwise"):
             sim = ClusterSim(cost, SimConfig(transfer_overlap=overlap,
                                              admission_batch=2))
             res = sim.run(list(reqs))

@@ -1,0 +1,384 @@
+"""Layer-streamed decode consumption (``consume="layerwise"``).
+
+Three layers of guarantees:
+
+1. ``TransferFuture.wait_layer`` — the consumer's synchronization
+   primitive: progresses the engine exactly until the requested layer's
+   reads executed, raises typed ``ConnectionTornError`` when the pull is
+   torn down (including BETWEEN layers), and fails loudly on untagged
+   pulls / bad layer indices.
+2. Equivalence — ``consume="layerwise"`` and full-pull decode produce
+   BIT-IDENTICAL logits and tokens (models are built with ``unroll=True``
+   so both paths run the same python-loop per-op math; the scan path is
+   numerically equivalent but XLA schedules it differently), across batch
+   sizes and margin (``max_new``) settings.  CPU-only, no pallas.
+3. Fault injection — a teardown injected between layer completions
+   mid-``decode_round`` fails the torn request's future with the right
+   ``request_id``, parks the request (or re-routes it when capacity
+   exists), leaves co-batched survivors' tokens unchanged, and
+   ``retry_parked`` replays it to a healthy worker with identical output.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn
+from repro.core.transfer_engine import (
+    ConnectionTornError,
+    MemoryRegion,
+    TransferEngine,
+)
+from repro.models.transformer import DecoderLM
+from repro.serving.disagg import DisaggService
+from repro.serving.engine import DecodeWorker
+from repro.serving.request import RequestState
+
+DST_BASE = 1 << 20
+PAGE = 4096
+
+
+def make_engine():
+    eng = TransferEngine()
+    src = np.arange(64 * 1024, dtype=np.uint8) % 251
+    dst = np.zeros(64 * 1024, dtype=np.uint8)
+    eng.register_memory(MemoryRegion("p0", 0, src))
+    eng.register_memory(MemoryRegion("d0", DST_BASE, dst))
+    return eng, src, dst
+
+
+def layered_pull(rid: str, n_layers: int, blocks_per_layer: int = 2):
+    """The txn shape pull_kv emits: layer-ordered reads, COMPLETE last."""
+    txns = []
+    for layer in range(n_layers):
+        for b in range(blocks_per_layer):
+            off = (layer * blocks_per_layer + b) * PAGE
+            txns.append(ReadTxn(rid, "p0", "d0", ByteRange(off, PAGE),
+                                ByteRange(DST_BASE + off, PAGE), layer=layer))
+    txns.append(CompleteTxn(rid, "p0", "d0"))
+    return txns
+
+
+class TestWaitLayer:
+    def test_progresses_only_until_the_layer_lands(self):
+        eng, src, dst = make_engine()
+        (fut,) = eng.submit(layered_pull("r1", n_layers=3))
+        fut.wait_layer(0, budget=1)
+        assert fut.layer_done(0) and not fut.layer_done(1)
+        assert eng.pending > 0 and not fut.done()
+        # layer-0 bytes are already byte-exact in the destination
+        np.testing.assert_array_equal(dst[: 2 * PAGE], src[: 2 * PAGE])
+        fut.wait_layer(2)
+        assert fut.layers_done == (0, 1, 2)
+
+    def test_noop_on_already_done_layer(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit(layered_pull("r1", n_layers=2))
+        eng.drain()
+        assert fut.done()
+        fut.wait_layer(1)  # resolved future: returns immediately
+
+    @pytest.mark.parametrize("torn_worker", ["p0", "d0"])
+    def test_teardown_between_layers_raises_typed(self, torn_worker):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit(layered_pull("rX", n_layers=3))
+        fut.wait_layer(0, budget=1)
+        eng.deregister_memory(torn_worker)  # between layer 0 and layer 1
+        with pytest.raises(ConnectionTornError) as ei:
+            fut.wait_layer(1)
+        assert ei.value.request_ids == ("rX",)
+        assert fut.failed
+
+    def test_bad_layer_index_raises_runtimeerror(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit(layered_pull("r1", n_layers=2))
+        with pytest.raises(RuntimeError, match="layer 7"):
+            fut.wait_layer(7)
+
+    def test_untagged_pull_raises_runtimeerror(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit([
+            ReadTxn("r1", "p0", "d0", ByteRange(0, PAGE),
+                    ByteRange(DST_BASE, PAGE)),
+            CompleteTxn("r1", "p0", "d0")])
+        with pytest.raises(RuntimeError, match="untagged"):
+            fut.wait_layer(0)
+
+    def test_layer_callbacks_fire_in_order_and_late_registration(self):
+        eng, _, _ = make_engine()
+        (fut,) = eng.submit(layered_pull("r1", n_layers=3))
+        seen = []
+        fut.add_layer_callback(lambda f, l: seen.append(l))
+        fut.wait_layer(1, budget=1)
+        assert seen == [0, 1]
+        late = []
+        fut.add_layer_callback(lambda f, l: late.append(l))  # fires for done
+        assert late == [0, 1]
+        eng.drain()
+        assert seen == late == [0, 1, 2]
+
+
+# ---------------------------------------------------------------- models
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    # unroll=True: decode_step runs layers as a python loop, the same
+    # per-op math as decode_step_layerwise — bit-identity is exact.
+    model = DecoderLM(cfg, unroll=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_smoke_config("llama4-maverick-400b-a17b")  # grouped layers
+    model = DecoderLM(cfg, unroll=True)
+    params = model.init_params(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def monolithic_generate(model, params, tokens, n):
+    logits, state = model.prefill(params, {"tokens": jnp.asarray(tokens[None])},
+                                  remat=False)
+    out = [int(jnp.argmax(logits[0, : model.cfg.vocab_size]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n):
+        logits, state = model.decode_step(params, state, tok)
+        tok = jnp.argmax(logits[:, : model.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+class TestModelLevelEquivalence:
+    @pytest.mark.parametrize("batch", [1, 2, 4])
+    @pytest.mark.parametrize("margin", [1, 2])
+    def test_layerwise_step_bit_identical(self, dense_setup, batch, margin):
+        cfg, model, params = dense_setup
+        rng = np.random.default_rng(batch * 10 + margin)
+        toks = rng.integers(0, cfg.vocab_size, (batch, 64)).astype(np.int32)
+        logits, state = model.prefill(params, {"tokens": jnp.asarray(toks)},
+                                      remat=False, max_blocks_margin=margin)
+        t = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        l_full, s_full = model.decode_step(params, state, t)
+        l_lw, s_lw = model.decode_step_layerwise(
+            params, state, t, lambda l: (state.k_pages[l], state.v_pages[l]))
+        np.testing.assert_array_equal(np.asarray(l_full), np.asarray(l_lw))
+        np.testing.assert_array_equal(np.asarray(s_full.k_pages),
+                                      np.asarray(s_lw.k_pages))
+        np.testing.assert_array_equal(np.asarray(s_full.v_pages),
+                                      np.asarray(s_lw.v_pages))
+        # the layerwise state feeds the NEXT (full) step bit-identically
+        t2 = jnp.argmax(l_full[:, : cfg.vocab_size].astype(jnp.float32),
+                        axis=-1).astype(jnp.int32)
+        l2_full, _ = model.decode_step(params, s_full, t2)
+        l2_lw, _ = model.decode_step(params, s_lw, t2)
+        np.testing.assert_array_equal(np.asarray(l2_full), np.asarray(l2_lw))
+
+    def test_layerwise_step_bit_identical_grouped_moe(self, moe_setup):
+        cfg, model, params = moe_setup
+        assert model.group > 1  # interleaved MoE: the scan unit is a group
+        rng = np.random.default_rng(7)
+        toks = rng.integers(0, cfg.vocab_size, (2, 64)).astype(np.int32)
+        logits, state = model.prefill(params, {"tokens": jnp.asarray(toks)},
+                                      remat=False, max_blocks_margin=1)
+        t = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        l_full, s_full = model.decode_step(params, state, t)
+        l_lw, s_lw = model.decode_step_layerwise(
+            params, state, t, lambda l: (state.k_pages[l], state.v_pages[l]))
+        np.testing.assert_array_equal(np.asarray(l_full), np.asarray(l_lw))
+        np.testing.assert_array_equal(np.asarray(s_full.k_pages),
+                                      np.asarray(s_lw.k_pages))
+
+    def test_rejects_non_paged_archs(self, dense_setup):
+        _, model, params = dense_setup
+        cfg = get_smoke_config("mamba2-780m")
+        ssm = DecoderLM(cfg)
+        p = ssm.init_params(jax.random.PRNGKey(0))
+        state = ssm.decode_state_shape(1, 32)
+        with pytest.raises(NotImplementedError, match="paged"):
+            ssm.decode_step_layerwise(p, state, jnp.zeros((1,), jnp.int32),
+                                      lambda l: (None, None))
+
+
+class TestServiceEquivalence:
+    @pytest.mark.parametrize("n_requests", [1, 3])
+    @pytest.mark.parametrize("max_new", [1, 4])  # margin_blocks = ceil(max_new/bs)
+    def test_layerwise_matches_full_and_monolithic(self, dense_setup,
+                                                   n_requests, max_new):
+        cfg, model, params = dense_setup
+        rng = np.random.default_rng(n_requests * 100 + max_new)
+        toks = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+                for _ in range(n_requests)]
+        results = {}
+        for mode in ("full", "layerwise"):
+            svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                                num_blocks=64, consume=mode)
+            reqs = [svc.submit(t) for t in toks]
+            got = svc.generate_many(reqs, max_new=max_new)
+            results[mode] = [got[r.request_id] for r in reqs]
+            assert all(r.state is RequestState.DONE for r in reqs)
+            assert not svc.pending
+        assert results["full"] == results["layerwise"]
+        for i, t in enumerate(toks):
+            assert results["layerwise"][i] == \
+                monolithic_generate(model, params, t, max_new)
+
+    def test_streaming_step_overlaps_the_pull(self, dense_setup):
+        """The tentpole's point: the first decode step's early-layer
+        attention must run while the pull still has transactions queued."""
+        cfg, model, params = dense_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        rng = np.random.default_rng(0)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        svc.admit_queued()
+        pending_at_layer = []
+        orig = model.decode_step_layerwise
+
+        def spy(params_, state, toks, fetch):
+            return orig(params_, state, toks,
+                        lambda l: (pending_at_layer.append((l, svc.engine.pending)),
+                                   fetch(l))[1])
+
+        model.decode_step_layerwise = spy
+        try:
+            out = svc.decode.decode_round(2, pump_budget=4)
+        finally:
+            model.decode_step_layerwise = orig
+        assert req.request_id in out
+        assert pending_at_layer[0][0] == 0
+        assert pending_at_layer[0][1] > 0, \
+            "pull fully drained before the first layer's attention — no overlap"
+
+    def test_full_worker_ignores_inflight_until_complete(self, dense_setup):
+        """consume='full' keeps the PR 2 contract: an in-flight admission
+        is NOT decoded until its future resolves."""
+        cfg, model, params = dense_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, consume="full")
+        rng = np.random.default_rng(1)
+        req = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
+        svc.admit_queued()
+        assert svc.decode.inflight and not svc.decode.resident
+        out = svc.decode.decode_round(1, pump_budget=1)  # one pump, no decode
+        assert out == {} or req.request_id not in out
+
+
+class TestFaultInjectionBetweenLayers:
+    def _tokens(self, cfg, seed=2):
+        return np.random.default_rng(seed).integers(
+            0, cfg.vocab_size, 64).astype(np.int32)
+
+    def test_tear_between_layers_reroutes_with_identical_tokens(self, dense_setup):
+        cfg, model, params = dense_setup
+        tokens = self._tokens(cfg)
+        ref = monolithic_generate(model, params, tokens, 3)
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        req = svc.submit(tokens)
+        victim = req.prefill_worker
+        svc.admit_queued()
+        fut = svc.decode.inflight[req.request_id].future
+        torn = []
+
+        def tear_at_layer_1(f, layer):
+            torn.append(layer)
+            if layer == 1:
+                svc.fail_prefill_worker(victim)
+
+        fut.add_layer_callback(tear_at_layer_1)
+        got = svc.generate_many([req], max_new=3)
+        # the tear fired between layer completions, failed the right
+        # request, and failover replayed it on the surviving prefill
+        assert torn[:2] == [0, 1]
+        assert fut.failed
+        err = fut.exception()
+        assert isinstance(err, ConnectionTornError)
+        assert err.request_ids == (req.request_id,)
+        assert req.prefill_worker != victim
+        assert req.retries == 1
+        assert got[req.request_id] == ref
+
+    def test_tear_between_layers_parks_then_retry_parked_replays(self, dense_setup):
+        cfg, model, params = dense_setup
+        tokens = self._tokens(cfg, seed=3)
+        ref = monolithic_generate(model, params, tokens, 3)
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        req = svc.submit(tokens)
+        victim = req.prefill_worker
+        svc.admit_queued()
+        fut = svc.decode.inflight[req.request_id].future
+        fut.add_layer_callback(
+            lambda f, layer: layer == 1 and svc.fail_prefill_worker(victim))
+        got = svc.generate_many([req], max_new=3)
+        assert got == {}  # no capacity to re-route: parked, not decoded
+        assert fut.failed and isinstance(fut.exception(), ConnectionTornError)
+        assert fut.exception().request_ids == (req.request_id,)
+        assert req.state is RequestState.FAILED
+        assert req.request_id not in svc.decode.inflight  # blocks freed
+        svc.add_prefill_worker(num_blocks=64)
+        assert svc.retry_parked() == [req.request_id]
+        assert svc.generate_many([req], max_new=3)[req.request_id] == ref
+
+    def test_survivors_unaffected_by_cobatched_tear(self, dense_setup):
+        """Two admissions stream into the same first step; one's source
+        dies between layers — the survivor's tokens must be identical to
+        a fault-free run (the step restarts without the torn request)."""
+        cfg, model, params = dense_setup
+        t_victim, t_survivor = self._tokens(cfg, 4), self._tokens(cfg, 5)
+        ref_victim = monolithic_generate(model, params, t_victim, 3)
+        ref_survivor = monolithic_generate(model, params, t_survivor, 3)
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        # route each request to a different prefill worker (least_loaded
+        # spreads them), so one teardown hits exactly one pull
+        r_victim = svc.submit(t_victim)
+        r_survivor = svc.submit(t_survivor)
+        assert r_victim.prefill_worker != r_survivor.prefill_worker
+        victim_w = r_victim.prefill_worker
+        svc.admit_queued()
+        fut = svc.decode.inflight[r_victim.request_id].future
+        fut.add_layer_callback(
+            lambda f, layer: layer == 1 and svc.fail_prefill_worker(victim_w))
+        got = svc.generate_many([r_victim, r_survivor], max_new=3)
+        assert got[r_survivor.request_id] == ref_survivor
+        assert r_survivor.retries == 0
+        # the torn request re-prefilled on the survivor worker and still
+        # produced the right tokens
+        assert got[r_victim.request_id] == ref_victim
+        assert r_victim.retries == 1
+
+    def test_worker_level_retry_loop_drops_only_torn(self, dense_setup):
+        """DecodeWorker._streaming_step: a ConnectionTornError between
+        layers aborts the torn admission (freeing its blocks) and the
+        retried step still decodes the survivors."""
+        cfg, model, params = dense_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        r1 = svc.submit(self._tokens(cfg, 6))
+        r2 = svc.submit(self._tokens(cfg, 7))
+        assert r1.prefill_worker != r2.prefill_worker  # tear hits only r1
+        svc.admit_queued()
+        dw = svc.decode
+        free_before = dw.pool.num_free
+        r1_blocks = len(r1.decode_blocks)
+        fut = dw.inflight[r1.request_id].future
+        fut.add_layer_callback(
+            lambda f, layer: layer == 1
+            and svc.engine.deregister_memory(r1.prefill_worker))
+        out = dw.decode_round(2, pump_budget=4)
+        assert r2.request_id in out and len(out[r2.request_id]) == 2
+        assert r1.request_id not in out
+        assert r1.request_id not in dw.inflight  # aborted...
+        assert dw.pool.num_free == free_before + r1_blocks  # ...blocks freed
+
+    def test_bad_consume_value_rejected(self, dense_setup):
+        cfg, model, params = dense_setup
+        with pytest.raises(ValueError, match="consume"):
+            DisaggService(model, params, consume="eager")
+        from repro.core.connection import ChipInfo, WorkerInfo
+        info = WorkerInfo("dX", "decode", "host", (ChipInfo(0, "ici://dX/0"),))
+        with pytest.raises(ValueError, match="consume"):
+            DecodeWorker(info, model, params, consume="eager")

@@ -19,7 +19,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.coalesce import coalesce
-from repro.core.descriptors import ByteRange, ReadTxn, TensorDesc, build_block_reads
+from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn, TensorDesc, build_block_reads
 from repro.core.transfer_engine import MemoryRegion, TransferEngine
 
 # ---------------------------------------------------------------- layouts
@@ -157,3 +157,110 @@ def test_build_block_reads_size_totals(layout, data):
     txns = list(build_block_reads("r", desc, desc, remote, local))
     per_block = extents["KV"] * extents["L"] * extents["H"] * extents["D"] * 2
     assert sum(t.nbytes for t in txns) == n * per_block
+
+
+# --------------------------------------------------------------------
+# 4. Async engine scheduling: for ANY interleaving of submit / budgeted
+#    progress / poll / drain, byte movement is identical to a one-shot
+#    drain, and layer-tagged pulls complete strictly in layer order with
+#    monotone (prefix-preserving) ``layers_done`` growth — the invariants
+#    the layerwise decode consumer (wait_layer) is built on.
+# --------------------------------------------------------------------
+_PAGE = 64
+
+
+@st.composite
+def layered_programs(draw):
+    """Per-request layer-ordered read programs (the shape ``pull_kv``
+    emits: layer 0 first, COMPLETE last) plus a random schedule of
+    engine operations."""
+    n_layers = draw(st.integers(1, 4))
+    n_reqs = draw(st.integers(1, 4))
+    programs = []
+    page_idx = 0
+    for r in range(n_reqs):
+        txns = []
+        n_blocks = draw(st.integers(1, 3))
+        for layer in range(n_layers):
+            for _ in range(n_blocks):
+                txns.append(ReadTxn(
+                    f"r{r}", "p", "d",
+                    ByteRange(page_idx * _PAGE, _PAGE),
+                    ByteRange(page_idx * _PAGE, _PAGE),
+                    layer=layer,
+                ))
+                page_idx += 1
+        txns.append(CompleteTxn(f"r{r}", "p", "d"))
+        programs.append(txns)
+    # schedule: the submits in order, progress/poll randomly interleaved
+    ops = [("submit", i) for i in range(n_reqs)]
+    n_extra = draw(st.integers(0, 12))
+    for _ in range(n_extra):
+        kind = draw(st.sampled_from(["progress", "poll"]))
+        budget = draw(st.integers(1, 7)) if kind == "progress" else 0
+        pos = draw(st.integers(0, len(ops)))
+        ops.insert(pos, (kind, budget))
+    return programs, ops, page_idx
+
+
+def _engine_for(total_pages):
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 255, max(total_pages, 1) * _PAGE, dtype=np.uint8)
+    dst = np.zeros_like(src)
+    eng = TransferEngine(coalescing="fifo")
+    base = src.nbytes
+    eng.register_memory(MemoryRegion("p", 0, src))
+    eng.register_memory(MemoryRegion("d", base, dst))
+    return eng, dst, base
+
+
+def _rebase(txns, base):
+    return [
+        dataclasses.replace(t, local=ByteRange(t.local.offset + base, t.local.nbytes))
+        if isinstance(t, ReadTxn) else t
+        for t in txns
+    ]
+
+
+@settings(max_examples=80, deadline=None)
+@given(layered_programs())
+def test_any_interleaving_matches_one_shot_drain(program):
+    programs, ops, total_pages = program
+    # reference: submit everything, one drain
+    ref, ref_dst, ref_base = _engine_for(total_pages)
+    for txns in programs:
+        ref.submit(_rebase(txns, ref_base))
+    ref.drain()
+
+    eng, dst, base = _engine_for(total_pages)
+    futures = {}
+    snapshots = {i: [()] for i in range(len(programs))}
+    polled = []
+    for op, arg in ops:
+        if op == "submit":
+            (fut,) = eng.submit(_rebase(programs[arg], base))
+            futures[arg] = fut
+        elif op == "progress":
+            eng.progress(arg)
+        else:
+            polled.extend(f.request_id for f in eng.poll())
+        for i, fut in futures.items():
+            snapshots[i].append(fut.layers_done)
+    eng.drain()
+    polled.extend(f.request_id for f in eng.poll())
+
+    # 1. byte-identical to the one-shot drain, same completes
+    np.testing.assert_array_equal(dst, ref_dst)
+    assert eng.stats.bytes_moved == ref.stats.bytes_moved
+    assert eng.stats.completes == ref.stats.completes == len(programs)
+    # 2. every future resolved with layers 0..L-1 in strict layer order
+    n_layers = max(t.layer for t in programs[0] if isinstance(t, ReadTxn)) + 1
+    for i, fut in futures.items():
+        assert fut.done() and not fut.failed
+        assert fut.layers_done == tuple(range(n_layers))
+    # 3. layers_done is MONOTONE: each snapshot extends the previous
+    for i, snaps in snapshots.items():
+        for a, b in zip(snaps, snaps[1:]):
+            assert b[: len(a)] == a
+    # 4. every request's completion was observable exactly once via poll
+    assert sorted(polled) == sorted(f"r{i}" for i in range(len(programs)))
