@@ -1,0 +1,201 @@
+"""Continuous batching vs round-synchronous decode: the serving-API sweep.
+
+The PR 5 redesign replaced the round-synchronous ``generate_many`` front
+door (per-worker cohorts: every request in a round starts and stops
+together, late admissions wait for the next round) with an event-driven
+``ServeLoop`` whose decode workers run per-step continuous batching —
+requests join the running batch as their KV lands and leave at
+EOS/``max_new`` without stalling cohabitants.
+
+This benchmark measures what that buys at the tail, on the discrete-event
+simulator (2 prefill × 2 decode, pull mode, async "overlapped" engine,
+``SimConfig.batching`` = round | continuous — the sim knob that mirrors
+the real admission semantics):
+
+  * the reported headline is **p90 time-to-last-token** (arrival → final
+    token, ``p90_total_s``) at each swept QPS: a late arrival under round
+    batching waits for the whole resident cohort to drain before its
+    first decode step, and that wait compounds into the TTLT tail;
+  * p90 KV-inclusive TTFT (arrival → decodable) is reported alongside —
+    it moves for the same reason.
+
+Beyond the simulator, ``real_cells()`` demonstrates the same contrast
+END-TO-END on the real substrate: request B is submitted while request A
+is mid-decode; under the ServeLoop B's first decode token lands BEFORE A
+finishes (observable via ``RequestHandle`` metrics), while the
+round-synchronous path makes B wait for A's entire round.
+
+As a benchmark module it emits CSV rows through run.py; run directly it
+writes the full sweep as JSON:
+
+    PYTHONPATH=src python -m benchmarks.fig_continuous [--out fig_continuous.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import SHAREGPT, sample_requests
+
+DURATION = 120.0
+QPS_GRID = (0.25, 0.5, 1.0, 2.0)  # >= 3 QPS points (acceptance)
+BATCHINGS = ("round", "continuous")
+SEED = 23
+
+
+def sweep() -> list[dict]:
+    cost = CostModel(get_config("mistral-large-123b"), H100_NODE)
+    cells = []
+    for qps in QPS_GRID:
+        reqs = sample_requests(SHAREGPT, qps=qps, duration_s=DURATION, seed=SEED)
+        for batching in BATCHINGS:
+            s = ClusterSim(cost, SimConfig(
+                n_prefill=2, n_decode=2, mode="pull",
+                transfer_overlap="overlapped", batching=batching,
+            )).run(list(reqs)).summary()
+            cells.append({
+                "batching": batching, "qps": qps, "n": int(s["n"]),
+                "p50_ttlt_s": s["p50_total_s"],
+                "p90_ttlt_s": s["p90_total_s"],
+                "p90_ttft_kv_s": s["p90_ttft_kv_s"],
+                "p90_tbt_s": s["p90_tbt_s"],
+            })
+    return cells
+
+
+# ------------------------------------------------------------- real path
+def real_cells(prompt_len: int = 64, max_new_a: int = 8,
+               max_new_b: int = 2) -> list[dict]:
+    """Mid-decode join on the real substrate (JAX compute, real KV bytes).
+
+    Continuous: submit A, tick until A is mid-decode, submit B, keep
+    ticking — B's first decode token must land before A's last
+    (``joined_before_a_done``), straight off the handles' metrics.
+    Round-synchronous baseline: the same arrival pattern driven with
+    ``decode_round`` cohorts — B's first decode token can only land
+    after A's cohort drains.  Token streams are asserted identical."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.serving.disagg import DisaggService
+
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    tok_a = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    tok_b = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+
+    cells = []
+    streams = {}
+
+    # --- continuous: the ServeLoop path -------------------------------
+    svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=256)
+    t0 = time.perf_counter()
+    ha = svc.submit(tok_a, max_new=max_new_a)
+    while ha.decoded < max_new_a // 2:  # A mid-decode
+        svc.loop.tick()
+    hb = svc.submit(tok_b, max_new=max_new_b)
+    svc.loop.run_until_idle()
+    a_last = ha.metrics.last_token_at
+    b_first_decode = time.perf_counter()  # fallback if B never decoded
+    if len(hb.metrics.token_times) > 1:
+        b_first_decode = hb.metrics.token_times[1]
+    streams["continuous"] = (list(ha.tokens), list(hb.tokens))
+    cells.append({
+        "batching": "continuous",
+        "wall_s": time.perf_counter() - t0,
+        "b_ttlt_s": hb.metrics.ttlt_s,
+        "joined_before_a_done": bool(b_first_decode < a_last),
+    })
+
+    # --- round-synchronous baseline: decode_round cohorts -------------
+    svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=256)
+    t0 = time.perf_counter()
+    ra = svc.submit(tok_a)
+    svc.admit_queued(only={ra.request_id})
+    svc.pump(None)
+    dw = svc.decode
+    # cohort 1 = {A}: B arrives mid-round but must wait for the cohort
+    out_a = dw.decode_round(max_new_a // 2)
+    rb = svc.submit(tok_b)
+    b_submitted = time.perf_counter()
+    out_a2 = dw.decode_round(max_new_a - max_new_a // 2)
+    a_done = time.perf_counter()
+    dw.finish(ra.request_id)
+    # cohort 2 = {B}
+    svc.admit_queued(only={rb.request_id})
+    svc.pump(None)
+    out_b = dw.decode_round(max_new_b)
+    b_done = time.perf_counter()
+    dw.finish(rb.request_id)
+    streams["round"] = (
+        [svc.first_tokens[ra.request_id]] + out_a[ra.request_id] + out_a2[ra.request_id],
+        [svc.first_tokens[rb.request_id]] + out_b[rb.request_id])
+    cells.append({
+        "batching": "round",
+        "wall_s": time.perf_counter() - t0,
+        "b_ttlt_s": b_done - b_submitted,
+        "joined_before_a_done": bool(b_done < a_done),
+    })
+    assert streams["continuous"] == streams["round"], \
+        "continuous batching changed the token streams"
+    return cells
+
+
+def _rows(cells: list[dict], real: list[dict] | None = None) -> list[Row]:
+    rows = []
+    for c in cells:
+        rows.append(Row(
+            f"continuous/qps{c['qps']}/{c['batching']}",
+            c["p90_ttlt_s"] * 1e6,
+            f"p50_ttlt={c['p50_ttlt_s']:.2f}s;p90_ttlt={c['p90_ttlt_s']:.2f}s;"
+            f"p90_ttft_kv={c['p90_ttft_kv_s']:.3f}s",
+        ))
+    for qps in sorted({c["qps"] for c in cells}):
+        rd = next(c for c in cells if c["qps"] == qps and c["batching"] == "round")
+        ct = next(c for c in cells if c["qps"] == qps and c["batching"] == "continuous")
+        rows.append(Row(
+            f"continuous/qps{qps}/summary", 0.0,
+            f"round_vs_continuous_p90_ttlt="
+            f"{rd['p90_ttlt_s'] / max(ct['p90_ttlt_s'], 1e-9):.2f}x"))
+    for c in real or []:
+        rows.append(Row(
+            f"continuous/real/{c['batching']}", c["wall_s"] * 1e6,
+            f"b_ttlt={c['b_ttlt_s']:.3f}s;"
+            f"joined_before_a_done={c['joined_before_a_done']}"))
+    return rows
+
+
+def run() -> list[Row]:
+    return _rows(sweep(), real_cells())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="fig_continuous.json")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="sim sweep only (no JAX model build)")
+    args = ap.parse_args()
+    cells = sweep()
+    real = [] if args.skip_real else real_cells()
+    with open(args.out, "w") as f:
+        json.dump({"config": {"duration_s": DURATION, "workload": "sharegpt",
+                              "topology": "2P x 2D", "qps_grid": QPS_GRID,
+                              "batchings": BATCHINGS},
+                   "cells": cells, "real": real}, f, indent=2)
+    print(f"wrote {len(cells)} sim cells + {len(real)} real cells to {args.out}")
+    print("name,us_per_call,derived")
+    for row in _rows(cells, real):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ MODULES = [
     "fig15_bandwidth",
     "fig16_pull_vs_push",
     "fig17_coalescing",
+    "fig_continuous",
     "fig_overlap",
     "fig_sched_policies",
     "kernel_bench",

@@ -304,6 +304,7 @@ class TransferEngine:
         staging_blocks: int = 2,
         staging_block_bytes: int = 256 * 1024,
         codec: str = "none",
+        tick_budget: int = 64,
     ) -> None:
         """codec="int8_transport": beyond-paper KV compression on the wire
         (the paper lists KV compression as complementary, §6) — bf16 spans
@@ -338,6 +339,11 @@ class TransferEngine:
         # not fire for it.
         self._torn_completes: set[str] = set()
         self._complete_cbs: list[Callable[[CompleteTxn], None]] = []
+        # Per-request bytes actually landed (executed reads, retries
+        # accumulate).  Entries live until pulled_bytes(pop=True) — the
+        # serving layer pops them into the request handle at completion.
+        self._pulled_bytes: collections.Counter[str] = collections.Counter()
+        self.tick_budget = tick_budget
         self.stats = TransferStats()
 
     # ------------------------------------------------------------- setup
@@ -472,6 +478,25 @@ class TransferEngine:
             processed += len(window)
         return processed
 
+    def tick(self, budget: int | None = None) -> int:
+        """Event-loop progress hook: advance up to ``budget`` transactions
+        (defaulting to the engine's configured ``tick_budget``) and return
+        how many were processed.  This is the hook a serving loop calls
+        once per tick so transfer work is metered against admission and
+        decode work instead of monopolizing the tick."""
+        if not self._queue:
+            return 0
+        return self.progress(self.tick_budget if budget is None else budget)
+
+    def pulled_bytes(self, request_id: str, *, pop: bool = False) -> int:
+        """Bytes landed for ``request_id`` so far (executed reads only;
+        retries accumulate).  ``pop=True`` retires the entry — callers
+        finishing a request should pop so a long-lived engine doesn't
+        grow one counter per request ever served."""
+        if pop:
+            return self._pulled_bytes.pop(request_id, 0)
+        return self._pulled_bytes.get(request_id, 0)
+
     # ------------------------------------------------------------- drain
     def drain(self) -> TransferStats:
         """Process the whole queue (progress-until-empty).  Returns
@@ -502,6 +527,8 @@ class TransferEngine:
     # --------------------------------------------------- tensor-centric
     def _post_reads(self, window: Sequence[ReadTxn]) -> None:
         healthy, torn_err = self._filter_torn(window)
+        for t in healthy:
+            self._pulled_bytes[t.request_id] += t.nbytes
         merged = coalesce(healthy, strategy=self.coalescing)
         t0 = time.perf_counter()
         for op in merged:
@@ -523,6 +550,8 @@ class TransferEngine:
         """Fig. 7a: bounded staging buffer, per-round RPC + gather + send +
         scatter + notify, with REAL double copies under memcpy."""
         healthy, torn_err = self._filter_torn(window)
+        for t in healthy:
+            self._pulled_bytes[t.request_id] += t.nbytes
         t0 = time.perf_counter()
         round_txns: list[ReadTxn] = []
         round_bytes = 0

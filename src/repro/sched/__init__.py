@@ -24,6 +24,7 @@ from repro.sched.policies import (
     LeastLoadedPolicy,
     NetworkAwarePolicy,
     Policy,
+    PrefixAffinityPolicy,
     RoundRobinPolicy,
     RouteRequest,
     SLOAwarePolicy,
@@ -45,6 +46,7 @@ __all__ = [
     "NetworkAwarePolicy",
     "NoWorkersError",
     "Policy",
+    "PrefixAffinityPolicy",
     "RequestRouter",
     "RoundRobinPolicy",
     "RouteDecision",

@@ -41,6 +41,14 @@ class LoadReport:
     queue_depth: int = 0
     block_size: int = 32
     t: float = 0.0
+    # Shared-prefix ids this worker currently holds resident (live
+    # requests, in-flight pulls, and the BlockPool-refcounted retention
+    # cache) — the signal the "prefix_affinity" policy routes on.
+    prefix_ids: tuple[str, ...] = ()
+    # Blocks held only by the prefix retention cache: NOT free (they
+    # count as load for placement) but reclaimable on demand, so
+    # admission planning may spend them (the worker evicts lazily).
+    evictable_blocks: int = 0
 
     @property
     def queued_blocks(self) -> int:

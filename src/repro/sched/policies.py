@@ -17,6 +17,9 @@ Policies:
     cost of the request's KV footprint over the candidate's link
     (NetKV-style path awareness), tie-broken by load; prefill selection
     falls back to least-loaded.
+  * ``prefix_affinity`` — decode selection prefers the worker already
+    holding the request's shared prefix (BlockPool-refcount residency,
+    reported via ``LoadReport.prefix_ids``); falls back to least-loaded.
   * ``slo``           — TTFT deadline classes with an admission
     controller: picks the placement minimizing projected TTFT and
     rejects (or queues) requests whose projection exceeds their class
@@ -39,6 +42,7 @@ __all__ = [
     "RoundRobinPolicy",
     "LeastLoadedPolicy",
     "NetworkAwarePolicy",
+    "PrefixAffinityPolicy",
     "SLOAwarePolicy",
     "DEFAULT_SLO_CLASSES",
     "POLICIES",
@@ -62,6 +66,7 @@ class RouteRequest:
     kv_bytes: int = 0          # full KV footprint to be pulled decode-side
     slo_class: str = "standard"
     arrival_s: float = 0.0
+    prefix_id: str | None = None  # shared-prefix identity (prefix routing)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +84,7 @@ class Candidate:
     resident: int = 0
     ready_s: float = 0.0
     transfer_cost_s: float = 0.0
+    prefix_hit: float = 0.0  # 1.0 iff this worker holds the request's prefix
 
     @property
     def load_score(self) -> float:
@@ -142,6 +148,24 @@ class NetworkAwarePolicy(LeastLoadedPolicy):
         return min(cands, key=lambda c: (c.transfer_cost_s, c.load_score, c.worker_id))
 
 
+class PrefixAffinityPolicy(LeastLoadedPolicy):
+    """Prefix-cache-aware decode placement: prefer the worker whose
+    BlockPool still holds the request's shared prefix resident
+    (``Candidate.prefix_hit``), so a follow-up request lands where its
+    prefix KV already lives.  Routing affinity only for now — the pull
+    still moves the full prompt; adopting the retained blocks at admit
+    time (skipping the prefix's reads) is the follow-up that turns the
+    hit into a transfer saving (see docs/serving.md).  With no hit
+    anywhere the sort key degenerates to least-loaded — the documented
+    fallback."""
+
+    name = "prefix_affinity"
+
+    def pick_decode(self, ctx: RouteRequest, cands: Sequence[Candidate]) -> Candidate:
+        return min(cands, key=lambda c: (
+            -c.prefix_hit, c.load_score, c.ready_s, c.worker_id))
+
+
 class SLOAwarePolicy(LeastLoadedPolicy):
     """TTFT deadline classes + admission control.  Placement minimizes
     projected start time (the TTFT-critical term); ``admit`` rejects a
@@ -170,6 +194,7 @@ POLICIES: dict[str, type[Policy]] = {
     RoundRobinPolicy.name: RoundRobinPolicy,
     LeastLoadedPolicy.name: LeastLoadedPolicy,
     NetworkAwarePolicy.name: NetworkAwarePolicy,
+    PrefixAffinityPolicy.name: PrefixAffinityPolicy,
     SLOAwarePolicy.name: SLOAwarePolicy,
 }
 

@@ -114,10 +114,13 @@ class RequestRouter:
 
     # -------------------------------------------------------- candidates
     def _candidate(self, worker_id: str, *, ready_s: float = 0.0,
-                   transfer_cost_s: float = 0.0) -> Candidate:
+                   transfer_cost_s: float = 0.0,
+                   prefix_hit: float = 0.0) -> Candidate:
         rep: LoadReport | None = self.scheduler.load(worker_id)
         if rep is None:
-            return Candidate(worker_id, ready_s=ready_s, transfer_cost_s=transfer_cost_s)
+            return Candidate(worker_id, ready_s=ready_s,
+                             transfer_cost_s=transfer_cost_s,
+                             prefix_hit=prefix_hit)
         return Candidate(
             worker_id,
             free_units=rep.free_blocks,
@@ -126,7 +129,18 @@ class RequestRouter:
             resident=rep.resident_requests,
             ready_s=ready_s,
             transfer_cost_s=transfer_cost_s,
+            prefix_hit=prefix_hit,
         )
+
+    def _prefix_hit(self, ctx: RouteRequest, worker_id: str) -> float:
+        """1.0 iff the worker's latest LoadReport says the request's
+        shared prefix is resident there (prefix-affinity routing)."""
+        if ctx.prefix_id is None:
+            return 0.0
+        rep: LoadReport | None = self.scheduler.load(worker_id)
+        if rep is None:
+            return 0.0
+        return 1.0 if ctx.prefix_id in rep.prefix_ids else 0.0
 
     def prefill_candidates(self, now: float = 0.0) -> list[Candidate]:
         return [
@@ -142,6 +156,7 @@ class RequestRouter:
             self._candidate(
                 w.worker_id,
                 transfer_cost_s=self.transfer_cost_s(ctx, prefill_worker, w.worker_id),
+                prefix_hit=self._prefix_hit(ctx, w.worker_id),
             )
             for w in self.scheduler.workers("decode")
         ]
@@ -151,7 +166,7 @@ class RequestRouter:
         if rep is None:
             return True  # no telemetry yet: assume room
         needed = -(-ctx.prompt_len // max(rep.block_size, 1))
-        return rep.free_blocks >= needed
+        return rep.free_blocks + rep.evictable_blocks >= needed
 
     def _fitting(self, ctx: RouteRequest, cands: list[Candidate]) -> list[Candidate]:
         """Only offer candidates that can hold the request's KV right
@@ -210,6 +225,33 @@ class RequestRouter:
         self.total_transfer_cost_s += d.transfer_cost_s
         return decision
 
+    def pick_hedge_prefill(self, ctx: RouteRequest, exclude: set[str],
+                           *, now: float = 0.0) -> str | None:
+        """Hedged dispatch: choose a SECOND prefill worker (distinct from
+        ``exclude``, normally the primary) to run a duplicate prefill of
+        ``ctx``.  Returns None when no alternative worker is alive —
+        hedging silently degrades to a single dispatch.  The twin's work
+        is charged to the ledger under a hedge id so TTFT projections see
+        it; ``forget(request_id)`` retires both charges."""
+        cands = [c for c in self.prefill_candidates(now)
+                 if c.worker_id not in exclude]
+        if not cands:
+            return None
+        p = self.policy.pick_prefill(ctx, self._fitting(ctx, cands))
+        t_prefill = self.prefill_time_fn(ctx.prompt_len)
+        self._busy_until[p.worker_id] = now + p.ready_s + t_prefill
+        self._charges[f"{ctx.request_id}#hedge"] = (p.worker_id, t_prefill)
+        return p.worker_id
+
+    def forget_hedge(self, request_id: str) -> None:
+        """Retire only the hedge charge — the twin never ran (its pool
+        was full), so its projected work must not skew placement."""
+        charge = self._charges.pop(f"{request_id}#hedge", None)
+        if charge is not None:
+            wid, t_prefill = charge
+            if wid in self._busy_until:
+                self._busy_until[wid] -= t_prefill
+
     def drain_backlog(self, *, now: float = 0.0) -> list[RouteDecision]:
         """Retry queued requests in FIFO order; stops at the first that
         is still rejected (later arrivals must not starve it).  Retries
@@ -265,7 +307,10 @@ class RequestRouter:
             if wid not in reports:
                 reports[wid] = self.scheduler.load(wid)
                 rep = reports[wid]
-                budget[wid] = float("inf") if rep is None else float(rep.free_blocks)
+                # retained-prefix blocks are spendable: the worker evicts
+                # its retention cache before failing an admission
+                budget[wid] = float("inf") if rep is None else float(
+                    rep.free_blocks + rep.evictable_blocks)
             rep = reports[wid]
             batch = batches.setdefault(wid, [])
             if max_batch is not None and len(batch) >= max_batch:
@@ -305,11 +350,12 @@ class RequestRouter:
         completed (or abandoned) prefill stops counting against future
         admission projections."""
         self.decisions.pop(request_id, None)
-        charge = self._charges.pop(request_id, None)
-        if charge is not None:
-            wid, t_prefill = charge
-            if wid in self._busy_until:
-                self._busy_until[wid] -= t_prefill
+        for rid in (request_id, f"{request_id}#hedge"):
+            charge = self._charges.pop(rid, None)
+            if charge is not None:
+                wid, t_prefill = charge
+                if wid in self._busy_until:
+                    self._busy_until[wid] -= t_prefill
 
     # ------------------------------------------------------------- stats
     def requeue(self, ctx: RouteRequest) -> None:

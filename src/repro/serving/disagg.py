@@ -4,11 +4,20 @@ engine + the ``repro.sched`` request router.
 
 Flow per request (pull-mode, §4.3):
   submit → router picks a (prefill, decode) pair via the configured
-  policy (round-robin / least-loaded / network-aware / SLO admission) →
-  model prefill (real JAX) → KV blocks land in the prefill worker's
-  registered slab → the ASSIGNED decode worker allocates + pulls via
-  one-sided reads over its own connection table → COMPLETE frees the
-  prefill copy → continuous-batching decode.
+  policy (round-robin / least-loaded / network-aware / prefix-affinity /
+  SLO admission) → model prefill (real JAX) → KV blocks land in the
+  prefill worker's registered slab → the ASSIGNED decode worker
+  allocates + pulls via one-sided reads over its own connection table →
+  COMPLETE frees the prefill copy → continuous-batching decode.
+
+The front door is the STREAMING API (docs/serving.md): ``submit()``
+returns a ``RequestHandle`` and the event-driven ``ServeLoop``
+(``self.loop``) interleaves prefill dispatch, router-planned admission,
+transfer progress, and per-step decode — requests join the running
+batch as their KV lands and leave at EOS/max_new.  ``generate`` /
+``generate_many`` survive as token-identical shims over the loop.
+``submit(hedge=2)`` races twin prefills (first COMPLETE wins, the
+loser's slab is freed, a dead primary's copy is adopted from the twin).
 
 Topology: every decode worker owns a ``ConnectionManager`` with a live
 connection to every prefill worker (§4.2's decode-side connection table),
@@ -29,6 +38,7 @@ Fault tolerance (both roles):
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 
 import numpy as np
@@ -39,10 +49,23 @@ from repro.core.transfer_engine import LinkModel, TransferEngine
 from repro.sched import LoadReport, NoWorkersError, RequestRouter, RouteRequest
 from repro.serving.blocks import OutOfBlocks
 from repro.serving.engine import DecodeWorker, PrefillWorker
+from repro.serving.handle import RequestHandle
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.loop import ServeLoop, ServeLoopStalled
 from repro.serving.request import Request, RequestState
 
 __all__ = ["DisaggService"]
+
+
+@dataclasses.dataclass
+class _HedgeTwin:
+    """A hedged prefill's duplicate KV copy: worker + slab blocks + the
+    (identical) first token.  Freed when the primary's transfer COMPLETEs
+    (loser aborted); adopted by failover when the primary copy dies."""
+
+    worker_id: str
+    blocks: list[int]
+    first_token: int
 
 _RETRYABLE = (
     RequestState.PREFILLING,
@@ -91,6 +114,12 @@ class DisaggService:
         self.conn_mgrs: dict[str, ConnectionManager] = {}
         self.pending: dict[str, tuple[Request, np.ndarray]] = {}  # in flight
         self.first_tokens: dict[str, int] = {}
+        self.handles: dict[str, RequestHandle] = {}  # live (not yet DONE)
+        self.hedges: dict[str, _HedgeTwin] = {}      # rid -> twin KV copy
+        # The event-driven serving loop: every handle is driven by it,
+        # whether the caller ticks it directly (streaming) or goes
+        # through the generate/generate_many shims.
+        self.loop = ServeLoop(self)
 
         policy_kwargs = {"classes": slo_classes} if (
             policy == "slo" and slo_classes is not None) else {}
@@ -197,6 +226,11 @@ class DisaggService:
         """A prefill epoch died (fired once per decode worker's table);
         re-route every request whose KV lived there.  Idempotent: after
         the first re-dispatch the request points at a live worker."""
+        # hedge twins that lived on the dead worker are gone with it —
+        # drop their entries so failover below can't adopt a dead copy
+        for rid, twin in list(self.hedges.items()):
+            if twin.worker_id == dead_worker:
+                self.hedges.pop(rid, None)
         for rid, (req, tokens) in list(self.pending.items()):
             if req.prefill_worker == dead_worker and req.state in _RETRYABLE:
                 self._restart(req, tokens)
@@ -228,20 +262,45 @@ class DisaggService:
 
     def _restart(self, req: Request, tokens: np.ndarray) -> None:
         req.retries += 1
-        if req.prefill_blocks and req.prefill_worker in self.prefills:
-            self.prefills[req.prefill_worker].release(req)  # stale live copy
         dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
         if dw is not None:
             dw.abort(req.request_id)  # drop a dead in-flight pull, free blocks
-        req.prefill_blocks = []
         req.decode_blocks = []
+        h = self.handles.get(req.request_id)
+        if h is not None:
+            h._reset_decoded()  # decode replays from scratch, identically
+        primary_alive = bool(req.prefill_blocks) and req.prefill_worker in self.prefills
+        if not primary_alive:
+            twin = self.hedges.pop(req.request_id, None)
+            if twin is not None and twin.worker_id in self.prefills:
+                # hedged dispatch pays off: adopt the twin's surviving KV
+                # copy — no re-prefill, the request just re-queues for
+                # admission from the twin's slab
+                req.prefill_worker = twin.worker_id
+                req.prefill_blocks = list(twin.blocks)
+                self.first_tokens[req.request_id] = twin.first_token
+                if h is not None:
+                    h.metrics.hedge_adopted = True
+                if req.state is not RequestState.KV_QUEUED:
+                    req.to(RequestState.KV_QUEUED)
+                try:
+                    self._assign_decode(req)
+                except NoWorkersError:
+                    self._park(req)
+                return
+        if primary_alive:
+            self.prefills[req.prefill_worker].release(req)  # stale live copy
+        self._drop_hedge(req.request_id)  # re-dispatch may hedge afresh
+        req.prefill_blocks = []
         if req.state is not RequestState.QUEUED_PREFILL:
             if req.state is not RequestState.FAILED:
                 req.to(RequestState.FAILED)
             req.to(RequestState.QUEUED_PREFILL)
         self.router.forget(req.request_id)
         try:
-            self._dispatch(req, tokens, force=True)  # already admitted once
+            # already admitted once; re-hedge if the caller paid for it
+            self._dispatch(req, tokens, force=True,
+                           hedge=h.hedge if h is not None else 1)
         except (NoWorkersError, OutOfBlocks):
             # must not escape: callers include the membership broadcast —
             # a throw there would abort failover for the other requests
@@ -296,21 +355,25 @@ class DisaggService:
                 total_blocks=w.pool.stats.capacity,
                 resident_requests=len(w.resident),
                 queued_tokens=q_tokens, queue_depth=q_depth,
-                block_size=w.block_size, t=now))
+                block_size=w.block_size, t=now,
+                prefix_ids=tuple(sorted(w.known_prefixes)),
+                evictable_blocks=w.evictable_blocks))
 
     # ------------------------------------------------------------ serve
     def _ctx(self, req: Request) -> RouteRequest:
         blocks = -(-req.prompt_len // self.model.BLOCK_SIZE)
         return RouteRequest(req.request_id, req.prompt_len,
                             kv_bytes=self._slab_bytes(blocks),
-                            slo_class=req.slo_class, arrival_s=req.arrival_s)
+                            slo_class=req.slo_class, arrival_s=req.arrival_s,
+                            prefix_id=req.prefix_id)
 
     def _assign_decode(self, req: Request) -> None:
         self._report_loads()
         req.decode_worker = self.router.reassign_decode(
             self._ctx(req), req.prefill_worker)
 
-    def _dispatch(self, req: Request, tokens: np.ndarray, *, force: bool = False) -> None:
+    def _dispatch(self, req: Request, tokens: np.ndarray, *,
+                  force: bool = False, hedge: int = 1) -> None:
         self._report_loads()
         decision = self.router.route(self._ctx(req), now=self.clock, force=force)
         req.prefill_worker = decision.prefill_worker
@@ -322,23 +385,82 @@ class DisaggService:
             self.router.forget(req.request_id)  # retire the ledger charge
             raise
         req.to(RequestState.KV_QUEUED)
+        if hedge > 1:
+            self._dispatch_hedge(req, tokens)
+        h = self.handles.get(req.request_id)
+        if h is not None and not h.tokens:
+            h._push(self.first_tokens[req.request_id])
+
+    def _dispatch_hedge(self, req: Request, tokens: np.ndarray) -> None:
+        """Run a duplicate prefill on a SECOND worker picked by the
+        router.  The twin's KV copy rides along until the primary's
+        transfer COMPLETEs (then it is aborted and its slab freed) or the
+        primary dies first (then failover adopts it without re-prefill).
+        Degrades silently when no second worker exists or its pool is
+        full — hedging is opportunistic."""
+        twin_wid = self.router.pick_hedge_prefill(
+            self._ctx(req), {req.prefill_worker}, now=self.clock)
+        if twin_wid is None:
+            return
+        try:
+            first, blocks = self.prefills[twin_wid].prefill_shadow(tokens)
+        except OutOfBlocks:
+            self.router.forget_hedge(req.request_id)  # twin never ran
+            return
+        self.hedges[req.request_id] = _HedgeTwin(twin_wid, blocks, first)
+        h = self.handles.get(req.request_id)
+        if h is not None:
+            h.metrics.hedged = True
+
+    def _drop_hedge(self, rid: str) -> None:
+        """The race is decided (COMPLETE, finish, or restart): abort the
+        losing twin and free its slab."""
+        twin = self.hedges.pop(rid, None)
+        if twin is None:
+            return
+        w = self.prefills.get(twin.worker_id)
+        if w is not None:
+            w.pool.free(twin.blocks)
 
     def submit(self, tokens: np.ndarray, *, slo_class: str = "standard",
-               now: float | None = None) -> Request:
-        """Route + prefill immediately (pull-mode: no decode-side
-        reservation).  Raises ``sched.AdmissionRejected`` if the SLO
-        admission controller projects a missed deadline."""
+               now: float | None = None, max_new: int | None = None,
+               eos_token: int | None = None, hedge: int = 1,
+               prefix_id: str | None = None, prefix_len: int = 0,
+               dispatch: str = "eager") -> RequestHandle:
+        """Submit one request; returns a ``RequestHandle`` immediately.
+
+        ``dispatch="eager"`` (default, the historical behavior) routes
+        and prefills synchronously — ``sched.AdmissionRejected`` raises
+        here if the SLO controller projects a missed deadline.
+        ``dispatch="queued"`` returns with the request still QUEUED; the
+        serving loop's next ``tick()`` routes and prefills it (an
+        admission rejection then surfaces on the handle as FAILED).
+
+        ``max_new``/``eos_token`` bound decode for loop-driven serving
+        (``max_new=None`` defers the budget to the generate shims);
+        ``hedge=2`` dispatches a twin prefill via the router (first
+        COMPLETE wins, the loser's slab is freed); ``prefix_id`` (with
+        optional ``prefix_len``, 0 = whole prompt) tags the request's
+        shared prefix for prefix-affinity routing and retention."""
+        if dispatch not in ("eager", "queued"):
+            raise ValueError(f"dispatch must be 'eager' or 'queued', got {dispatch!r}")
         if now is not None:
             self.clock = max(self.clock, now)  # never rewind the clock
-        req = Request(f"r{next(self._ids)}", len(tokens), 0,
-                      arrival_s=self.clock, slo_class=slo_class)
+        req = Request(f"r{next(self._ids)}", len(tokens), max_new or 0,
+                      arrival_s=self.clock, slo_class=slo_class,
+                      prefix_id=prefix_id, prefix_len=prefix_len)
+        handle = RequestHandle(req, self, max_new=max_new,
+                               eos_token=eos_token, hedge=hedge)
         self.pending[req.request_id] = (req, tokens)
-        try:
-            self._dispatch(req, tokens)
-        except Exception:
-            self.pending.pop(req.request_id, None)
-            raise
-        return req
+        self.handles[req.request_id] = handle
+        if dispatch == "eager":
+            try:
+                self._dispatch(req, tokens, hedge=hedge)
+            except Exception:
+                self.pending.pop(req.request_id, None)
+                self.handles.pop(req.request_id, None)
+                raise
+        return handle
 
     def _on_complete(self, txn) -> None:
         w = self.prefills.get(txn.src_worker)
@@ -346,10 +468,14 @@ class DisaggService:
                     if r.request_id == txn.request_id), None)
         if w is not None and req is not None:
             w.release(req)
+        # the primary's pull landed: the hedge race (if any) is decided —
+        # "first COMPLETE wins" — so the twin is aborted and freed
+        self._drop_hedge(txn.request_id)
 
-    def admit_to_decode(self, req: Request) -> bool:
+    def admit_to_decode(self, req) -> bool:
         """Pull the KV into the assigned decode worker; False if its pool
         is full (request stays KV_QUEUED; prefill KV stays alive)."""
+        req = getattr(req, "request", req)  # accept handle or Request
         cm = self.conn_mgrs[req.decode_worker]
         conn = cm.connection(req.prefill_worker)
         try:
@@ -403,104 +529,98 @@ class DisaggService:
             promoted.extend(dw.pump(budget))
         return promoted
 
-    def generate_many(self, reqs: list[Request], max_new: int = 8, *,
+    def _reject_queued(self, rid: str, err: Exception) -> None:
+        """A queued submission failed admission at dispatch time: mark
+        the handle FAILED (terminally — rejection is a decision, not a
+        capacity blip) and drop the service-side ledger entries."""
+        entry = self.pending.pop(rid, None)
+        if entry is not None and entry[0].state is not RequestState.FAILED:
+            entry[0].to(RequestState.FAILED)
+        h = self.handles.pop(rid, None)
+        if h is not None:
+            h.error = err
+
+    # --------------------------------------------------------- completion
+    def _finish_request(self, rid: str) -> None:
+        """Retire a request that finished decoding (budget reached or
+        EOS): free its decode blocks, drop every ledger entry, and seal
+        the handle's pulled-bytes metric."""
+        h = self.handles.pop(rid, None)
+        if h is not None:
+            # seal BEFORE DecodeWorker.finish pops the engine's counter
+            h.metrics.kv_bytes_pulled = self.engine.pulled_bytes(rid)
+        req_entry = self.pending.pop(rid, None)
+        if req_entry is not None:
+            req = req_entry[0]
+            dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
+            if dw is not None:
+                dw.finish(rid)
+            if req.state is not RequestState.DONE:
+                # early finish (EOS from prefill / zero budget): no pull
+                # ever ran, so no COMPLETE will free the prefill copy —
+                # release it here
+                if req.prefill_blocks and req.prefill_worker in self.prefills:
+                    self.prefills[req.prefill_worker].release(req)
+                req.to(RequestState.DONE)
+        self.engine.pulled_bytes(rid, pop=True)
+        self.router.forget(rid)
+        self._drop_hedge(rid)
+        self.first_tokens.pop(rid, None)
+
+    def _handle_of(self, req) -> RequestHandle:
+        """Normalize a caller-held object (RequestHandle or bare Request)
+        to its live handle."""
+        if isinstance(req, RequestHandle):
+            return req
+        h = self.handles.get(req.request_id)
+        if h is None:  # a bare Request never submitted through us
+            raise KeyError(f"unknown request {req.request_id!r}")
+        return h
+
+    # ------------------------------------------------------------- shims
+    def generate_many(self, reqs: list, max_new: int = 8, *,
                       pump_budget: int | None = 32) -> dict[str, list[int]]:
-        """Overlapped serving loop for a set of submitted requests:
-        batched admission per decode worker, decode rounds interleaved
-        with transfer progress (wave N's decode hides wave N+1's pulls),
-        each request decoded for ``max_new`` tokens then finished.
-
-        The loop only nudges the engine by ``pump_budget`` transactions
-        per pass — the bulk of the transfer work is done INSIDE
-        ``decode_round`` between decode steps, which is where the hiding
-        happens.  Only when no worker has anything resident to decode
-        (first wave, or a transfer-bound tail) does it run the engine
-        freely — there is no compute to overlap with.
-
-        One driver per decode worker: ``decode_round`` batches ALL of a
-        worker's residents, so requests made resident by a concurrent
-        caller would be decoded here with their tokens discarded — don't
-        interleave ``generate_many`` with other admission/decode drivers
-        on the same workers (admission of requests outside ``reqs`` is
-        already excluded via ``only=``).
+        """Batch shim over the event-driven serving loop: give every
+        request a ``max_new`` decode budget and tick ``ServeLoop`` until
+        each is DONE (or parked).  Under the hood this is CONTINUOUS
+        batching — requests join decode as their pulls land and leave at
+        their budget without stalling cohabitants — but the call shape
+        (and, per request, the tokens) match the old round-synchronous
+        API exactly.
 
         Requests parked by failover (no capacity) are skipped — revive
         them with ``retry_parked()`` and call again.  Returns
         request_id → [first_token, *decoded] for every finished request."""
-        remaining = {r.request_id: r for r in reqs}
-        results: dict[str, list[int]] = {}
-        while remaining:
-            for rid, req in list(remaining.items()):
-                if req.state in (RequestState.FAILED, RequestState.DONE):
-                    remaining.pop(rid)  # parked (or externally finished)
-            if not remaining:
-                break
-            snapshot = {rid: (req.state, req.prefill_worker, req.decode_worker)
-                        for rid, req in remaining.items()}
-            # only OUR requests: a concurrent caller's KV_QUEUED request
-            # must not be admitted (and its tokens silently dropped) here
-            admitted = bool(self.admit_queued(only=set(remaining)))
-            promoted = bool(self.pump(pump_budget))
-            decoded = False
-            for wid, dw in list(self.decodes.items()):
-                has_work = any(rid in remaining for rid in dw.resident) or (
-                    dw.consume == "layerwise"
-                    and any(rid in remaining for rid in dw.inflight))
-                if not has_work:
-                    continue
-                # pumps in-flight pulls between decode steps; layerwise
-                # workers additionally stream in-flight admissions into
-                # the round's first step, so finish by what the round
-                # actually completed, not by who was resident before it
-                out = dw.decode_round(max_new, pump_budget=pump_budget)
-                for rid in out:
-                    if rid not in remaining:
-                        continue
-                    remaining.pop(rid)
-                    dw.finish(rid)
-                    self.pending.pop(rid, None)
-                    self.router.forget(rid)
-                    results[rid] = [self.first_tokens.pop(rid)] + out[rid]
-                    decoded = True
-            if decoded or not remaining:
-                continue
-            if self.engine.pending:
-                # nothing resident anywhere: no compute to hide behind, so
-                # run the engine directly — worker pump()s only progress
-                # their OWN inflight pulls and would spin on foreign txns
-                self.engine.progress()
-                self.pump(0)  # promote whatever resolved
-            elif not (admitted or promoted):
-                if any(req.state in (RequestState.FAILED, RequestState.DONE)
-                       for req in remaining.values()):
-                    continue  # parked/finished mid-round: prune next pass
-                if any(snapshot[rid] != (req.state, req.prefill_worker,
-                                         req.decode_worker)
-                       for rid, req in remaining.items()):
-                    # failover moved a request mid-pass (e.g. a teardown
-                    # fired from inside pump/decode_round and re-routed
-                    # it): that's progress — admission retries next pass
-                    continue
-                stuck = ", ".join(sorted(remaining))
-                raise RuntimeError(
-                    f"generate_many stalled: {stuck} cannot be admitted "
-                    "(decode pools too small for the request?)")
-        return results
+        handles = [self._handle_of(r) for r in reqs]
+        for h in handles:
+            if not h.done:
+                h.max_new = max_new
+        prev_budget = self.loop.pump_budget
+        self.loop.pump_budget = pump_budget
+        try:
+            self.loop.run_until_idle(only={h.request_id for h in handles})
+        finally:
+            self.loop.pump_budget = prev_budget  # shared loop: don't leak
+        return {h.request_id: list(h.tokens[: 1 + max_new])
+                for h in handles if h.done}
 
-    def generate(self, req: Request, max_new: int = 8) -> list[int]:
-        if req.state is RequestState.FAILED:
-            raise RuntimeError(
-                f"{req.request_id} is parked after failover (no capacity); "
-                "add workers / free capacity and call retry_parked()")
-        if req.request_id in self.pending and req.state == RequestState.KV_QUEUED:
-            if not self.admit_to_decode(req):
+    def generate(self, req, max_new: int = 8) -> list[int]:
+        """Single-request shim — the SAME loop path as ``generate_many``
+        (no separate dispatch code to drift).  Preserves the historical
+        error contract: RuntimeError for a parked request, OutOfBlocks
+        when the decode pool cannot hold it."""
+        h = self._handle_of(req)
+        if h.request.state is RequestState.FAILED:
+            h._raise_failed()  # rejection error, or "parked" RuntimeError
+        try:
+            out = self.generate_many([h], max_new=max_new)
+        except ServeLoopStalled:
+            if h.request.state is RequestState.KV_QUEUED:
                 raise OutOfBlocks("decode pool full")
-        d = self.decodes[req.decode_worker]
-        out = d.decode_round(max_new)[req.request_id]
-        d.finish(req.request_id)
-        self.pending.pop(req.request_id, None)
-        self.router.forget(req.request_id)  # also retires the ledger charge
-        return [self.first_tokens.pop(req.request_id)] + out
+            raise
+        if h.request_id not in out:
+            h._raise_failed()  # parked (or rejected) during the drive
+        return out[h.request_id]
 
     # ------------------------------------------------- single-decode API
     @property

@@ -13,6 +13,7 @@ consume the same caches, descriptors, and engine.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Sequence
 
@@ -57,9 +58,15 @@ class PrefillWorker:
         for d in self.cache.descriptors():
             self.registry.register(d)
 
-    def prefill(self, req: Request, tokens: np.ndarray) -> int:
-        """Run prefill, park KV blocks in the slab, return the first token."""
-        req.to(RequestState.PREFILLING)
+    def _compute_and_park(self, tokens: np.ndarray) -> tuple[int, list[int]]:
+        """Run the model prefill and land the KV pages in the slab.
+        Returns (first token, allocated blocks).  Capacity is checked
+        UP FRONT: a full pool must raise before any state transition or
+        model compute — a queued dispatch retries from QUEUED_PREFILL,
+        which an after-the-fact OutOfBlocks would strand in PREFILLING."""
+        need = BlockPool.blocks_for_tokens(len(tokens), self.block_size)
+        if not self.pool.can_allocate(need):
+            raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
         logits, state = self.model.prefill(
             self.params, {"tokens": jnp.asarray(tokens[None], jnp.int32)},
             max_blocks_margin=0, remat=False,
@@ -67,12 +74,31 @@ class PrefillWorker:
         k_pages = np.asarray(state.k_pages[:, 0])  # [L, spb, bs, g, hd]
         v_pages = np.asarray(state.v_pages[:, 0])
         spb = k_pages.shape[1]
-        req.prefill_blocks = self.pool.allocate(spb)
+        blocks = self.pool.allocate(spb)
         for layer in range(self.cache.num_layers):
-            for j, blk in enumerate(req.prefill_blocks):
+            for j, blk in enumerate(blocks):
                 self.cache.write_block(layer, blk, k_pages[layer, j], v_pages[layer, j])
         first = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+        return first, blocks
+
+    def prefill(self, req: Request, tokens: np.ndarray) -> int:
+        """Run prefill, park KV blocks in the slab, return the first
+        token.  Raises OutOfBlocks BEFORE the PREFILLING transition when
+        the pool cannot hold the prompt, so the request stays re-
+        dispatchable (QUEUED_PREFILL) for the serving loop's next tick."""
+        need = BlockPool.blocks_for_tokens(len(tokens), self.block_size)
+        if not self.pool.can_allocate(need):
+            raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
+        req.to(RequestState.PREFILLING)
+        first, req.prefill_blocks = self._compute_and_park(tokens)
         return first
+
+    def prefill_shadow(self, tokens: np.ndarray) -> tuple[int, list[int]]:
+        """Hedge-twin prefill: same compute and slab landing as
+        ``prefill`` but WITHOUT touching any request state — the serving
+        layer tracks the twin copy and frees it when the primary's
+        transfer COMPLETEs (loser aborted) or adopts it on failover."""
+        return self._compute_and_park(tokens)
 
     def release(self, req: Request) -> None:
         """COMPLETE() arrived: free the request's prefill-side blocks."""
@@ -125,7 +151,9 @@ class DecodeWorker:
     def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
                  engine: TransferEngine | None = None,
                  base_address: int = 0x7F80000000,
-                 consume: str = "full"):
+                 consume: str = "full",
+                 step_margin_blocks: int = 2,
+                 prefix_cache_cap: int = 4):
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
@@ -148,6 +176,20 @@ class DecodeWorker:
         self.engine.register_memory(self.cache.memory_region())
         self.resident: dict[str, _Resident] = {}
         self.inflight: dict[str, _InFlight] = {}
+        # Continuous-batching step state (see step()): the device
+        # DecodeState persists ACROSS steps and is rebuilt — losslessly —
+        # only when batch membership changes or the page margin runs out.
+        self.step_margin_blocks = max(1, step_margin_blocks)
+        self._step_ids: list[str] = []
+        self._step_state: DecodeState | None = None
+        self._step_tokens: jnp.ndarray | None = None
+        self._step_per_seq = 0
+        # Prefix retention: finished requests' shared-prefix blocks stay
+        # refcounted in the pool (LRU, bounded) so prefix-affinity
+        # routing has something real to aim at; evicted under pressure.
+        self.prefix_cache: collections.OrderedDict[str, list[int]] = \
+            collections.OrderedDict()
+        self.prefix_cache_cap = prefix_cache_cap
 
     # ------------------------------------------------------------ admit
     def admit_async(self, req: Request, conn: Connection, first_token: int) -> TransferFuture:
@@ -159,8 +201,19 @@ class DecodeWorker:
 
         Allocation happens BEFORE any state transition so an OutOfBlocks
         failure leaves the request exactly as it was (KV_QUEUED, prefill
-        KV alive) — the caller's retry contract depends on it."""
-        blocks = self.pool.allocate(len(req.prefill_blocks))  # may raise
+        KV alive) — the caller's retry contract depends on it.  Retained
+        prefix blocks are evicted (LRU) before giving up: the retention
+        cache is opportunistic and must never starve live admissions."""
+        req = getattr(req, "request", req)  # a RequestHandle delegates
+        # reads but not WRITES (pull_kv_async assigns decode_blocks), so
+        # admission must operate on the underlying Request
+        need = len(req.prefill_blocks)
+        try:
+            blocks = self.pool.allocate(need)  # may raise
+        except OutOfBlocks:
+            if not self._evict_prefixes(need):
+                raise
+            blocks = self.pool.allocate(need)
         req.to(RequestState.KV_TRANSFER)
         fut = pull_kv_async(req, conn=conn, engine=self.engine,
                             decode_pool=self.pool, decode_cache=self.cache,
@@ -277,11 +330,16 @@ class DecodeWorker:
         """Page-margin for one decode round: room for max_new appends."""
         return -(-max_new // self.block_size)
 
-    @staticmethod
-    def _batch_tables(batch: list[_Resident], margin_blocks: int):
+    def _pages_of(self, r: _Resident) -> int:
+        """Valid KV pages of a resident: its pulled slab blocks, plus any
+        pages grown past them by decode-appended tokens (those live only
+        in the float32 page cache after a state writeback)."""
+        return max(len(r.blocks), -(-r.context_len // self.block_size))
+
+    def _batch_tables(self, batch: list[_Resident], margin_blocks: int):
         """Shared batch layout (per_seq width + identity block tables) —
         ONE definition so the full and layerwise paths cannot diverge."""
-        per_seq = max(len(r.blocks) for r in batch) + margin_blocks
+        per_seq = max(self._pages_of(r) for r in batch) + margin_blocks
         tables = np.broadcast_to(
             np.arange(per_seq, dtype=np.int32)[None], (len(batch), per_seq))
         return per_seq, jnp.asarray(tables)
@@ -298,9 +356,9 @@ class DecodeWorker:
         v_pages = np.zeros_like(k_pages)
         for i, r in enumerate(batch):
             k, v = self._resident_pages(r)
-            n = len(r.blocks)
-            k_pages[:, i, :n] = k[:, :n]
-            v_pages[:, i, :n] = v[:, :n]
+            n = k.shape[1]
+            k_pages[:, i, :n] = k
+            v_pages[:, i, :n] = v
         return DecodeState(
             context_lens=jnp.asarray([r.context_len for r in batch], jnp.int32),
             k_pages=jnp.asarray(k_pages, jnp.bfloat16),
@@ -314,8 +372,8 @@ class DecodeWorker:
         ).astype(jnp.int32)
 
     # ----------------------------------------- layerwise first step
-    def _layerwise_first_step(self, streaming: list[_InFlight], max_new: int,
-                              pump_budget: int | None):
+    def _layerwise_first_step(self, streaming: list[_InFlight],
+                              margin_blocks: int, pump_budget: int | None):
         """One decode step where ``streaming`` (in-flight) admissions join
         the resident batch, consuming each layer's KV as its reads land
         (``wait_layer`` pumps the engine between layers).  Returns
@@ -331,7 +389,7 @@ class DecodeWorker:
             for fl in streaming
         ]
         b = len(batch)
-        per_seq, tables = self._batch_tables(batch, self._round_margin(max_new))
+        per_seq, tables = self._batch_tables(batch, margin_blocks)
 
         def fetch(layer: int):
             # the synchronization point of the whole design: block until
@@ -343,13 +401,15 @@ class DecodeWorker:
             v = np.zeros_like(k)
             kplane, vplane = self.cache.kv_planes(layer)
             for i, r in enumerate(batch):
-                n = len(r.blocks)
                 if i < len(residents):
-                    # resident: reuse the float32 page cache instead of
-                    # re-gathering/re-casting from the slab every round
+                    # resident: reuse the float32 page cache (pulled AND
+                    # decode-appended pages) instead of re-gathering/
+                    # re-casting from the slab every round
                     rk, rv = self._resident_pages(r)
-                    k[i, :n], v[i, :n] = rk[layer, :n], rv[layer, :n]
+                    n = rk.shape[1]
+                    k[i, :n], v[i, :n] = rk[layer], rv[layer]
                 else:  # streaming: this layer's bytes just landed
+                    n = len(r.blocks)
                     k[i, :n] = kplane[r.blocks].astype(np.float32)
                     v[i, :n] = vplane[r.blocks].astype(np.float32)
             return jnp.asarray(k, jnp.bfloat16), jnp.asarray(v, jnp.bfloat16)
@@ -384,16 +444,17 @@ class DecodeWorker:
             r.req.tokens_generated += 1
         return batch, state, tokens, out
 
-    def _streaming_step(self, max_new: int, pump_budget: int | None):
+    def _streaming_step(self, margin_blocks: int, pump_budget: int | None):
         """Run the layerwise first step over every in-flight admission,
         dropping (and aborting) admissions whose pull is torn mid-step and
         retrying with the survivors — a teardown BETWEEN layers must not
         change the survivors' tokens, so the step restarts cleanly (no
         tokens or state were committed yet)."""
-        while self.inflight and max_new > 0:
+        while self.inflight:
             streaming = list(self.inflight.values())
             try:
-                return self._layerwise_first_step(streaming, max_new, pump_budget)
+                return self._layerwise_first_step(
+                    streaming, margin_blocks, pump_budget)
             except ConnectionTornError:
                 # torn futures are resolved; pump aborts their admissions
                 # (frees decode blocks) and keeps the healthy ones in
@@ -401,21 +462,123 @@ class DecodeWorker:
                 self.pump(0)
         return None
 
+    # --------------------------------------------- persistent step state
+    def _install_step(self, batch: list[_Resident], state: DecodeState,
+                      tokens: jnp.ndarray) -> None:
+        self._step_ids = [r.req.request_id for r in batch]
+        self._step_state = state
+        self._step_tokens = tokens
+        self._step_per_seq = int(state.block_tables.shape[1])
+
+    def _invalidate_step(self) -> None:
+        """Flush the persistent step state back into the residents' page
+        caches and drop it.  The writeback copies the state's KV — pulled
+        AND decode-appended pages — so the batch can be rebuilt around a
+        membership change (join / leave / finish) without losing appended
+        tokens.  bf16 -> f32 -> bf16 round-trips exactly, so a rebuild
+        never perturbs the survivors' subsequent tokens."""
+        state = self._step_state
+        if state is None:
+            return
+        ids, self._step_ids = self._step_ids, []
+        self._step_state = self._step_tokens = None
+        self._step_per_seq = 0
+        k_all = np.asarray(state.k_pages).astype(np.float32)
+        v_all = np.asarray(state.v_pages).astype(np.float32)
+        for i, rid in enumerate(ids):
+            r = self.resident.get(rid)
+            if r is None:
+                continue  # finished / aborted while the state was live
+            pages = -(-r.context_len // self.block_size)
+            r.k_cached = np.ascontiguousarray(k_all[:, i, :pages])
+            r.v_cached = np.ascontiguousarray(v_all[:, i, :pages])
+
+    def _commit_step(self, batch: list[_Resident], state: DecodeState,
+                     tokens: jnp.ndarray) -> dict[str, int]:
+        """Record one step's outputs on the residents; returns
+        request_id -> token."""
+        ctx = np.asarray(state.context_lens)
+        out: dict[str, int] = {}
+        for i, r in enumerate(batch):
+            tok = int(tokens[i])
+            out[r.req.request_id] = tok
+            r.req.tokens_generated += 1
+            r.context_len = int(ctx[i])
+            r.last_token = tok
+        return out
+
+    # ------------------------------------------------- continuous stepping
+    def step(self, *, pump_budget: int | None = 32) -> dict[str, int]:
+        """ONE continuous-batching decode step: every resident advances by
+        one token and the mapping ``{request_id: token}`` is returned.
+
+        This is ``decode_round`` split open for the event-driven serving
+        loop: requests JOIN the running batch the moment their pull
+        resolves (``consume="full"``) or stream their KV in layer-by-layer
+        during this very step (``consume="layerwise"``, preserving the
+        PR 3 ``ConnectionTornError`` retry semantics), and LEAVE whenever
+        the caller stops stepping them (``finish``) — cohabitants never
+        stall on either event.  The device DecodeState persists across
+        steps; membership changes or an exhausted page margin trigger a
+        lossless rebuild (see ``_invalidate_step``), so a join/leave never
+        changes the tokens of requests already in the batch."""
+        if self.consume == "layerwise" and self.inflight:
+            self._invalidate_step()  # caches must be current to co-batch
+            stream = self._streaming_step(self.step_margin_blocks, pump_budget)
+            if stream is not None:
+                batch, state, tokens, out = stream
+                # commit the step's context_len/last_token NOW: a rebuild
+                # on the very next step (another join, a leave, margin)
+                # writes back and restarts from these fields — stale
+                # values would replay the token and drop an appended page
+                ctx = np.asarray(state.context_lens)
+                for i, r in enumerate(batch):
+                    r.context_len = int(ctx[i])
+                    r.last_token = int(tokens[i])
+                self._install_step(batch, state, tokens)
+                return {rid: toks[0] for rid, toks in out.items()}
+        else:
+            # promote pulls that resolved since the last step (and nudge
+            # the engine while there is in-flight work to hide)
+            self.pump(pump_budget if self.inflight else 0)
+        if not self.resident:
+            return {}
+        ids = list(self.resident)
+        exhausted = self._step_state is not None and any(
+            r.context_len >= self._step_per_seq * self.block_size
+            for r in self.resident.values())
+        if ids != self._step_ids or exhausted:
+            self._invalidate_step()
+            batch = list(self.resident.values())
+            state = self._build_state(batch, margin_blocks=self.step_margin_blocks)
+            tokens = jnp.asarray([r.last_token for r in batch], jnp.int32)
+            self._install_step(batch, state, tokens)
+        batch = [self.resident[rid] for rid in self._step_ids]
+        logits, state = self.model.decode_step(
+            self.params, self._step_state, self._step_tokens)
+        if self.inflight:
+            self.pump(pump_budget)  # transfer hides behind the step
+        tokens = self._argmax_tokens(logits)
+        out = self._commit_step(batch, state, tokens)
+        self._step_state, self._step_tokens = state, tokens
+        return out
+
     def decode_round(self, max_new: int = 8, *,
                      pump_budget: int | None = 32) -> dict[str, list[int]]:
-        """Continuous-batching decode until every resident request has
-        produced ``max_new`` tokens or finished.  Returns generated ids.
+        """Round-style decode: the CURRENT residents (plus, for
+        ``consume="layerwise"``, in-flight admissions streamed into the
+        first step) each produce ``max_new`` tokens.  Returns generated
+        ids.  The batch is fixed for the round — pulls resolving mid-round
+        are promoted but join at the NEXT round; the event-driven path
+        (``step``) is what admits them mid-stream.
 
         Between decode steps the worker pumps the transfer engine by
         ``pump_budget`` transactions, so in-flight pulls make progress
-        behind decode compute.  With ``consume="full"`` requests whose
-        pull resolves mid-round are promoted immediately and join the
-        batch at the NEXT round; with ``consume="layerwise"`` in-flight
-        admissions join THIS round — the first step consumes their KV
-        layer by layer while the tail of the pull is still in flight."""
+        behind decode compute."""
+        self._invalidate_step()  # interop with step(): flush its state
         stream = None
-        if self.consume == "layerwise" and self.inflight:
-            stream = self._streaming_step(max_new, pump_budget)
+        if self.consume == "layerwise" and self.inflight and max_new > 0:
+            stream = self._streaming_step(self._round_margin(max_new), pump_budget)
         if stream is not None:
             batch, state, tokens, out = stream
             steps_left = max_new - 1
@@ -440,10 +603,66 @@ class DecodeWorker:
         for i, r in enumerate(batch):
             r.context_len = int(state.context_lens[i])
             r.last_token = int(tokens[i])
+        # park the final state in the step slot and flush it, so page
+        # caches include this round's appended KV — a later round (or
+        # step) over the same residents rebuilds losslessly
+        self._install_step(batch, state, tokens)
+        self._invalidate_step()
         return out
 
+    # ------------------------------------------------------------ finish
     def finish(self, req_id: str) -> None:
         r = self.resident.pop(req_id, None)
         if r is not None:
+            self._retain_prefix(r)
             self.pool.free(r.blocks)
+            # retire the engine's per-request byte counter here too, so
+            # legacy callers driving finish() directly (no serving-layer
+            # completion) don't grow one entry per request served
+            self.engine.pulled_bytes(req_id, pop=True)
             r.req.to(RequestState.DONE)
+
+    # ------------------------------------------------------ prefix cache
+    def _retain_prefix(self, r: _Resident) -> None:
+        """Keep a finishing request's shared-prefix blocks refcounted in
+        the pool (bounded LRU) so prefix-affinity routing can steer the
+        next request with the same prefix here."""
+        req = r.req
+        if not req.prefix_id or self.prefix_cache_cap <= 0:
+            return
+        if req.prefix_id in self.prefix_cache:
+            self.prefix_cache.move_to_end(req.prefix_id)
+            return
+        prefix_len = req.prefix_len or req.prompt_len
+        blocks = r.blocks[: prefix_len // self.block_size]  # whole blocks
+        if not blocks:
+            return
+        self.pool.share(blocks)  # cache's refcount survives the free below
+        self.prefix_cache[req.prefix_id] = list(blocks)
+        while len(self.prefix_cache) > self.prefix_cache_cap:
+            _, evicted = self.prefix_cache.popitem(last=False)
+            self.pool.free(evicted)
+
+    def _evict_prefixes(self, need: int) -> bool:
+        """Free retained prefixes (LRU-first) until ``need`` blocks fit;
+        True if they now do."""
+        while self.prefix_cache and not self.pool.can_allocate(need):
+            _, blocks = self.prefix_cache.popitem(last=False)
+            self.pool.free(blocks)
+        return self.pool.can_allocate(need)
+
+    @property
+    def evictable_blocks(self) -> int:
+        """Blocks reclaimable from the prefix retention cache (upper
+        bound: shared blocks only free once every holder releases)."""
+        return sum(len(b) for b in self.prefix_cache.values())
+
+    @property
+    def known_prefixes(self) -> frozenset[str]:
+        """Prefix ids resident on this worker (live requests, in-flight
+        pulls, and the retention cache) — reported via LoadReport."""
+        ids = {r.req.prefix_id for r in self.resident.values() if r.req.prefix_id}
+        ids.update(fl.req.prefix_id for fl in self.inflight.values()
+                   if fl.req.prefix_id)
+        ids.update(self.prefix_cache)
+        return frozenset(ids)

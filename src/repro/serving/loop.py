@@ -1,0 +1,243 @@
+"""``ServeLoop`` — the event-driven heart of the streaming serving API.
+
+One ``tick()`` advances EVERY live request one notch through the
+pipeline, interleaving the four kinds of work a disaggregated serving
+node juggles:
+
+  1. **prefill dispatch** — queued submissions (``dispatch="queued"``)
+     are routed and prefilled; SLO admission rejections surface on the
+     handle as FAILED instead of raising at the caller;
+  2. **retirement** — requests whose stream completed (budget/EOS on
+     the previous step, EOS straight from prefill, or finished through
+     the legacy direct-worker path) leave before anything else runs;
+  3. **admission planning** — the router batches every KV_QUEUED request
+     per decode worker (capacity-capped, FIFO) and the pulls are
+     SUBMITTED, not drained;
+  4. **transfer progress** — the engine's per-tick budget hook
+     (``TransferEngine.tick``) advances queued transactions, but only
+     when no decode worker has compute to hide them behind — otherwise
+     the workers' own between-step pumps do the hiding;
+  5. **per-step decode** — each decode worker runs ONE continuous-
+     batching ``step()``: requests join the running batch the moment
+     their KV lands (or stream it in layer-by-layer), produce one token
+     each, and leave at EOS / ``max_new`` without stalling cohabitants.
+
+``run_until_idle()`` ticks until every driven handle is DONE (or parked
+by failover), with the same stall detection the old round-synchronous
+``generate_many`` had: if a full tick makes no progress of any kind and
+no request moved (failover counts as movement), ``ServeLoopStalled``
+raises naming the stuck requests.
+
+The loop is deliberately synchronous and deterministic — one tick is one
+pass, tokens are appended to handles as steps land — which is what lets
+``generate``/``generate_many`` remain thin, token-identical shims on
+top of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.sched import AdmissionRejected, NoWorkersError
+from repro.serving.blocks import OutOfBlocks
+from repro.serving.request import RequestState
+
+__all__ = ["ServeLoop", "ServeLoopStalled", "TickReport"]
+
+
+class ServeLoopStalled(RuntimeError):
+    """No request can make progress: typically every stuck request's
+    decode pool is too small for its KV footprint."""
+
+    def __init__(self, request_ids) -> None:
+        self.request_ids = tuple(sorted(request_ids))
+        stuck = ", ".join(self.request_ids)
+        super().__init__(
+            f"serve loop stalled: {stuck} cannot make progress "
+            "(decode pools too small for the request?)")
+
+
+@dataclasses.dataclass
+class TickReport:
+    """What one tick did — the loop's observable progress."""
+
+    now: float
+    dispatched: list[str] = dataclasses.field(default_factory=list)
+    rejected: list[str] = dataclasses.field(default_factory=list)
+    admitted: list[str] = dataclasses.field(default_factory=list)
+    promoted: list[str] = dataclasses.field(default_factory=list)
+    tokens: dict[str, int] = dataclasses.field(default_factory=dict)
+    finished: list[str] = dataclasses.field(default_factory=list)
+    engine_processed: int = 0
+
+    @property
+    def progressed(self) -> bool:
+        return bool(self.dispatched or self.rejected or self.admitted
+                    or self.promoted or self.tokens or self.finished
+                    or self.engine_processed)
+
+
+class ServeLoop:
+    def __init__(self, service, *, pump_budget: int | None = 32,
+                 engine_budget: int | None = None,
+                 max_admit: int | None = None) -> None:
+        self.service = service
+        self.pump_budget = pump_budget      # worker between-step pumps
+        # per-tick transfer budget; None mirrors pump_budget so transfer
+        # work stays metered at the same grain as the between-step pumps
+        # (a free-running engine would drain whole pulls before the first
+        # decode step could hide them)
+        self.engine_budget = engine_budget
+        self.max_admit = max_admit          # per-worker admission cap
+        self.ticks = 0
+
+    # ------------------------------------------------------------- tick
+    def tick(self, now: float | None = None) -> TickReport:
+        """One pass over the pipeline; returns what moved."""
+        svc = self.service
+        if now is not None:
+            svc.clock = max(svc.clock, now)
+        self.ticks += 1
+        report = TickReport(now=svc.clock)
+
+        # 1. dispatch queued submissions (prefill + routing)
+        for rid, h in list(svc.handles.items()):
+            if h.request.state is not RequestState.QUEUED_PREFILL:
+                continue
+            entry = svc.pending.get(rid)
+            if entry is None:
+                continue
+            try:
+                svc._dispatch(h.request, entry[1], hedge=h.hedge)
+                report.dispatched.append(rid)
+            except AdmissionRejected as e:
+                svc._reject_queued(rid, e)
+                report.rejected.append(rid)
+            except (NoWorkersError, OutOfBlocks):
+                pass  # stays QUEUED; capacity may come back next tick
+
+        # 2. retire finished requests BEFORE admission and decode: a
+        # request whose stream is already complete (EOS/budget reached
+        # on the previous tick's step, EOS straight from prefill, or a
+        # zero budget) must not be admitted or stepped again.  DECODING
+        # is the normal exit; KV_QUEUED means no pull ever started (the
+        # prefill copy is released by _finish_request); a handle already
+        # DONE (finished through the legacy direct-worker path) is swept
+        # so it can't wedge run_until_idle.
+        for rid, h in list(svc.handles.items()):
+            st = h.request.state
+            if st is RequestState.DONE or (
+                    st in (RequestState.DECODING, RequestState.KV_QUEUED)
+                    and h.decode_finished()):
+                svc._finish_request(rid)
+                report.finished.append(rid)
+
+        # 3. router-planned admission batches (KV_QUEUED -> pulls queued)
+        admitted = svc.admit_queued(only=set(svc.handles),
+                                    max_batch=self.max_admit)
+        for rids in admitted.values():
+            report.admitted.extend(rids)
+
+        # 4. engine tick budget — run it when there is no decode compute
+        # to hide the transfer behind, or when some full-consumption
+        # worker's pulls would otherwise starve (it has nothing resident,
+        # so it won't pump between steps).  In every other case the
+        # workers' own between-step pumps advance the engine — that's
+        # where the transfer/compute overlap comes from.
+        no_compute = not any(dw.resident for dw in svc.decodes.values())
+        starved = any(dw.inflight and not dw.resident and dw.consume == "full"
+                      for dw in svc.decodes.values())
+        if svc.engine.pending and (no_compute or starved):
+            budget = self.engine_budget
+            if budget is None:
+                budget = self.pump_budget  # None again -> engine.tick_budget
+            report.engine_processed = svc.engine.tick(budget)
+
+        # 5. promote pulls that resolved
+        report.promoted = svc.pump(0)
+
+        # 6. one continuous-batching decode step per worker with work
+        for dw in list(svc.decodes.values()):
+            if not (dw.resident or (dw.consume == "layerwise" and dw.inflight)):
+                continue
+            out = dw.step(pump_budget=self.pump_budget)
+            at = time.monotonic()
+            for rid, tok in out.items():
+                h = svc.handles.get(rid)
+                if h is None:
+                    continue
+                h._push(tok, at)
+                h.request.token_times_s.append(svc.clock)
+                report.tokens[rid] = tok
+
+        return report
+
+    # ------------------------------------------------------------ drive
+    def _signature(self, rids) -> dict[str, tuple]:
+        svc = self.service
+        sig = {}
+        for rid in rids:
+            h = svc.handles.get(rid)
+            if h is None:
+                sig[rid] = ("gone",)
+                continue
+            r = h.request
+            sig[rid] = (r.state, r.prefill_worker, r.decode_worker,
+                        len(h.tokens))
+        return sig
+
+    def _active(self, only: set[str] | None) -> list[str]:
+        """Handles still being driven: not DONE (a legacy direct-worker
+        finish leaves a DONE handle registered until the next tick
+        sweeps it), not parked."""
+        return [rid for rid, h in self.service.handles.items()
+                if (only is None or rid in only)
+                and h.request.state not in (RequestState.FAILED,
+                                            RequestState.DONE)]
+
+    def run_until_idle(self, only: set[str] | None = None, *,
+                       max_ticks: int = 100_000) -> list[str]:
+        """Tick until every driven handle (all of them, or just ``only``)
+        is DONE or parked.  Returns the request ids that finished DONE.
+        Raises ``ServeLoopStalled`` when a tick moves nothing at all."""
+        svc = self.service
+        finished: list[str] = []
+        for _ in range(max_ticks):
+            active = self._active(only)
+            if not active:
+                return finished
+            unbounded = [rid for rid in active
+                         if svc.handles[rid].max_new is None
+                         and svc.handles[rid].eos_token is None]
+            if unbounded:
+                raise ValueError(
+                    f"run_until_idle would never terminate: {sorted(unbounded)} "
+                    "have neither max_new nor eos_token — set a budget "
+                    "(e.g. via generate_many) or drive tick() directly")
+            before = self._signature(active)
+            report = self.tick()
+            finished.extend(report.finished)
+            if report.progressed:
+                continue
+            if self._signature(active) != before:
+                continue  # failover moved a request mid-tick: progress
+            raise ServeLoopStalled(self._active(only))
+        raise ServeLoopStalled(self._active(only))
+
+    def advance(self, handle, *, until_done: bool = False,
+                max_ticks: int = 100_000) -> None:
+        """Tick until ``handle`` produces at least one new token (or
+        finishes); ``until_done`` keeps going to the end.  The streaming
+        iterator's engine."""
+        start = len(handle.tokens)
+        for _ in range(max_ticks):
+            if handle.finished or (not until_done
+                                   and len(handle.tokens) > start):
+                return
+            active = self._active(None)
+            before = self._signature(active)
+            report = self.tick()
+            if report.progressed or self._signature(active) != before:
+                continue
+            raise ServeLoopStalled([handle.request_id])
+        raise ServeLoopStalled([handle.request_id])

@@ -27,8 +27,14 @@ class RequestState(enum.Enum):
 _TRANSITIONS: dict[RequestState, set[RequestState]] = {
     RequestState.QUEUED_PREFILL: {RequestState.PREFILLING, RequestState.FAILED},
     RequestState.PREFILLING: {RequestState.KV_QUEUED, RequestState.KV_TRANSFER, RequestState.FAILED},
-    RequestState.KV_QUEUED: {RequestState.KV_TRANSFER, RequestState.QUEUED_PREFILL, RequestState.FAILED},
-    RequestState.KV_TRANSFER: {RequestState.QUEUED_DECODE, RequestState.QUEUED_PREFILL, RequestState.FAILED},
+    # KV_QUEUED -> DONE: stream complete before any pull (EOS produced
+    # by prefill, or a zero decode budget); the prefill copy is released
+    # by the serving layer since no COMPLETE will ever fire
+    RequestState.KV_QUEUED: {RequestState.KV_TRANSFER, RequestState.QUEUED_PREFILL, RequestState.DONE, RequestState.FAILED},
+    # KV_TRANSFER -> KV_QUEUED: hedged-prefill failover — the pull died
+    # with its source but a hedge twin's KV copy survives, so the request
+    # goes back to waiting for admission instead of re-prefilling
+    RequestState.KV_TRANSFER: {RequestState.QUEUED_DECODE, RequestState.KV_QUEUED, RequestState.QUEUED_PREFILL, RequestState.FAILED},
     RequestState.QUEUED_DECODE: {RequestState.DECODING, RequestState.FAILED},
     RequestState.DECODING: {RequestState.DONE, RequestState.FAILED},
     RequestState.DONE: set(),
@@ -45,6 +51,12 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     slo_class: str = "standard"  # TTFT deadline class (sched.policies)
+    # Shared-prefix identity for prefix-aware routing: requests carrying
+    # the same prefix_id share their first prefix_len prompt tokens
+    # (0 = the whole prompt).  Used by the "prefix_affinity" policy and
+    # the decode workers' prefix retention cache.
+    prefix_id: str | None = None
+    prefix_len: int = 0
 
     state: RequestState = RequestState.QUEUED_PREFILL
     prefill_worker: str | None = None

@@ -85,6 +85,19 @@ class SimConfig:
     # max KV_QUEUED admissions started per scheduling opportunity
     # (0 = admit everything that fits; 1 = one-shot admission)
     admission_batch: int = 0
+    # Decode batching discipline — the admission semantics the REAL
+    # serving layer exposes, so the simulator and service stay honest
+    # with each other:
+    #   "continuous" — requests join the running batch at the next
+    #                  iteration boundary and leave as they finish (the
+    #                  ServeLoop / DecodeWorker.step path);
+    #   "round"      — the legacy round-synchronous generate_many: a
+    #                  worker freezes its cohort when a round starts;
+    #                  requests arriving mid-round wait for the WHOLE
+    #                  cohort to drain before decoding begins (their
+    #                  decode_start_s — and so KV-inclusive TTFT — eats
+    #                  the cohort tail).
+    batching: str = "continuous"
 
 
 @dataclasses.dataclass
@@ -158,6 +171,7 @@ class _DecodeWorker:
         self.used_tokens = 0
         self.active: list[Request] = []
         self.kv_queue: list[Request] = []      # pull: waiting for decode KV
+        self.round_wait: list[Request] = []    # round batching: next cohort
         self.nic_free_at = 0.0
         self.pull_busy_until = 0.0  # blocking engine: worker stuck in drain()
         self.iter_end = 0.0         # end of the in-flight decode iteration
@@ -199,6 +213,13 @@ class ClusterSim:
             raise ValueError(
                 f"transfer_overlap must be pipelined|blocking|overlapped|"
                 f"layerwise, got {sim_cfg.transfer_overlap!r}")
+        if sim_cfg.batching not in ("continuous", "round"):
+            raise ValueError(
+                f"batching must be continuous|round, got {sim_cfg.batching!r}")
+        if sim_cfg.batching == "round" and sim_cfg.mode == "colocated":
+            raise ValueError(
+                "batching='round' models the disaggregated generate_many "
+                "cohorts; the colocated baseline has its own iteration rule")
         if sim_cfg.policy == "slo":
             if sim_cfg.slo_s is None:
                 raise ValueError(
@@ -447,15 +468,36 @@ class ClusterSim:
     def _join_decode(self, req: Request) -> None:
         d = next(x for x in self.decodes if x.wid == req.decode_worker)
         req.to(RequestState.QUEUED_DECODE)
+        if self.cfg.batching == "round":
+            # round-synchronous cohorts: a round in progress is frozen —
+            # the request waits for the whole cohort to drain
+            d.round_wait.append(req)
+            if not d.iterating:
+                self._start_round(d)
+            return
         d.active.append(req)
         req.to(RequestState.DECODING)
         req.decode_start_s = self.now
         if not d.iterating:
             self._schedule_iteration(d)
 
+    def _start_round(self, d: _DecodeWorker) -> None:
+        """Round batching: freeze the next cohort (capped at the batch
+        limit; the rest waits for the round after)."""
+        cohort = d.round_wait[: self.cfg.max_decode_batch]
+        del d.round_wait[: len(cohort)]
+        for r in cohort:
+            r.to(RequestState.DECODING)
+            r.decode_start_s = self.now
+            d.active.append(r)
+        self._schedule_iteration(d)
+
     def _schedule_iteration(self, d: _DecodeWorker) -> None:
         batch = [r for r in d.active if r.tokens_generated < r.max_new_tokens - 1]
         if not batch:
+            if self.cfg.batching == "round" and d.round_wait:
+                self._start_round(d)  # cohort drained: admit the next one
+                return
             d.iterating = False
             return
         d.iterating = True

@@ -453,27 +453,29 @@ class TestOverlappedService:
         assert all(r.state is RequestState.DECODING for r in reqs)
         svc.generate_many(reqs, max_new=2)
 
-    def test_decode_rounds_overlap_inflight_pulls(self, service_setup):
+    def test_decode_steps_overlap_inflight_pulls(self, service_setup):
         # The point of the refactor: decode compute must run while later
         # waves' transfer transactions are still queued in the engine.
+        # (generate_many now drives the continuous serving loop, so the
+        # unit of decode work is DecodeWorker.step, not decode_round.)
         cfg, model, params = service_setup
         svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
         rng = np.random.default_rng(5)
         reqs = [svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32))
                 for _ in range(4)]
         dw = svc.decode
-        pending_at_round = []
-        orig = dw.decode_round
+        pending_at_step = []
+        orig = dw.step
 
-        def spy(max_new=8, **kw):
-            pending_at_round.append(svc.engine.pending)
-            return orig(max_new, **kw)
+        def spy(**kw):
+            pending_at_step.append(svc.engine.pending)
+            return orig(**kw)
 
-        dw.decode_round = spy
+        dw.step = spy
         got = svc.generate_many(reqs, max_new=2)
         assert len(got) == 4
-        assert any(p > 0 for p in pending_at_round), \
-            "no decode round started while transfer txns were in flight"
+        assert any(p > 0 for p in pending_at_step), \
+            "no decode step started while transfer txns were in flight"
 
     def test_mid_pull_prefill_death_reroutes(self, service_setup):
         cfg, model, params = service_setup

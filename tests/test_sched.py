@@ -196,6 +196,50 @@ class TestRouter:
         with pytest.raises(NoWorkersError):
             RequestRouter(cs).route(ctx())
 
+    def test_requeue_puts_request_at_head(self):
+        r = RequestRouter(cluster(1, 1), "least_loaded")
+        r.backlog.append(ctx("r-old"))
+        r.requeue(ctx("r-failed"))
+        assert [c.request_id for c in r.backlog] == ["r-failed", "r-old"]
+        s = r.summary()
+        assert s["backlog"] == 2.0 and s["rejected"] == 0.0
+
+    def test_pick_hedge_prefill_excludes_primary(self):
+        r = RequestRouter(cluster(2, 1), "least_loaded")
+        d = r.route(ctx("r0"))
+        twin = r.pick_hedge_prefill(ctx("r0"), {d.prefill_worker})
+        assert twin is not None and twin != d.prefill_worker
+        # both charges retire together
+        assert r._charges.keys() == {"r0", "r0#hedge"}
+        r.forget("r0")
+        assert not r._charges
+
+    def test_pick_hedge_prefill_none_without_alternative(self):
+        r = RequestRouter(cluster(1, 1), "least_loaded")
+        d = r.route(ctx("r0"))
+        assert r.pick_hedge_prefill(ctx("r0"), {d.prefill_worker}) is None
+
+    def test_prefix_affinity_prefers_reported_prefix(self):
+        cs = cluster(1, 2)
+        # d1 reports the prefix resident (and equal load otherwise)
+        cs.heartbeat("d1", 0.0, load=LoadReport(
+            "d1", "decode", 64, 64, prefix_ids=("sys",)))
+        r = RequestRouter(cs, "prefix_affinity")
+        hit = RouteRequest("r0", 256, prefix_id="sys")
+        miss = RouteRequest("r1", 256, prefix_id="other")
+        assert r.route(hit).decode_worker == "d1"
+        assert r.route(miss).decode_worker == "d0"  # least-loaded fallback
+
+    def test_evictable_blocks_count_toward_admission_budget(self):
+        cs = cluster(1, 1, free=64, total=64)
+        # 1 free block but 8 evictable: a 2-block request must be planned
+        cs.heartbeat("d0", 0.0, load=LoadReport(
+            "d0", "decode", free_blocks=1, total_blocks=64,
+            evictable_blocks=8))
+        r = RequestRouter(cs, "least_loaded")
+        plan = r.plan_admissions([(ctx("r0", prompt=64), "d0")])
+        assert plan == {"d0": ["r0"]}
+
 
 # ------------------------------------------------------ transfer engine
 class TestMemoryRegionOverlap:

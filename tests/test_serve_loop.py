@@ -1,0 +1,465 @@
+"""Streaming serving API: ServeLoop continuous batching + RequestHandle.
+
+Covers the PR 5 redesign:
+  * per-request handles (status machine, incremental token stream,
+    metrics) over an event-driven tick loop;
+  * continuous batching observables — a request submitted mid-decode
+    produces its first token BEFORE the earlier cohort finishes, and
+    joins/leaves never perturb cohabitants' tokens;
+  * shim-vs-loop token identity on seeded workloads (generate /
+    generate_many are thin shims over the loop);
+  * edge cases: EOS leave while a co-batched request retries a torn
+    pull, queued-dispatch admission rejection, handle status
+    transitions;
+  * satellites: hedged prefill dispatch, prefix-affinity routing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.models.transformer import DecoderLM
+from repro.serving.disagg import DisaggService
+from repro.serving.handle import HandleStatus, RequestHandle
+from repro.serving.request import RequestState
+
+
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    """unroll=True model: the layerwise step is bit-identical, so token
+    streams are comparable across consumer modes."""
+    cfg = get_smoke_config("deepseek-67b")
+    model = DecoderLM(cfg, unroll=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def monolithic_generate(model, params, tokens, n):
+    logits, state = model.prefill(params, {"tokens": jnp.asarray(tokens[None])},
+                                  remat=False)
+    out = [int(jnp.argmax(logits[0, : model.cfg.vocab_size]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n):
+        logits, state = model.decode_step(params, state, tok)
+        tok = jnp.argmax(logits[:, : model.cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+def _toks(cfg, seed, n=64):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32)
+
+
+class TestHandleStreaming:
+    def test_submit_returns_streaming_handle(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 0)
+        ref = monolithic_generate(model, params, tokens, 4)
+
+        h = svc.submit(tokens, max_new=4)
+        assert isinstance(h, RequestHandle)
+        assert h.tokens == ref[:1]  # eager dispatch: first token immediately
+        seen = list(h.next_tokens())
+        while not h.finished:
+            svc.loop.tick()
+            seen.extend(h.next_tokens())
+        assert seen == ref and h.tokens == ref
+        assert h.status is HandleStatus.DONE and h.done
+        # metrics: TTFT/TTLT recorded, KV bytes measured by the engine
+        assert h.metrics.ttft_s is not None and h.metrics.ttft_s >= 0
+        assert h.metrics.ttlt_s >= h.metrics.ttft_s
+        assert len(h.metrics.token_times) == len(ref)
+        assert h.metrics.kv_bytes_pulled > 0
+        assert not svc.pending and not svc.handles
+
+    def test_handle_iterator_drives_the_loop(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 1)
+        ref = monolithic_generate(model, params, tokens, 3)
+        h = svc.submit(tokens, max_new=3)
+        assert list(h) == ref  # __iter__ ticks until DONE
+        assert h.done
+
+    def test_result_drives_to_completion(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 2)
+        h = svc.submit(tokens, max_new=2)
+        assert h.result() == monolithic_generate(model, params, tokens, 2)
+
+    def test_status_transitions_queued_dispatch(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        svc.loop.engine_budget = 2  # slow the pull so TRANSFERRING shows
+        h = svc.submit(_toks(cfg, 3), max_new=2, dispatch="queued")
+        observed = [h.status]
+        assert h.status is HandleStatus.QUEUED  # nothing ran yet
+        while not h.finished:
+            svc.loop.tick()
+            if h.status is not observed[-1]:
+                observed.append(h.status)
+        # monotone walk of the public machine (PREFILLING is transited
+        # synchronously inside a tick, so it may not be observable)
+        order = [HandleStatus.QUEUED, HandleStatus.PREFILLING,
+                 HandleStatus.TRANSFERRING, HandleStatus.DECODING,
+                 HandleStatus.DONE]
+        assert observed == [s for s in order if s in observed]
+        assert observed[0] is HandleStatus.QUEUED
+        assert HandleStatus.TRANSFERRING in observed
+        assert observed[-1] is HandleStatus.DONE
+
+    def test_queued_dispatch_admission_rejection_fails_handle(self, service_setup):
+        cfg, model, params = service_setup
+        from repro.sched import AdmissionRejected
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, policy="slo",
+                            prefill_time_fn=lambda n: n / 10.0,  # ~10 tok/s
+                            slo_classes={"interactive": 0.5})
+        h = svc.submit(_toks(cfg, 4), slo_class="interactive",
+                       max_new=2, dispatch="queued")
+        assert h.status is HandleStatus.QUEUED
+        svc.loop.tick()
+        assert h.status is HandleStatus.FAILED and h.failed
+        assert h.request_id not in svc.handles  # rejection is terminal
+        # result()/iteration surface the REJECTION, not dead advice to
+        # retry_parked (the request is gone from pending)
+        with pytest.raises(AdmissionRejected):
+            h.result()
+        with pytest.raises(AdmissionRejected):
+            list(h)
+
+    def test_generate_many_restores_loop_pump_budget(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        before = svc.loop.pump_budget
+        svc.generate_many([svc.submit(_toks(cfg, 70))], max_new=1,
+                          pump_budget=None)
+        assert svc.loop.pump_budget == before  # shared loop: no leak
+
+    def test_finish_retires_engine_byte_counter(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        h = svc.submit(_toks(cfg, 71), max_new=1)
+        svc.loop.run_until_idle()
+        assert h.metrics.kv_bytes_pulled > 0    # sealed on the handle...
+        assert svc.engine.pulled_bytes(h.request_id) == 0  # ...counter gone
+
+    def test_eos_as_first_token_finishes_without_decode(self, service_setup):
+        """EOS produced by PREFILL terminates the stream before any pull
+        or decode step; the prefill copy is released even though no
+        COMPLETE ever fires."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 80)
+        first = monolithic_generate(model, params, tokens, 0)[0]
+        h = svc.submit(tokens, max_new=8, eos_token=first)
+        svc.loop.run_until_idle()
+        assert h.done and h.tokens == [first]
+        assert svc.prefills[h.prefill_worker].pool.stats.in_use == 0
+        assert svc.decode.pool.stats.in_use == 0  # no pull ever ran
+
+    def test_queued_dispatch_retries_after_prefill_pool_frees(self, service_setup):
+        """A queued submission whose prefill pool is momentarily full
+        stays QUEUED (not wedged in PREFILLING) and dispatches once
+        capacity returns."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        hog = svc.prefills["p0"].pool.allocate(63)  # 1 free, need 2
+        h = svc.submit(_toks(cfg, 81), max_new=2, dispatch="queued")
+        svc.loop.tick()
+        assert h.status is HandleStatus.QUEUED  # full pool: still queued
+        svc.prefills["p0"].pool.free(hog)
+        svc.loop.run_until_idle()
+        assert h.done and len(h.tokens) == 3
+
+    def test_legacy_direct_finish_does_not_wedge_the_loop(self, service_setup):
+        """A request finished through the direct DecodeWorker path (the
+        fig_overlap/fig_continuous benchmark pattern) is swept by the
+        next tick instead of blocking run_until_idle forever."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        h = svc.submit(_toks(cfg, 82))
+        svc.admit_queued(only={h.request_id})
+        svc.pump(None)
+        out = svc.decode.decode_round(2)
+        svc.decode.finish(h.request_id)
+        assert h.request_id in out and h.done
+        svc.loop.run_until_idle()  # must return, not stall on the DONE handle
+        svc.loop.tick()            # ...and the next tick sweeps it out
+        assert h.request_id not in svc.handles
+
+    def test_eos_token_leaves_early(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 5)
+        ref = monolithic_generate(model, params, tokens, 4)
+        h = svc.submit(tokens, max_new=8, eos_token=ref[2])  # 2nd decode token
+        svc.loop.run_until_idle()
+        assert h.done
+        assert h.tokens == ref[:3]  # stopped AT the EOS token
+        assert svc.decode.pool.stats.in_use == 0  # blocks freed on leave
+
+
+class TestContinuousBatching:
+    def test_mid_decode_join_first_token_before_cohort_ends(self, service_setup):
+        """The acceptance observable: B submitted while A is mid-decode
+        gets its first DECODE token before A finishes — late admissions
+        no longer wait for the running cohort."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tok_a, tok_b = _toks(cfg, 6), _toks(cfg, 7)
+        ref_a = monolithic_generate(model, params, tok_a, 8)
+        ref_b = monolithic_generate(model, params, tok_b, 3)
+
+        ha = svc.submit(tok_a, max_new=8)
+        while ha.decoded < 3:  # A mid-decode
+            svc.loop.tick()
+        assert not ha.finished
+        hb = svc.submit(tok_b, max_new=3)
+        svc.loop.run_until_idle()
+        assert ha.tokens == ref_a and hb.tokens == ref_b
+        # B's first decode token (token_times[1]; [0] is the prefill
+        # token) landed strictly before A's last — continuous batching,
+        # observable purely via handle metrics
+        assert len(hb.metrics.token_times) == 4
+        assert hb.metrics.token_times[1] < ha.metrics.last_token_at
+
+    def test_leave_does_not_stall_or_perturb_cohabitants(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tok_a, tok_b = _toks(cfg, 8), _toks(cfg, 9)
+        ref_a = monolithic_generate(model, params, tok_a, 2)
+        ref_b = monolithic_generate(model, params, tok_b, 6)
+        ha = svc.submit(tok_a, max_new=2)   # leaves early
+        hb = svc.submit(tok_b, max_new=6)   # keeps decoding after A left
+        svc.loop.run_until_idle()
+        assert ha.tokens == ref_a
+        assert hb.tokens == ref_b  # rebuild after A's leave was lossless
+
+    def test_staggered_joins_match_monolithic(self, service_setup):
+        """Requests trickling in over many ticks (join at different
+        batch sizes) all produce monolithic-identical streams."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=2, num_blocks=64)
+        toks = [_toks(cfg, 10 + i) for i in range(4)]
+        refs = [monolithic_generate(model, params, t, 4) for t in toks]
+        handles = []
+        for t in toks:
+            handles.append(svc.submit(t, max_new=4))
+            svc.loop.tick()  # earlier submissions are already decoding
+        svc.loop.run_until_idle()
+        for h, ref in zip(handles, refs):
+            assert h.tokens == ref
+
+    def test_shims_are_token_identical_to_loop(self, service_setup):
+        """generate/generate_many are thin shims over the loop: same
+        seeded workload, three drive styles, identical streams."""
+        cfg, model, params = service_setup
+        toks = [_toks(cfg, 20 + i) for i in range(3)]
+        outs = []
+        # (a) batch shim
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        reqs = [svc.submit(t) for t in toks]
+        got = svc.generate_many(reqs, max_new=3)
+        outs.append([got[r.request_id] for r in reqs])
+        # (b) single-request shim (the SAME path, satellite fix)
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        outs.append([svc.generate(svc.submit(t), max_new=3) for t in toks])
+        # (c) raw loop
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        handles = [svc.submit(t, max_new=3) for t in toks]
+        svc.loop.run_until_idle()
+        outs.append([list(h.tokens) for h in handles])
+        assert outs[0] == outs[1] == outs[2]
+        for i, t in enumerate(toks):
+            assert outs[0][i] == monolithic_generate(model, params, t, 3)
+
+    def test_consecutive_layerwise_joins_are_lossless(self, dense_setup):
+        """Regression: a layerwise streaming join must COMMIT its step
+        (context_len/last_token) immediately — a second join on the next
+        tick rebuilds from those fields, and stale values replayed the
+        joiner's token and dropped its appended KV page."""
+        cfg, model, params = dense_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        toks = [_toks(cfg, 90 + i) for i in range(3)]
+        refs = [monolithic_generate(model, params, t, 5) for t in toks]
+        handles = [svc.submit(toks[0], max_new=5)]
+        while handles[0].decoded < 1:
+            svc.loop.tick()
+        handles.append(svc.submit(toks[1], max_new=5))
+        svc.loop.tick()  # B streams into this tick's step...
+        handles.append(svc.submit(toks[2], max_new=5))
+        svc.loop.run_until_idle()  # ...and C's join rebuilds around it
+        for h, ref in zip(handles, refs):
+            assert h.tokens == ref
+
+    def test_eos_leave_while_cobatched_pull_retries_torn(self, dense_setup):
+        """Edge case from the issue: request A leaves at EOS in the same
+        window where co-batched B is retrying a torn layerwise pull —
+        survivors' streams must be unperturbed and B must still finish."""
+        cfg, model, params = dense_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64, consume="layerwise")
+        tok_a, tok_b = _toks(cfg, 30), _toks(cfg, 31)
+        ref_a = monolithic_generate(model, params, tok_a, 2)
+        ref_b = monolithic_generate(model, params, tok_b, 4)
+
+        # A decoding; stop it at its 2nd decode token via EOS
+        ha = svc.submit(tok_a, max_new=8, eos_token=ref_a[2])
+        while ha.decoded < 1:
+            svc.loop.tick()
+        # B's pull will tear at layer 1 (prefill source dies mid-stream)
+        hb = svc.submit(tok_b, max_new=4)
+        victim = hb.prefill_worker
+        svc.admit_queued(only={hb.request_id})
+        fut = svc.decode.inflight[hb.request_id].future
+        fut.add_layer_callback(
+            lambda f, layer: layer == 1 and svc.fail_prefill_worker(victim))
+        svc.loop.run_until_idle()
+        assert ha.done and ha.tokens == ref_a[:3]  # left at EOS
+        assert hb.done and hb.tokens == ref_b     # torn, re-routed, finished
+        assert hb.retries == 1
+        assert svc.decode.pool.stats.in_use == 0
+
+
+class TestHedgedPrefill:
+    def test_hedge_twin_freed_when_primary_completes(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 40)
+        ref = monolithic_generate(model, params, tokens, 3)
+        h = svc.submit(tokens, hedge=2)
+        assert h.metrics.hedged
+        twin = svc.hedges[h.request_id]
+        assert twin.worker_id != h.prefill_worker
+        assert twin.first_token == h.tokens[0]  # same compute, same token
+        tw_pool = svc.prefills[twin.worker_id].pool
+        assert tw_pool.stats.in_use > 0  # twin KV parked
+        out = svc.generate(h, max_new=3)
+        assert out == ref
+        # primary's COMPLETE decided the race: loser aborted, slab freed
+        assert h.request_id not in svc.hedges
+        assert tw_pool.stats.in_use == 0
+
+    def test_hedge_adopted_on_primary_death_no_reprefill(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 41)
+        ref = monolithic_generate(model, params, tokens, 3)
+        h = svc.submit(tokens, hedge=2)
+        primary, twin_wid = h.prefill_worker, svc.hedges[h.request_id].worker_id
+        tw_pool = svc.prefills[twin_wid].pool
+        held_before = tw_pool.stats.in_use
+        svc.fail_prefill_worker(primary)
+        # failover adopted the twin's copy instead of re-prefilling: same
+        # worker, same slab footprint, no new prefill compute charged
+        assert h.prefill_worker == twin_wid
+        assert h.request.state is RequestState.KV_QUEUED
+        assert h.metrics.hedge_adopted
+        assert tw_pool.stats.in_use == held_before  # adopted, not recomputed
+        assert h.request_id not in svc.hedges  # twin consumed
+        assert svc.generate(h, max_new=3) == ref
+
+    def test_hedge_degrades_gracefully_with_one_worker(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        tokens = _toks(cfg, 42)
+        h = svc.submit(tokens, hedge=2)  # no second worker: no twin
+        assert h.request_id not in svc.hedges
+        assert not h.metrics.hedged
+        assert len(svc.generate(h, max_new=2)) == 3
+
+
+class TestPrefixAffinityRouting:
+    def test_repeat_prefix_routes_to_retaining_worker(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2,
+                            num_blocks=64, policy="prefix_affinity")
+        tokens = _toks(cfg, 50)
+        h1 = svc.submit(tokens, prefix_id="sys-prompt")
+        w1 = h1.decode_worker
+        svc.generate(h1, max_new=2)
+        dw = svc.decodes[w1]
+        # the finished request's prefix blocks stay refcounted in the pool
+        assert "sys-prompt" in dw.prefix_cache
+        assert dw.pool.stats.in_use == len(dw.prefix_cache["sys-prompt"]) > 0
+        # same prefix -> same worker (affinity); fresh prefix -> the
+        # other, less-loaded worker (fallback to least_loaded)
+        h2 = svc.submit(tokens, prefix_id="sys-prompt")
+        assert h2.decode_worker == w1
+        h3 = svc.submit(_toks(cfg, 51), prefix_id="other")
+        assert h3.decode_worker != w1
+        svc.generate_many([h2, h3], max_new=2)
+
+    def test_prefix_cache_evicted_under_pressure(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        dw = svc.decode
+        h1 = svc.submit(_toks(cfg, 52), prefix_id="p0")
+        svc.generate(h1, max_new=2)
+        retained = dw.pool.stats.in_use
+        assert retained > 0 and "p0" in dw.prefix_cache
+        # hog the pool so the next admission only fits if the retained
+        # prefix is evicted
+        hog = dw.pool.allocate(dw.pool.num_free - 1)
+        h2 = svc.submit(_toks(cfg, 53))
+        assert len(svc.generate(h2, max_new=2)) == 3  # evicted, not stuck
+        assert "p0" not in dw.prefix_cache
+        dw.pool.free(hog)
+
+    def test_load_reports_carry_prefix_ids(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        h = svc.submit(_toks(cfg, 54), prefix_id="pfx")
+        svc.generate(h, max_new=2)
+        svc._report_loads()
+        rep = svc.scheduler.load(svc.decode.info.worker_id)
+        assert "pfx" in rep.prefix_ids
+
+
+class TestWorkerStep:
+    def test_step_equals_decode_round_tokens(self, service_setup):
+        """decode_round is step() run to a fixed budget: same residents,
+        same tokens, either way."""
+        cfg, model, params = service_setup
+        tokens = _toks(cfg, 60)
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        r = svc.submit(tokens)
+        assert svc.admit_to_decode(r.request)
+        round_out = svc.decode.decode_round(4)[r.request_id]
+
+        svc2 = DisaggService(model, params, n_prefill=1, n_decode=1, num_blocks=64)
+        r2 = svc2.submit(tokens)
+        assert svc2.admit_to_decode(r2.request)
+        step_out = []
+        for _ in range(4):
+            step_out.append(svc2.decode.step()[r2.request_id])
+        assert step_out == round_out
+
+    def test_margin_exhaustion_rebuild_is_lossless(self, service_setup):
+        """Decode far enough past the page margin to force mid-stream
+        state rebuilds; the stream must still match monolithic."""
+        cfg, model, params = service_setup
+        bs = model.BLOCK_SIZE
+        n_steps = 2 * bs + 3  # crosses >= 2 page boundaries
+        tokens = _toks(cfg, 61, n=bs)
+        ref = monolithic_generate(model, params, tokens, n_steps)
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64)
+        h = svc.submit(tokens, max_new=n_steps)
+        svc.loop.run_until_idle()
+        assert h.tokens == ref
