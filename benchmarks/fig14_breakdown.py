@@ -4,6 +4,16 @@ Paper: transfer is 1.1 % (arXiv) / 0.5 % (ShareGPT) of end-to-end
 latency — the optimizations make transfer negligible; decode-side
 activities dominate, with decode queuing reaching 52 % / 30 % at
 QPS 0.5.
+
+Two sources, one figure:
+
+* the event simulator at paper scale (mistral-large-123b, arXiv +
+  ShareGPT workloads) — the modeled breakdown;
+* a LIVE cell (``fig14/live/...``): a real-substrate ``DisaggService``
+  run with the span tracer on, its breakdown computed from the recorded
+  per-request lifecycle spans (``repro.obs.breakdown``).  Same component
+  names, so the live fractions cross-check the sim's directly — the
+  live transfer fraction is the measured analogue of the paper's 1.1 %.
 """
 from __future__ import annotations
 
@@ -12,6 +22,40 @@ from repro.configs import get_config
 from repro.sim.costs import CostModel, H100_NODE
 from repro.sim.events import ClusterSim, SimConfig
 from repro.sim.workloads import ARXIV, SHAREGPT, sample_requests
+
+
+def _live_rows() -> list[Row]:
+    """Real-substrate breakdown from lifecycle spans (smoke scale)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.obs import Tracer, all_request_breakdowns, mean_fractions
+    from repro.serving.disagg import DisaggService
+
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tracer = Tracer()
+    svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                        num_blocks=64, tracer=tracer)
+    rng = np.random.default_rng(7)
+    handles = [svc.submit(rng.integers(0, cfg.vocab_size, size=16), max_new=2)
+               for _ in range(2)]
+    svc.loop.run_until_idle()
+    breakdowns = all_request_breakdowns(tracer)
+    fr = mean_fractions(breakdowns.values())
+    ttlt = sum(b.ttlt_s for b in breakdowns.values()) / max(len(breakdowns), 1)
+    assert all(h.done for h in handles)
+    return [Row(
+        "fig14/live/smoke", ttlt * 1e6,
+        f"transfer_frac={fr['transfer_s']:.4f};"
+        f"decode_frac={fr['decode_s']:.2f};"
+        f"queue_frac={fr['queue_s']:.2f};"
+        f"prefill_frac={fr['prefill_s']:.2f};"
+        f"n={len(breakdowns)}",
+    )]
 
 
 def run() -> list[Row]:
@@ -34,4 +78,5 @@ def run() -> list[Row]:
                 f"queue_frac={fr['prefill_queue_s'] + fr['decode_queue_s']:.2f}"
                 + (note if qps == 0.5 else ""),
             ))
+    rows.extend(_live_rows())
     return rows

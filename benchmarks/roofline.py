@@ -158,6 +158,12 @@ def main() -> None:
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default="pod")
     ap.add_argument("--out", default="results/roofline.md")
+    ap.add_argument("--bench-out", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also merge per-cell roofline terms into the "
+                         "BENCH_<pr>.json trajectory point (repro.obs.bench)")
+    ap.add_argument("--pr", type=int, default=None,
+                    help="PR number for --bench-out (default: run.py's)")
     args = ap.parse_args()
     dir_ = pathlib.Path(args.dir)
 
@@ -198,6 +204,21 @@ def main() -> None:
     # per-cell JSON for downstream tooling
     (pathlib.Path(args.out).parent / "roofline.json").write_text(
         json.dumps({"cells": rows, "skipped": skips}, indent=2))
+    if args.bench_out is not None and rows:
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+        from benchmarks.run import BENCH_PR
+        from repro.obs.bench import BenchTrajectory, bench_path
+        pr = args.pr if args.pr is not None else BENCH_PR
+        traj = BenchTrajectory(pr, source="benchmarks.roofline")
+        for r in rows:
+            cell = f"roofline/{r['arch']}/{r['shape']}"
+            traj.add(f"{cell}/step_s_lb", r["step_s_lb"] * 1e6, unit="us",
+                     dominant=r["dominant"])
+            traj.add(f"{cell}/roofline_fraction", r["roofline_fraction"],
+                     unit="frac")
+        out = traj.write(args.bench_out or bench_path(pr))
+        print(f"# merged {2 * len(rows)} roofline entries into {out}")
 
 
 if __name__ == "__main__":

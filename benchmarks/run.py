@@ -2,11 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
 Run as ``PYTHONPATH=src python -m benchmarks.run [--only fig13,fig15]``.
+
+``--json [PATH]`` additionally writes the rows as one schema-versioned
+``BENCH_<pr>.json`` point of the cross-PR regression trajectory
+(``repro.obs.bench``; default path ``BENCH_<pr>.json`` at the repo
+root, merging with entries other writers — e.g. ``roofline.py
+--bench-out`` — already put there).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import pathlib
 import sys
 import traceback
 
@@ -26,25 +33,60 @@ MODULES = [
     "kernel_bench",
 ]
 
+# The PR number stamped into BENCH_<pr>.json artifacts.  Bump when a new
+# PR wants its own trajectory point (see repro.obs.bench.load_trajectory).
+BENCH_PR = 6
 
-def main() -> None:
+
+def select_modules(prefixes: list[str]) -> list[str]:
+    """Modules matching the ``--only`` prefixes (all when none given).
+    A prefix that matches NO module is an error — a typo'd ``--only``
+    must not silently benchmark nothing."""
+    if not prefixes:
+        return list(MODULES)
+    dead = [p for p in prefixes
+            if not any(m.startswith(p) for m in MODULES)]
+    if dead:
+        raise SystemExit(
+            f"--only prefix(es) {dead} match no benchmark module; "
+            f"available: {', '.join(MODULES)}")
+    return [m for m in MODULES if any(m.startswith(p) for p in prefixes)]
+
+
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module prefixes")
-    args = ap.parse_args()
+    ap.add_argument("--json", nargs="?", const="", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_<pr>.json trajectory "
+                         "point (default path: BENCH_%d.json)" % BENCH_PR)
+    ap.add_argument("--pr", type=int, default=BENCH_PR,
+                    help="PR number stamped into the --json artifact")
+    args = ap.parse_args(argv)
     prefixes = [p for p in args.only.split(",") if p]
+    modules = select_modules(prefixes)
 
     print("name,us_per_call,derived")
+    rows = []
     failed = []
-    for mod_name in MODULES:
-        if prefixes and not any(mod_name.startswith(p) for p in prefixes):
-            continue
+    for mod_name in modules:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
             for row in mod.run():
                 print(row.csv(), flush=True)
+                rows.append(row)
         except Exception:  # noqa: BLE001
             failed.append(mod_name)
             traceback.print_exc()
+    if args.json is not None and rows:
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+        from repro.obs.bench import BenchTrajectory, bench_path, validate_bench
+        traj = BenchTrajectory(args.pr, source="benchmarks.run")
+        traj.extend_rows(rows)
+        out = traj.write(args.json or bench_path(args.pr))
+        import json as _json
+        doc = validate_bench(_json.loads(out.read_text()))  # self-check
+        print(f"# wrote {out} ({len(rows)} rows this run, "
+              f"{len(doc['entries'])} entries total)", file=sys.stderr)
     if failed:
         print(f"# FAILED modules: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.coalesce import CoalescedRead, coalesce
 from repro.core.descriptors import ByteRange, CompleteTxn, ReadTxn, Txn
+from repro.obs.trace import NULL_TRACER
 
 __all__ = [
     "KVDIRECT_UTIL",
@@ -305,6 +306,8 @@ class TransferEngine:
         staging_block_bytes: int = 256 * 1024,
         codec: str = "none",
         tick_budget: int = 64,
+        tracer=None,
+        metrics=None,
     ) -> None:
         """codec="int8_transport": beyond-paper KV compression on the wire
         (the paper lists KV compression as complementary, §6) — bf16 spans
@@ -345,6 +348,15 @@ class TransferEngine:
         self._pulled_bytes: collections.Counter[str] = collections.Counter()
         self.tick_budget = tick_budget
         self.stats = TransferStats()
+        # Observability (optional; see docs/observability.md): the tracer
+        # records the per-request pull lifecycle — submit instant, one
+        # span per layer as its reads land, complete/torn instant — on
+        # the request's track, so a serve trace shows the wire timeline
+        # under the decode timeline.  The metrics registry accumulates
+        # engine totals (bytes, reads, completes, teardowns).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._layer_mark: dict[str, float] = {}  # rid -> last layer-end ts
 
     # ------------------------------------------------------------- setup
     def register_memory(self, region: MemoryRegion) -> None:
@@ -421,6 +433,13 @@ class TransferEngine:
                 fut = TransferFuture(t.request_id, engine=self)
                 self._futures[t.request_id] = fut
                 created.append(fut)
+                if self.tracer.enabled:
+                    now = self.tracer.now()
+                    self._layer_mark[t.request_id] = now
+                    self.tracer.instant("transfer.submit", ts=now,
+                                        track=("request", t.request_id))
+                if self.metrics is not None:
+                    self.metrics.inc("engine.pulls_submitted")
             self._queue.append(t)
         return created
 
@@ -439,6 +458,15 @@ class TransferEngine:
         fut._error = error
         self._futures.pop(fut.request_id, None)
         self._completions.append(fut)
+        self._layer_mark.pop(fut.request_id, None)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "transfer.torn" if error is not None else "transfer.complete",
+                track=("request", fut.request_id),
+                bytes=self._pulled_bytes.get(fut.request_id, 0),
+                **({"error": str(error)} if error is not None else {}))
+        if self.metrics is not None and error is not None:
+            self.metrics.inc("engine.pulls_torn")
         for cb in fut._cbs:
             cb(fut)
         fut._cbs.clear()
@@ -538,6 +566,10 @@ class TransferEngine:
             self.stats.bytes_moved += wire
             self.stats.modeled_time_s += self.link.read_time(wire)
         self.stats.wall_time_s += time.perf_counter() - t0
+        if self.metrics is not None and merged:
+            self.metrics.inc("engine.reads_posted", len(merged))
+            self.metrics.inc("engine.bytes_moved",
+                             sum(op.nbytes for op in merged))
         # torn reads are accounted too — consumed (future already failed),
         # not executed — so a queued COMPLETE for them stays inert instead
         # of raising "reads still queued"
@@ -574,6 +606,9 @@ class TransferEngine:
                 self.stats.bytes_moved += round_bytes
                 self.stats.modeled_time_s += self.link.message_stream_time(
                     round_bytes, len(round_txns))
+                if self.metrics is not None:
+                    self.metrics.inc("engine.reads_posted")
+                    self.metrics.inc("engine.bytes_moved", round_bytes)
                 round_txns, round_bytes = [], 0
             if t is not None:
                 round_txns.append(t)
@@ -595,6 +630,15 @@ class TransferEngine:
             self._outstanding_layer[key] -= 1
             if self._outstanding_layer[key] <= 0:
                 del self._outstanding_layer[key]
+                if self.tracer.enabled:
+                    # one span per landed layer: previous layer's end (or
+                    # the submit mark) -> now, on the request's track
+                    now = self.tracer.now()
+                    t0 = self._layer_mark.get(t.request_id, now)
+                    self.tracer.complete(
+                        f"transfer.layer{t.layer}", ("request", t.request_id),
+                        t0, now, layer=t.layer)
+                    self._layer_mark[t.request_id] = now
                 fut = self._futures.get(t.request_id)
                 if fut is not None:
                     fut._layers_done.append(t.layer)
@@ -670,6 +714,8 @@ class TransferEngine:
         # (we drain in order, so FIFO holds; the cost of the ACK is modeled).
         self.stats.completes += 1
         self.stats.modeled_time_s += self.link.ack_rtt_s
+        if self.metrics is not None:
+            self.metrics.inc("engine.completes")
         for cb in self._complete_cbs:
             cb(txn)
         fut = self._futures.get(txn.request_id)

@@ -100,7 +100,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, depth: str, out_dir: st
     ns = lambda spec: NamedSharding(mesh, spec)
     repl = ns(P())
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         opt_cfg = AdamWConfig(fp32_master=cfg.fp32_master)
         params_s, opt_s = init_train_state_specs(model, opt_cfg)
@@ -158,11 +158,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, depth: str, out_dir: st
         )
         lowered = jitted.lower(params_s, state_s, specs["tokens"])
 
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     hlo_pre = lowered.as_text()
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -6,6 +6,11 @@
 Runs the REAL pipeline: prefill workers fill registered KV slabs, the
 decode worker pulls with one-sided reads through the transfer engine
 (coalesced), COMPLETE frees prefill memory, continuous-batching decode.
+
+Observability: per-request and engine counters flow through the
+service's ``repro.obs.MetricsRegistry`` (printed at exit); pass
+``--trace-out trace.json`` to record lifecycle spans and export the
+Chrome trace-event timeline (chrome://tracing / ui.perfetto.dev).
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models.registry import build_model
+from repro.obs import Tracer, all_request_breakdowns, mean_fractions
 from repro.serving.disagg import DisaggService
 
 
@@ -28,15 +34,20 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prefill-workers", type=int, default=2)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record lifecycle spans and write a Chrome "
+                         "trace-event JSON timeline here")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    svc = DisaggService(model, params, n_prefill=args.prefill_workers, num_blocks=256)
+    tracer = Tracer() if args.trace_out else None
+    svc = DisaggService(model, params, n_prefill=args.prefill_workers,
+                        num_blocks=256, tracer=tracer)
 
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.requests):
         tokens = rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
         req = svc.submit(tokens)
@@ -47,8 +58,23 @@ def main() -> None:
               f"(engine: {stats.txns_submitted} txns → {stats.reads_posted} reads, "
               f"coalesce {stats.coalesce_factor:.1f}x, "
               f"{stats.bytes_moved/2**20:.1f} MiB)")
-    print(f"[serve] {args.requests} requests in {time.time()-t0:.1f}s; "
+    print(f"[serve] {args.requests} requests in {time.perf_counter()-t0:.1f}s; "
           f"transfer modeled {svc.engine.stats.modeled_time_s*1e3:.2f} ms total")
+    # the serve-path counters/histograms, from the one registry every
+    # layer (loop, engine, router, request completion) reports into
+    print("[serve] metrics:")
+    for line in svc.metrics.format(
+            prefixes=("requests.", "request.", "engine.", "loop.")).splitlines():
+        print(f"[serve]   {line}")
+    if tracer is not None:
+        breakdowns = all_request_breakdowns(tracer)
+        if breakdowns:
+            fr = mean_fractions(breakdowns.values())
+            print("[serve] breakdown (mean fractions): "
+                  + " ".join(f"{k}={v:.3f}" for k, v in fr.items()))
+        tracer.export_chrome(args.trace_out)
+        print(f"[serve] wrote Chrome trace ({len(tracer.spans)} spans) "
+              f"to {args.trace_out}")
 
 
 if __name__ == "__main__":

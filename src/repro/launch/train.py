@@ -63,14 +63,14 @@ def main() -> None:
     n_params = sum(int(x.size) for x in jax.tree.leaves(params))
     print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
           f"{len(jax.devices())} devices, batch {args.batch}x{args.seq}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if step % 10 == 0 or step == args.steps - 1:
             print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({(time.time()-t0):.1f}s)")
+                  f"({(time.perf_counter()-t0):.1f}s)")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1,
                             (params, opt_state, data.state()))

@@ -82,9 +82,13 @@ class RequestRouter:
         prefill_time_fn: Callable[[int], float] | None = None,
         coalesce_factor: float = 8.0,
         span_bytes: int = 64 * 1024,
+        metrics=None,
         **policy_kwargs,
     ) -> None:
         self.scheduler = scheduler
+        # optional repro.obs.MetricsRegistry: routing decisions and hedge
+        # outcomes land here when the serving layer wires one in
+        self.metrics = metrics
         self.policy = make_policy(policy, **policy_kwargs)
         self.links = dict(links or {})
         self.default_link = default_link or LinkModel()
@@ -210,6 +214,8 @@ class RequestRouter:
         if not force and not self.policy.admit(ctx, projected):
             if count_reject:
                 self.rejected_count += 1
+            if self.metrics is not None:
+                self.metrics.inc("router.rejected")
             if queue_on_reject:
                 self.backlog.append(ctx)
                 return None
@@ -223,6 +229,10 @@ class RequestRouter:
         )
         self.decisions[ctx.request_id] = decision
         self.total_transfer_cost_s += d.transfer_cost_s
+        if self.metrics is not None:
+            self.metrics.inc("router.routed")
+            self.metrics.observe("router.projected_ttft_s", projected)
+            self.metrics.observe("router.transfer_cost_s", d.transfer_cost_s)
         return decision
 
     def pick_hedge_prefill(self, ctx: RouteRequest, exclude: set[str],
@@ -236,11 +246,15 @@ class RequestRouter:
         cands = [c for c in self.prefill_candidates(now)
                  if c.worker_id not in exclude]
         if not cands:
+            if self.metrics is not None:
+                self.metrics.inc("router.hedge_unavailable")
             return None
         p = self.policy.pick_prefill(ctx, self._fitting(ctx, cands))
         t_prefill = self.prefill_time_fn(ctx.prompt_len)
         self._busy_until[p.worker_id] = now + p.ready_s + t_prefill
         self._charges[f"{ctx.request_id}#hedge"] = (p.worker_id, t_prefill)
+        if self.metrics is not None:
+            self.metrics.inc("router.hedge_picked")
         return p.worker_id
 
     def forget_hedge(self, request_id: str) -> None:

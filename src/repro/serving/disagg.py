@@ -40,12 +40,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 
 import numpy as np
 
 from repro.core.cluster import ClusterScheduler, MembershipEvent
 from repro.core.connection import ChipInfo, ConnectionManager, WorkerInfo
 from repro.core.transfer_engine import LinkModel, TransferEngine
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.sched import LoadReport, NoWorkersError, RequestRouter, RouteRequest
 from repro.serving.blocks import OutOfBlocks
 from repro.serving.engine import DecodeWorker, PrefillWorker
@@ -92,18 +95,37 @@ class DisaggService:
         prefill_time_fn=None,
         slo_classes: dict[str, float] | None = None,
         consume: str = "full",
+        tracer=None,
+        metrics=None,
+        clock=None,
     ):
         """``consume`` ("full" | "layerwise") is the decode workers' pull
         consumption mode: "layerwise" starts a request's first decode step
         on early layers while the tail of its KV pull is still in flight
-        (see DecodeWorker)."""
+        (see DecodeWorker).
+
+        Observability (docs/observability.md): pass a ``repro.obs.Tracer``
+        as ``tracer`` to record per-request lifecycle spans and loop/engine
+        phase spans (the default is the disabled no-op tracer); ``metrics``
+        is the ``MetricsRegistry`` serve-path counters/histograms land in
+        (one is created when omitted); ``clock`` is THE wall clock for
+        every observability timestamp — tracer spans, handle metrics, and
+        token times share it, so the span-derived breakdown and
+        ``HandleMetrics`` agree exactly (a sim harness can inject a
+        virtual clock and produce the identical span schema)."""
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
         self.model = model
         self.params = params
+        self.obs_clock = clock if clock is not None else time.perf_counter
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None and clock is not None:
+            tracer.clock = clock  # one clock: spans == handle metrics
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.scheduler = ClusterScheduler()
-        self.engine = TransferEngine(coalescing="sorted")
+        self.engine = TransferEngine(coalescing="sorted", tracer=self.tracer,
+                                     metrics=self.metrics)
         self._ids = itertools.count()
         self._wid_seq = {"p": itertools.count(), "d": itertools.count()}
         self._next_base = 0x7F00_0000_0000  # bump allocator for KV slabs
@@ -125,7 +147,8 @@ class DisaggService:
             policy == "slo" and slo_classes is not None) else {}
         self.router = RequestRouter(
             self.scheduler, policy, links=links,
-            prefill_time_fn=prefill_time_fn, **policy_kwargs,
+            prefill_time_fn=prefill_time_fn, metrics=self.metrics,
+            **policy_kwargs,
         )
 
         # COMPLETE() → prefill worker frees its blocks
@@ -172,7 +195,8 @@ class DisaggService:
         w = DecodeWorker(_winfo(wid, "decode"), self.model, self.params,
                          num_blocks=num_blocks, engine=self.engine,
                          base_address=self._alloc_base(num_blocks),
-                         consume=self.consume)
+                         consume=self.consume, tracer=self.tracer,
+                         metrics=self.metrics)
         cm = ConnectionManager(w.info)
         cm.on_invalidate(self._on_prefill_invalidate)
         for pwid, pw in self.prefills.items():
@@ -244,6 +268,9 @@ class DisaggService:
                 req.retries += 1
                 try:
                     self._assign_decode(req)
+                    self.tracer.phase(("request", rid), "queue.kv",
+                                      decode_worker=req.decode_worker)
+                    self.metrics.inc("failover.decode_reassigned")
                 except NoWorkersError:
                     self._park(req)
             elif req.state in (RequestState.KV_TRANSFER,
@@ -259,9 +286,16 @@ class DisaggService:
         if req.state is not RequestState.FAILED:
             req.to(RequestState.FAILED)
         req.decode_worker = None
+        # parked wall time reads as queue time: the lifecycle track stays
+        # a gap-free partition across a park/revive cycle
+        self.tracer.phase(("request", req.request_id), "queue", parked=True)
+        self.metrics.inc("failover.parked")
 
     def _restart(self, req: Request, tokens: np.ndarray) -> None:
         req.retries += 1
+        self.metrics.inc("failover.restarts")
+        self.tracer.instant("failover.restart", track=("request", req.request_id),
+                            retries=req.retries)
         dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
         if dw is not None:
             dw.abort(req.request_id)  # drop a dead in-flight pull, free blocks
@@ -279,6 +313,9 @@ class DisaggService:
                 req.prefill_worker = twin.worker_id
                 req.prefill_blocks = list(twin.blocks)
                 self.first_tokens[req.request_id] = twin.first_token
+                self.metrics.inc("hedge.adopted")
+                self.tracer.phase(("request", req.request_id), "queue.kv",
+                                  adopted_twin=twin.worker_id)
                 if h is not None:
                     h.metrics.hedge_adopted = True
                 if req.state is not RequestState.KV_QUEUED:
@@ -323,6 +360,8 @@ class DisaggService:
                 except NoWorkersError:
                     continue
                 req.to(RequestState.KV_QUEUED)
+                self.tracer.phase(("request", rid), "queue.kv",
+                                  decode_worker=req.decode_worker)
             else:
                 self._restart(req, tokens)
                 if req.state is RequestState.FAILED:
@@ -378,13 +417,18 @@ class DisaggService:
         decision = self.router.route(self._ctx(req), now=self.clock, force=force)
         req.prefill_worker = decision.prefill_worker
         req.decode_worker = decision.decode_worker
+        tr = ("request", req.request_id)
         w = self.prefills[decision.prefill_worker]
+        self.tracer.phase(tr, "prefill", worker=decision.prefill_worker)
         try:
             self.first_tokens[req.request_id] = w.prefill(req, tokens)
         except Exception:
+            self.tracer.phase(tr, "queue")  # prefill never ran: back to queued
             self.router.forget(req.request_id)  # retire the ledger charge
             raise
         req.to(RequestState.KV_QUEUED)
+        self.tracer.phase(tr, "queue.kv", decode_worker=decision.decode_worker)
+        self.metrics.inc("requests.dispatched")
         if hedge > 1:
             self._dispatch_hedge(req, tokens)
         h = self.handles.get(req.request_id)
@@ -408,6 +452,9 @@ class DisaggService:
             self.router.forget_hedge(req.request_id)  # twin never ran
             return
         self.hedges[req.request_id] = _HedgeTwin(twin_wid, blocks, first)
+        self.metrics.inc("hedge.dispatched")
+        self.tracer.instant("hedge.dispatch", track=("request", req.request_id),
+                            twin=twin_wid)
         h = self.handles.get(req.request_id)
         if h is not None:
             h.metrics.hedged = True
@@ -418,6 +465,7 @@ class DisaggService:
         twin = self.hedges.pop(rid, None)
         if twin is None:
             return
+        self.metrics.inc("hedge.aborted")
         w = self.prefills.get(twin.worker_id)
         if w is not None:
             w.pool.free(twin.blocks)
@@ -450,9 +498,16 @@ class DisaggService:
                       arrival_s=self.clock, slo_class=slo_class,
                       prefix_id=prefix_id, prefix_len=prefix_len)
         handle = RequestHandle(req, self, max_new=max_new,
-                               eos_token=eos_token, hedge=hedge)
+                               eos_token=eos_token, hedge=hedge,
+                               clock=self.obs_clock)
         self.pending[req.request_id] = (req, tokens)
         self.handles[req.request_id] = handle
+        # the request's lifecycle track opens at the SAME timestamp the
+        # handle metrics anchor on, so breakdown ttlt == HandleMetrics.ttlt_s
+        self.tracer.phase(("request", req.request_id), "queue",
+                          ts=handle.metrics.submitted_at,
+                          prompt_len=req.prompt_len, slo=slo_class)
+        self.metrics.inc("requests.submitted")
         if dispatch == "eager":
             try:
                 self._dispatch(req, tokens, hedge=hedge)
@@ -536,6 +591,8 @@ class DisaggService:
         entry = self.pending.pop(rid, None)
         if entry is not None and entry[0].state is not RequestState.FAILED:
             entry[0].to(RequestState.FAILED)
+        self.tracer.end_phase(("request", rid), rejected=str(err))
+        self.metrics.inc("requests.rejected")
         h = self.handles.pop(rid, None)
         if h is not None:
             h.error = err
@@ -549,6 +606,18 @@ class DisaggService:
         if h is not None:
             # seal BEFORE DecodeWorker.finish pops the engine's counter
             h.metrics.kv_bytes_pulled = self.engine.pulled_bytes(rid)
+            # close the lifecycle track AT the last token's timestamp, so
+            # the span partition's extent equals HandleMetrics.ttlt_s
+            self.tracer.end_phase(("request", rid), ts=h.metrics.last_token_at)
+            m, hm = self.metrics, h.metrics
+            m.inc("requests.finished")
+            m.inc("request.kv_bytes_pulled", hm.kv_bytes_pulled)
+            if hm.ttft_s is not None:
+                m.observe("request.ttft_s", hm.ttft_s)
+            if hm.ttlt_s is not None:
+                m.observe("request.ttlt_s", hm.ttlt_s)
+            if hm.tbt_s is not None:
+                m.observe("request.tbt_s", hm.tbt_s)
         req_entry = self.pending.pop(rid, None)
         if req_entry is not None:
             req = req_entry[0]

@@ -25,6 +25,7 @@ from repro.core.connection import Connection, DescriptorRegistry, WorkerInfo
 from repro.core.pull_push import pull_kv_async
 from repro.core.transfer_engine import ConnectionTornError, TransferEngine, TransferFuture
 from repro.models.transformer import DecodeState
+from repro.obs.trace import NULL_TRACER
 from repro.serving.blocks import BlockPool, OutOfBlocks
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState
@@ -153,10 +154,14 @@ class DecodeWorker:
                  base_address: int = 0x7F80000000,
                  consume: str = "full",
                  step_margin_blocks: int = 2,
-                 prefix_cache_cap: int = 4):
+                 prefix_cache_cap: int = 4,
+                 tracer=None,
+                 metrics=None):
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
         cfg = model.cfg
         self.info = info
         self.model = model
@@ -219,6 +224,12 @@ class DecodeWorker:
                             decode_pool=self.pool, decode_cache=self.cache,
                             preallocated=blocks)
         self.inflight[req.request_id] = _InFlight(req, first_token, fut)
+        # the lifecycle track's "transfer" phase: queue.kv ends the moment
+        # the pull is SUBMITTED (bytes may start moving this tick)
+        self.tracer.phase(("request", req.request_id), "transfer",
+                          worker=self.info.worker_id, blocks=len(blocks))
+        if self.metrics is not None:
+            self.metrics.inc("decode.admitted")
         return fut
 
     def admit_batch(
@@ -295,6 +306,12 @@ class DecodeWorker:
             self.resident[rid] = _Resident(
                 req, req.decode_blocks, req.prompt_len, fl.first_token)
             req.to(RequestState.DECODING)
+            # transfer ends when the request JOINS decode (promotion), so
+            # resolve→promote latency is charged to transfer, not decode
+            self.tracer.phase(("request", rid), "decode",
+                              worker=self.info.worker_id)
+            if self.metrics is not None:
+                self.metrics.inc("decode.promoted")
             promoted.append(rid)
         return promoted
 

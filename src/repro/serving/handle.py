@@ -110,7 +110,7 @@ class RequestHandle:
 
     def __init__(self, request: Request, service, *,
                  max_new: int | None = None, eos_token: int | None = None,
-                 hedge: int = 1) -> None:
+                 hedge: int = 1, clock=None) -> None:
         self.request = request
         self.service = service
         self.max_new = max_new      # decode-token budget (None = until EOS)
@@ -118,7 +118,12 @@ class RequestHandle:
         self.hedge = hedge
         self.tokens: list[int] = []  # [first_token, *decoded]
         self.error: Exception | None = None
-        self.metrics = HandleMetrics(submitted_at=time.monotonic())
+        # One clock for every per-request timestamp: the service passes
+        # its observability clock so handle metrics, tracer spans, and
+        # the span-derived breakdown are mutually consistent (a sim can
+        # inject a virtual clock and get the same schema).
+        self._clock = clock or time.monotonic
+        self.metrics = HandleMetrics(submitted_at=self._clock())
         self._consumed = 0
 
     # ------------------------------------------------------------ status
@@ -200,7 +205,7 @@ class RequestHandle:
 
     # ----------------------------------------------------- loop plumbing
     def _push(self, token: int, at: float | None = None) -> None:
-        at = time.monotonic() if at is None else at
+        at = self._clock() if at is None else at
         self.tokens.append(token)
         if self.metrics.first_token_at is None:
             self.metrics.first_token_at = at

@@ -35,9 +35,11 @@ top of it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
+from repro.obs.trace import NULL_TRACER
 from repro.sched import AdmissionRejected, NoWorkersError
 from repro.serving.blocks import OutOfBlocks
 from repro.serving.request import RequestState
@@ -47,14 +49,29 @@ __all__ = ["ServeLoop", "ServeLoopStalled", "TickReport"]
 
 class ServeLoopStalled(RuntimeError):
     """No request can make progress: typically every stuck request's
-    decode pool is too small for its KV footprint."""
+    decode pool is too small for its KV footprint.
 
-    def __init__(self, request_ids) -> None:
+    Stall forensics: the exception carries the FINAL ``TickReport``
+    (``report``) and the loop's cumulative per-phase progress counters
+    (``phase_counters``), and renders both into the message — so a CI
+    log alone shows *which* pipeline phase stopped moving (nothing ever
+    admitted?  tokens flowed then stopped?  engine still churning?)."""
+
+    def __init__(self, request_ids, report: "TickReport | None" = None,
+                 phase_counters: dict | None = None) -> None:
         self.request_ids = tuple(sorted(request_ids))
+        self.report = report
+        self.phase_counters = dict(phase_counters or {})
         stuck = ", ".join(self.request_ids)
-        super().__init__(
-            f"serve loop stalled: {stuck} cannot make progress "
-            "(decode pools too small for the request?)")
+        msg = (f"serve loop stalled: {stuck} cannot make progress "
+               "(decode pools too small for the request?)")
+        if report is not None:
+            msg += f"\n  last tick: {report.describe()}"
+        if self.phase_counters:
+            totals = ", ".join(f"{k}={int(v)}"
+                               for k, v in sorted(self.phase_counters.items()))
+            msg += f"\n  phase totals: {totals}"
+        super().__init__(msg)
 
 
 @dataclasses.dataclass
@@ -76,6 +93,14 @@ class TickReport:
                     or self.promoted or self.tokens or self.finished
                     or self.engine_processed)
 
+    def describe(self) -> str:
+        """Every field on one line — what ServeLoopStalled embeds."""
+        return (f"now={self.now:.6f} dispatched={self.dispatched} "
+                f"rejected={self.rejected} admitted={self.admitted} "
+                f"promoted={self.promoted} tokens={self.tokens} "
+                f"finished={self.finished} "
+                f"engine_processed={self.engine_processed}")
+
 
 class ServeLoop:
     def __init__(self, service, *, pump_budget: int | None = 32,
@@ -90,6 +115,10 @@ class ServeLoop:
         self.engine_budget = engine_budget
         self.max_admit = max_admit          # per-worker admission cap
         self.ticks = 0
+        # Stall forensics (see ServeLoopStalled): the most recent tick's
+        # report plus cumulative per-phase progress totals.
+        self.last_report: TickReport | None = None
+        self.phase_counters: collections.Counter[str] = collections.Counter()
 
     # ------------------------------------------------------------- tick
     def tick(self, now: float | None = None) -> TickReport:
@@ -99,22 +128,26 @@ class ServeLoop:
             svc.clock = max(svc.clock, now)
         self.ticks += 1
         report = TickReport(now=svc.clock)
+        tracer = getattr(svc, "tracer", NULL_TRACER)
+        clock = getattr(svc, "obs_clock", time.monotonic)
+        tick_span = tracer.span("tick", track="loop", tick=self.ticks)
 
         # 1. dispatch queued submissions (prefill + routing)
-        for rid, h in list(svc.handles.items()):
-            if h.request.state is not RequestState.QUEUED_PREFILL:
-                continue
-            entry = svc.pending.get(rid)
-            if entry is None:
-                continue
-            try:
-                svc._dispatch(h.request, entry[1], hedge=h.hedge)
-                report.dispatched.append(rid)
-            except AdmissionRejected as e:
-                svc._reject_queued(rid, e)
-                report.rejected.append(rid)
-            except (NoWorkersError, OutOfBlocks):
-                pass  # stays QUEUED; capacity may come back next tick
+        with tracer.span("tick.dispatch", track="loop"):
+            for rid, h in list(svc.handles.items()):
+                if h.request.state is not RequestState.QUEUED_PREFILL:
+                    continue
+                entry = svc.pending.get(rid)
+                if entry is None:
+                    continue
+                try:
+                    svc._dispatch(h.request, entry[1], hedge=h.hedge)
+                    report.dispatched.append(rid)
+                except AdmissionRejected as e:
+                    svc._reject_queued(rid, e)
+                    report.rejected.append(rid)
+                except (NoWorkersError, OutOfBlocks):
+                    pass  # stays QUEUED; capacity may come back next tick
 
         # 2. retire finished requests BEFORE admission and decode: a
         # request whose stream is already complete (EOS/budget reached
@@ -124,19 +157,21 @@ class ServeLoop:
         # prefill copy is released by _finish_request); a handle already
         # DONE (finished through the legacy direct-worker path) is swept
         # so it can't wedge run_until_idle.
-        for rid, h in list(svc.handles.items()):
-            st = h.request.state
-            if st is RequestState.DONE or (
-                    st in (RequestState.DECODING, RequestState.KV_QUEUED)
-                    and h.decode_finished()):
-                svc._finish_request(rid)
-                report.finished.append(rid)
+        with tracer.span("tick.retire", track="loop"):
+            for rid, h in list(svc.handles.items()):
+                st = h.request.state
+                if st is RequestState.DONE or (
+                        st in (RequestState.DECODING, RequestState.KV_QUEUED)
+                        and h.decode_finished()):
+                    svc._finish_request(rid)
+                    report.finished.append(rid)
 
         # 3. router-planned admission batches (KV_QUEUED -> pulls queued)
-        admitted = svc.admit_queued(only=set(svc.handles),
-                                    max_batch=self.max_admit)
-        for rids in admitted.values():
-            report.admitted.extend(rids)
+        with tracer.span("tick.admit", track="loop"):
+            admitted = svc.admit_queued(only=set(svc.handles),
+                                        max_batch=self.max_admit)
+            for rids in admitted.values():
+                report.admitted.extend(rids)
 
         # 4. engine tick budget — run it when there is no decode compute
         # to hide the transfer behind, or when some full-consumption
@@ -151,17 +186,23 @@ class ServeLoop:
             budget = self.engine_budget
             if budget is None:
                 budget = self.pump_budget  # None again -> engine.tick_budget
-            report.engine_processed = svc.engine.tick(budget)
+            with tracer.span("tick.transfer", track="loop") as s:
+                report.engine_processed = svc.engine.tick(budget)
+                s.set(processed=report.engine_processed)
 
         # 5. promote pulls that resolved
-        report.promoted = svc.pump(0)
+        with tracer.span("tick.promote", track="loop"):
+            report.promoted = svc.pump(0)
 
         # 6. one continuous-batching decode step per worker with work
         for dw in list(svc.decodes.values()):
             if not (dw.resident or (dw.consume == "layerwise" and dw.inflight)):
                 continue
-            out = dw.step(pump_budget=self.pump_budget)
-            at = time.monotonic()
+            with tracer.span("tick.step", track=("worker", dw.info.worker_id),
+                             batch=len(dw.resident)) as s:
+                out = dw.step(pump_budget=self.pump_budget)
+                s.set(tokens=len(out))
+            at = clock()
             for rid, tok in out.items():
                 h = svc.handles.get(rid)
                 if h is None:
@@ -170,7 +211,36 @@ class ServeLoop:
                 h.request.token_times_s.append(svc.clock)
                 report.tokens[rid] = tok
 
+        tick_span.end()
+        self._account(report)
         return report
+
+    def _account(self, report: TickReport) -> None:
+        """Fold one tick's movement into the cumulative phase counters
+        and the service metrics registry."""
+        self.last_report = report
+        pc = self.phase_counters
+        pc["ticks"] += 1
+        moved = {
+            "dispatched": len(report.dispatched),
+            "rejected": len(report.rejected),
+            "admitted": len(report.admitted),
+            "promoted": len(report.promoted),
+            "tokens": len(report.tokens),
+            "finished": len(report.finished),
+            "engine_processed": report.engine_processed,
+        }
+        for k, n in moved.items():
+            if n:
+                pc[k] += n
+        metrics = getattr(self.service, "metrics", None)
+        if metrics is not None:
+            metrics.inc("loop.ticks")
+            for k, n in moved.items():
+                if n:
+                    metrics.inc(f"loop.{k}", n)
+            metrics.set_gauge("loop.active_requests",
+                              len(self.service.handles))
 
     # ------------------------------------------------------------ drive
     def _signature(self, rids) -> dict[str, tuple]:
@@ -221,8 +291,10 @@ class ServeLoop:
                 continue
             if self._signature(active) != before:
                 continue  # failover moved a request mid-tick: progress
-            raise ServeLoopStalled(self._active(only))
-        raise ServeLoopStalled(self._active(only))
+            raise ServeLoopStalled(self._active(only), report=self.last_report,
+                                   phase_counters=self.phase_counters)
+        raise ServeLoopStalled(self._active(only), report=self.last_report,
+                               phase_counters=self.phase_counters)
 
     def advance(self, handle, *, until_done: bool = False,
                 max_ticks: int = 100_000) -> None:
@@ -239,5 +311,7 @@ class ServeLoop:
             report = self.tick()
             if report.progressed or self._signature(active) != before:
                 continue
-            raise ServeLoopStalled([handle.request_id])
-        raise ServeLoopStalled([handle.request_id])
+            raise ServeLoopStalled([handle.request_id], report=self.last_report,
+                                   phase_counters=self.phase_counters)
+        raise ServeLoopStalled([handle.request_id], report=self.last_report,
+                               phase_counters=self.phase_counters)

@@ -1,0 +1,445 @@
+"""Unified tracing + metrics layer (repro.obs).
+
+Covers:
+  * span nesting, the phase machine's gap-free partition, and
+    injectable-clock determinism — a sim (virtual clock) and a real
+    (perf_counter) run share ONE span schema;
+  * disabled-mode no-op behavior and its overhead bound (<5 % of a
+    short ServeLoop run);
+  * Chrome trace-event export structure, incl. per-layer transfer spans;
+  * breakdown-vs-HandleMetrics consistency on the real substrate
+    (components sum to TTLT within 1 %, and TTLT == HandleMetrics.ttlt_s);
+  * BENCH_*.json schema validation, merge-on-write, trajectory loading,
+    and ``benchmarks.run --only`` strictness;
+  * stall forensics — ServeLoopStalled carries the final TickReport and
+    the loop's per-phase counters;
+  * ``TransferEngine.pulled_bytes(pop=True)`` accounting under hedged
+    prefill (loser aborted) and torn-pull retry: bytes neither
+    double-counted into ``HandleMetrics.kv_bytes_pulled`` nor leaked in
+    the engine's per-request counter.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.obs import (
+    NULL_TRACER,
+    BenchTrajectory,
+    MetricsRegistry,
+    Tracer,
+    all_request_breakdowns,
+    bench_path,
+    load_trajectory,
+    mean_fractions,
+    request_breakdown,
+    spans_from_timeline,
+    validate_bench,
+)
+from repro.obs.trace import _NULL_SPAN
+from repro.serving.disagg import DisaggService
+from repro.serving.loop import ServeLoopStalled, TickReport
+from repro.serving.request import Request, RequestState
+
+
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _toks(cfg, seed, n=24):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+class _VirtualClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+# --------------------------------------------------------------- tracer
+class TestTracer:
+    def test_scoped_spans_nest_with_depth(self):
+        clk = _VirtualClock()
+        tr = Tracer(clock=clk)
+        with tr.span("outer", track="loop"):
+            clk.advance(1.0)
+            with tr.span("inner", track="loop") as s:
+                assert s.depth == 1
+                clk.advance(1.0)
+        outer = next(s for s in tr.spans if s.name == "outer")
+        inner = next(s for s in tr.spans if s.name == "inner")
+        assert outer.depth == 0 and inner.depth == 1
+        assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1
+        assert outer.duration_s == 2.0 and inner.duration_s == 1.0
+
+    def test_phase_machine_partitions_without_gaps(self):
+        clk = _VirtualClock()
+        tr = Tracer(clock=clk)
+        track = ("request", "r0")
+        for name, dt in (("queue", 1.0), ("prefill", 2.0),
+                         ("transfer", 0.5), ("decode", 4.0)):
+            tr.phase(track, name)
+            clk.advance(dt)
+        tr.end_phase(track)
+        spans = tr.spans_of(track)
+        assert [s.name for s in spans] == ["queue", "prefill", "transfer",
+                                           "decode"]
+        for a, b in zip(spans, spans[1:]):
+            assert a.t1 == b.t0  # shared boundary: no gap, no overlap
+        b = request_breakdown(tr, "r0")
+        assert b.total_s == b.ttlt_s == 7.5
+
+    def test_injectable_clock_determinism(self):
+        """Two runs with the same virtual clock script produce identical
+        spans — and the schema (names/tracks/shape) is the same one a
+        perf_counter-clocked tracer emits."""
+        def record(tr, clk):
+            t = ("request", "r1")
+            tr.phase(t, "queue")
+            clk.advance(1.0)
+            tr.phase(t, "decode")
+            clk.advance(2.0)
+            tr.end_phase(t)
+            tr.instant("transfer.complete", track=t, bytes=64)
+
+        runs = []
+        for _ in range(2):
+            clk = _VirtualClock(10.0)
+            tr = Tracer(clock=clk)
+            record(tr, clk)
+            runs.append([(s.name, s.track, s.t0, s.t1) for s in tr.spans]
+                        + [(s.name, s.track, s.t0) for s in tr.instants])
+        assert runs[0] == runs[1]  # deterministic under an injected clock
+
+        real = Tracer()  # perf_counter
+        record(real, _VirtualClock())  # clk arg unused for real timing
+        assert [(s.name, s.track) for s in real.spans] == \
+               [(name, track) for name, track, *_ in runs[0][:2]]
+
+    def test_sim_timeline_emits_same_schema(self):
+        """spans_from_timeline renders a sim-style Request timeline into
+        the live phase schema: same names, same track, breakdown works."""
+        req = Request("r9", prompt_len=32, max_new_tokens=8)
+        req.arrival_s = 0.0
+        req.prefill_start_s = 1.0
+        req.prefill_end_s = 3.0
+        req.transfer_start_s = 3.5
+        req.transfer_end_s = 4.0
+        req.decode_start_s = 4.0
+        req.done_s = 10.0
+        tr = Tracer(clock=_VirtualClock())
+        spans_from_timeline(tr, req)
+        b = request_breakdown(tr, "r9")
+        assert b.queue_s == 1.0 + 0.5  # queue + queue.kv
+        assert b.prefill_s == 2.0 and b.transfer_s == 0.5 and b.decode_s == 6.0
+        assert b.ttlt_s == 10.0
+        assert abs(b.total_s - b.ttlt_s) < 1e-12
+
+    def test_disabled_tracer_is_noop(self):
+        calls = []
+        tr = Tracer(clock=lambda: calls.append(1) or 0.0, enabled=False)
+        s = tr.span("x", track="loop", a=1)
+        assert s is _NULL_SPAN and s.set(b=2) is s and s.end() is s
+        with tr.span("y"):
+            pass
+        assert tr.phase("t", "queue") is _NULL_SPAN
+        assert tr.end_phase("t") is None
+        tr.complete("z", "t", 0.0, 1.0)
+        tr.instant("i")
+        assert tr.spans == [] and tr.instants == []
+        assert calls == []  # disabled path never reads the clock
+        assert NULL_TRACER.enabled is False
+
+    def test_open_spans_are_not_exported(self):
+        tr = Tracer(clock=_VirtualClock())
+        tr.span("never-ended", track="loop")
+        assert tr.spans == []
+        assert tr.to_chrome()["traceEvents"][-1]["name"] == "process_name"
+
+    def test_chrome_export_structure(self):
+        clk = _VirtualClock(100.0)
+        tr = Tracer(clock=clk)
+        with tr.span("tick", track="loop"):
+            clk.advance(0.25)
+        tr.complete("transfer.layer0", ("request", "r0"), 100.05, 100.10,
+                    layer=0)
+        tr.instant("transfer.complete", track=("request", "r0"), bytes=4096)
+        doc = tr.to_chrome(process_name="proc")
+        evs = doc["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        assert {"process_name", "thread_name"} <= {e["name"] for e in meta}
+        x = next(e for e in evs if e["ph"] == "X" and e["name"] == "tick")
+        assert x["ts"] == pytest.approx(0.0) and x["dur"] == pytest.approx(0.25e6)
+        layer = next(e for e in evs if e["name"] == "transfer.layer0")
+        assert layer["args"]["layer"] == 0
+        inst = next(e for e in evs if e["ph"] == "i")
+        assert inst["args"]["bytes"] == 4096
+        json.dumps(doc)  # must be serializable as-is
+
+    def test_chrome_export_roundtrip_file(self, tmp_path):
+        tr = Tracer(clock=_VirtualClock())
+        with tr.span("tick", track="loop"):
+            pass
+        p = tmp_path / "trace.json"
+        tr.export_chrome(str(p))
+        assert json.loads(p.read_text())["traceEvents"]
+
+
+# -------------------------------------------------------------- metrics
+class TestMetrics:
+    def test_counters_gauges_histograms(self):
+        m = MetricsRegistry()
+        m.inc("a.count")
+        m.inc("a.count", 2)
+        m.set_gauge("a.depth", 7)
+        for v in range(1, 101):
+            m.observe("a.lat", v / 100.0)
+        assert m.counter("a.count").value == 3
+        assert m.gauge("a.depth").value == 7
+        h = m.histogram("a.lat")
+        assert h.count == 100
+        assert h.percentile(50) == pytest.approx(0.50)
+        assert h.percentile(99) == pytest.approx(0.99)
+        snap = m.snapshot()
+        assert snap["counters"]["a.count"] == 3
+        assert snap["histograms"]["a.lat"]["p90"] == pytest.approx(0.90)
+        assert "a.count = 3" in m.format()
+        assert "a.count" not in m.format(prefixes=("b.",))
+
+    def test_histogram_window_bounds_memory(self):
+        m = MetricsRegistry(histogram_window=8)
+        for v in range(100):
+            m.observe("x", float(v))
+        h = m.histogram("x")
+        assert len(h.window) == 8 and h.count == 100
+        assert h.percentile(50) == 95.0  # window holds the last 8 only
+
+
+# ---------------------------------------------------------------- bench
+class TestBenchTrajectory:
+    def test_write_validate_load(self, tmp_path):
+        traj = BenchTrajectory(6, source="benchmarks.run")
+        traj.add("fig14/x", 123.0, unit="us", derived="d=1")
+        p = traj.write(tmp_path / "BENCH_6.json")
+        doc = validate_bench(json.loads(p.read_text()))
+        assert doc["pr"] == 6 and doc["entries"][0]["name"] == "fig14/x"
+        traj2 = BenchTrajectory(7, source="benchmarks.run")
+        traj2.add("fig14/x", 140.0)
+        traj2.write(tmp_path / "BENCH_7.json")
+        series = load_trajectory(tmp_path)
+        assert [d["pr"] for d in series] == [6, 7]  # ordered by PR number
+
+    def test_merge_preserves_other_writers_entries(self, tmp_path):
+        p = tmp_path / "BENCH_6.json"
+        a = BenchTrajectory(6, source="benchmarks.run")
+        a.add("fig14/x", 1.0)
+        a.write(p)
+        b = BenchTrajectory(6, source="benchmarks.roofline")
+        b.add("roofline/y", 2.0)
+        b.write(p)
+        doc = validate_bench(json.loads(p.read_text()))
+        assert {e["name"] for e in doc["entries"]} == {"fig14/x", "roofline/y"}
+        assert "benchmarks.run" in doc["source"]
+        assert "benchmarks.roofline" in doc["source"]
+
+    @pytest.mark.parametrize("mutate, err", [
+        (lambda d: d.update(schema_version=2), "schema_version"),
+        (lambda d: d.update(pr="6"), "pr"),
+        (lambda d: d.update(source=""), "source"),
+        (lambda d: d.update(entries=[]), "entries"),
+        (lambda d: d["entries"][0].update(value="fast"), "value"),
+        (lambda d: d["entries"][0].pop("unit"), "unit"),
+    ])
+    def test_validate_rejects_bad_schema(self, mutate, err):
+        traj = BenchTrajectory(6)
+        traj.add("x", 1.0)
+        doc = traj.to_json()
+        mutate(doc)
+        with pytest.raises(ValueError, match=err):
+            validate_bench(doc)
+
+    def test_bench_path_shape(self):
+        assert bench_path(6).name == "BENCH_6.json"
+
+    def test_run_only_rejects_unknown_prefix(self):
+        from benchmarks.run import select_modules
+        assert select_modules(["fig14"]) == ["fig14_breakdown"]
+        assert select_modules([]) != []
+        with pytest.raises(SystemExit, match="no benchmark module"):
+            select_modules(["fig99_nonexistent"])
+
+
+# ------------------------------------------------------ stall forensics
+class TestStallForensics:
+    def test_message_carries_tick_report_and_phase_totals(self):
+        rep = TickReport(now=1.5, dispatched=["r1"], tokens={"r2": 7},
+                         engine_processed=3)
+        exc = ServeLoopStalled(["r2", "r1"], report=rep,
+                               phase_counters={"ticks": 9, "tokens": 4})
+        msg = str(exc)
+        assert "r1, r2" in msg
+        assert "last tick:" in msg and "dispatched=['r1']" in msg
+        assert "engine_processed=3" in msg
+        assert "phase totals:" in msg and "ticks=9" in msg and "tokens=4" in msg
+        assert exc.report is rep and exc.phase_counters["ticks"] == 9
+
+    def test_loop_stall_raises_with_forensics(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64)
+        # a prompt the pools can never hold: dispatch fails every tick,
+        # nothing progresses, the loop must stall with forensics attached
+        h = svc.submit(_toks(cfg, 0, n=64 * model.BLOCK_SIZE + 1),
+                       max_new=2, dispatch="queued")
+        with pytest.raises(ServeLoopStalled) as ei:
+            svc.loop.run_until_idle()
+        exc = ei.value
+        assert h.request_id in exc.request_ids
+        assert exc.report is not None and "last tick:" in str(exc)
+        assert exc.phase_counters.get("ticks", 0) >= 1
+
+
+# ------------------------------------------------- live substrate traces
+class TestLiveTracing:
+    @pytest.fixture(scope="class")
+    def traced_run(self, service_setup):
+        cfg, model, params = service_setup
+        tracer = Tracer()
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, tracer=tracer)
+        handles = [svc.submit(_toks(cfg, 10 + i), max_new=3)
+                   for i in range(3)]
+        svc.loop.run_until_idle()
+        assert all(h.done for h in handles)
+        return svc, tracer, handles
+
+    def test_breakdown_matches_handle_metrics(self, traced_run):
+        """Acceptance criterion: components sum to measured TTLT within
+        1 %, and the span-derived TTLT is the handle's TTLT (one clock)."""
+        _, tracer, handles = traced_run
+        breakdowns = all_request_breakdowns(tracer)
+        assert len(breakdowns) == len(handles)
+        for h in handles:
+            b = breakdowns[h.request_id]
+            assert b.ttlt_s > 0
+            assert abs(b.total_s - b.ttlt_s) <= 0.01 * b.ttlt_s
+            assert b.ttlt_s == pytest.approx(h.metrics.ttlt_s, abs=1e-9)
+            comp = b.components()
+            assert all(v >= 0 for v in comp.values())
+            assert comp["decode_s"] > 0 and comp["prefill_s"] > 0
+
+    def test_chrome_export_has_per_request_lifecycle(self, traced_run, tmp_path):
+        _, tracer, handles = traced_run
+        doc = tracer.export_chrome(str(tmp_path / "serve_trace.json"))
+        evs = doc["traceEvents"]
+        for h in handles:
+            cat = f"request/{h.request_id}"
+            names = {e["name"] for e in evs if e.get("cat") == cat}
+            assert {"queue", "prefill", "transfer", "decode"} <= names
+            assert any(n.startswith("transfer.layer") for n in names)
+        assert any(e.get("cat") == "loop" and e["name"] == "tick" for e in evs)
+
+    def test_engine_and_loop_metrics_populated(self, traced_run):
+        svc, _, handles = traced_run
+        c = svc.metrics.counters()
+        assert c["requests.submitted"] == len(handles)
+        assert c["requests.finished"] == len(handles)
+        assert c["engine.pulls_submitted"] == len(handles)
+        assert c["engine.bytes_moved"] > 0
+        assert c["loop.tokens"] >= sum(h.decoded for h in handles)
+        assert svc.metrics.histogram("request.ttlt_s").count == len(handles)
+
+    def test_mean_fractions_sum_to_one(self, traced_run):
+        _, tracer, _ = traced_run
+        fr = mean_fractions(all_request_breakdowns(tracer))
+        assert sum(fr.values()) == pytest.approx(1.0, abs=1e-9)
+
+    def test_disabled_tracer_overhead_under_5pct(self, service_setup):
+        """The no-op path must cost <5 % of a short ServeLoop run even if
+        every event the enabled run records were a disabled-path call.
+        Measured as per-call cost x recorded-event count vs loop wall
+        time — immune to run-to-run loop variance."""
+        import time as _t
+
+        cfg, model, params = service_setup
+        tracer = Tracer()
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=64, tracer=tracer)
+        h = svc.submit(_toks(cfg, 99), max_new=3)
+        t0 = _t.perf_counter()
+        svc.loop.run_until_idle()
+        loop_s = _t.perf_counter() - t0
+        assert h.done
+        n_events = len(tracer.spans) + len(tracer.instants)
+
+        n_calls = 100_000
+        t0 = _t.perf_counter()
+        for _ in range(n_calls):
+            with NULL_TRACER.span("tick", track="loop", tick=1):
+                pass
+        per_call = (_t.perf_counter() - t0) / n_calls
+        assert n_events * per_call < 0.05 * loop_s, (
+            f"{n_events} events x {per_call:.2e}s/call vs {loop_s:.3f}s loop")
+
+
+# --------------------------------------------- pulled-bytes accounting
+class TestPulledBytesAccounting:
+    def test_hedged_abort_no_double_count_no_leak(self, service_setup):
+        """First COMPLETE wins: the loser twin's slab is freed without a
+        second pull, so kv_bytes_pulled equals the un-hedged cost and the
+        engine's per-request counter is retired at finish."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64)
+        base = svc.submit(_toks(cfg, 60), max_new=2)
+        svc.generate(base, max_new=2)
+        unhedged_bytes = base.metrics.kv_bytes_pulled
+        assert unhedged_bytes > 0
+
+        h = svc.submit(_toks(cfg, 60), max_new=2, hedge=2)
+        assert h.metrics.hedged
+        svc.generate(h, max_new=2)
+        assert h.metrics.hedge_adopted is False
+        assert h.metrics.kv_bytes_pulled == unhedged_bytes  # not doubled
+        assert h.request_id not in svc.engine._pulled_bytes  # retired
+        assert base.request_id not in svc.engine._pulled_bytes
+        # loser's slab freed, nothing resident anywhere prefill-side
+        assert all(w.pool.stats.in_use == 0 for w in svc.prefills.values())
+
+    def test_torn_pull_retry_counts_retries_without_leak(self, service_setup):
+        """A pull torn mid-flight retries from a fresh prefill; the bytes
+        metric counts BOTH attempts (retries included, per HandleMetrics
+        contract) and the per-request counter still pops exactly once."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=64)
+        ref = svc.submit(_toks(cfg, 61), max_new=2)
+        svc.generate(ref, max_new=2)
+        full_bytes = ref.metrics.kv_bytes_pulled
+
+        h = svc.submit(_toks(cfg, 61), max_new=2)
+        victim = h.prefill_worker
+        svc.admit_queued(only={h.request_id})
+        svc.engine.tick(2)  # execute a couple of reads -> partial bytes land
+        partial = svc.engine.pulled_bytes(h.request_id)
+        assert 0 < partial < full_bytes
+        svc.fail_prefill_worker(victim)  # tear mid-pull -> restart path
+        svc.loop.run_until_idle(only={h.request_id})
+        assert h.done and h.retries == 1
+        assert h.metrics.kv_bytes_pulled == partial + full_bytes
+        assert h.request_id not in svc.engine._pulled_bytes  # no leak
+        assert svc.decode.pool.stats.in_use == 0
