@@ -1,0 +1,274 @@
+"""Delta KV transfer sweep: prefix reuse rate × QPS, sim + real.
+
+Workload: fixed-shape requests where every arrival shares the first
+``PREFIX_FRAC`` of its prompt with the other requests carrying the same
+prefix id (a handful of shared system prompts — the RAG / multi-turn
+shape that motivates delta transfer).  Three transfer variants on the
+discrete-event simulator (2 prefill × 2 decode, pull mode):
+
+  * ``full``        — every admission pulls the whole prompt's KV
+    (the PR 5/6 baseline);
+  * ``delta``       — decode workers retain finished prefixes and graft
+    them into later admissions, pulling only the suffix
+    (``SimConfig(delta_transfer=True)``);
+  * ``delta_quant`` — delta plus int8 wire quantization: the suffix
+    that still moves costs half the bytes
+    (``quantize_transfer=True``).
+
+The reported metric is the KV-INCLUSIVE TTFT (arrival → decodable on
+the decode worker), the quantity the skipped prefix bytes shorten.
+Acceptance shape (asserted): at EVERY swept QPS the delta variant's p90
+KV-inclusive TTFT is strictly below full-pull, and the steady-state
+reuse fraction is within block granularity of the workload's prefix
+fraction.
+
+``real_cells()`` measures the same contrast END-TO-END on the real
+substrate (JAX compute + real bytes through the transfer engine): one
+cold request per prefix, then warm requests whose admissions graft the
+retained prefix.  Asserts (a) token streams identical between delta and
+full-pull, (b) warm-request pulled bytes reduced by at least the
+resident-prefix fraction (exact accounting: pulled + reused always sums
+to the full KV footprint), and records the wire-byte halving of the
+quantized cell.
+
+As a benchmark module it emits CSV rows through run.py (and lands in
+``BENCH_<pr>.json`` via ``--json``); run directly it writes the full
+sweep as JSON:
+
+    PYTHONPATH=src python -m benchmarks.fig_prefix_reuse [--fast] \
+        [--out fig_prefix_reuse.json] [--bench-out [PATH]]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import shared_prefix_requests
+
+DURATION = 120.0
+QPS_GRID = (0.25, 0.5, 1.0, 2.0)
+FAST_QPS_GRID = (0.5, 2.0)
+PROMPT_LEN = 8192
+RESPONSE_LEN = 256
+PREFIX_FRAC = 0.6   # acceptance floor: ≥ 50 % of the prompt is shared
+N_PREFIXES = 2
+SEED = 13
+
+VARIANTS = ("full", "delta", "delta_quant")
+_VARIANT_CFG = {
+    "full": dict(delta_transfer=False),
+    "delta": dict(delta_transfer=True),
+    "delta_quant": dict(delta_transfer=True, quantize_transfer=True),
+}
+
+
+def _run(cfg: SimConfig, reqs) -> dict[str, float]:
+    return ClusterSim(
+        CostModel(get_config("mistral-large-123b"), H100_NODE), cfg
+    ).run(list(reqs)).summary()
+
+
+def sweep(fast: bool = False) -> list[dict]:
+    cells = []
+    duration = 30.0 if fast else DURATION
+    for qps in (FAST_QPS_GRID if fast else QPS_GRID):
+        reqs = shared_prefix_requests(
+            PROMPT_LEN, RESPONSE_LEN, qps=qps, duration_s=duration,
+            prefix_frac=PREFIX_FRAC, n_prefixes=N_PREFIXES, seed=SEED)
+        for variant in VARIANTS:
+            s = _run(SimConfig(n_prefill=2, n_decode=2, mode="pull",
+                               **_VARIANT_CFG[variant]), reqs)
+            cells.append({
+                "variant": variant, "qps": qps, "n": int(s["n"]),
+                "p50_ttft_kv_s": s["p50_ttft_kv_s"],
+                "p90_ttft_kv_s": s["p90_ttft_kv_s"],
+                "p90_total_s": s["p90_total_s"],
+                "kv_reuse_frac": s["kv_reuse_frac"],
+                "mean_pulled_tokens": s["mean_pulled_tokens"],
+                "mean_reused_tokens": s["mean_reused_tokens"],
+            })
+    # acceptance: the delta variants beat full-pull at EVERY swept QPS,
+    # and the skipped bytes track the workload's shared fraction
+    for qps in {c["qps"] for c in cells}:
+        base = next(c for c in cells
+                    if c["qps"] == qps and c["variant"] == "full")
+        for variant in ("delta", "delta_quant"):
+            c = next(x for x in cells
+                     if x["qps"] == qps and x["variant"] == variant)
+            assert c["p90_ttft_kv_s"] < base["p90_ttft_kv_s"], (
+                f"{variant} p90 ttft_kv {c['p90_ttft_kv_s']:.4f}s not below "
+                f"full-pull {base['p90_ttft_kv_s']:.4f}s at qps={qps}")
+            assert c["kv_reuse_frac"] > 0.5 * PREFIX_FRAC, (
+                f"{variant} reuse_frac {c['kv_reuse_frac']:.3f} too far "
+                f"below the workload's shared fraction {PREFIX_FRAC}")
+    return cells
+
+
+# ------------------------------------------------------------- real path
+def real_cells(n_requests: int = 6, prompt_len: int = 64,
+               prefix_frac: float = 0.5, max_new: int = 4) -> list[dict]:
+    """End-to-end delta-vs-full comparison on the real serving substrate
+    (CPU-scale: smoke model, memcpy engine, real KV bytes).
+
+    One shared prefix; requests submitted SEQUENTIALLY so request 0's
+    retained prefix is resident when requests 1.. admit.  Per variant we
+    record the exact pulled/reused byte split the engine accounted and
+    the engine-level wire bytes (quantized pulls move half)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import DecoderLM
+    from repro.serving.disagg import DisaggService
+
+    cfg = get_smoke_config("deepseek-67b")
+    model = DecoderLM(cfg, unroll=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    prefix_len = (int(prompt_len * prefix_frac)
+                  // model.BLOCK_SIZE) * model.BLOCK_SIZE
+    shared = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    toks = [np.concatenate([
+        shared,
+        rng.integers(0, cfg.vocab_size, prompt_len - prefix_len)
+        .astype(np.int32),
+    ]) for _ in range(n_requests)]
+
+    cells = []
+    token_streams: dict[str, list[list[int]]] = {}
+    metrics: dict[str, list[dict]] = {}
+    for variant in VARIANTS:
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=256, **_VARIANT_CFG[variant])
+        outs, per_req = [], []
+        for t in toks:  # sequential: request i's prefix is warm for i+1
+            h = svc.submit(t, prefix_id="sys", prefix_len=prefix_len)
+            outs.append(svc.generate(h, max_new=max_new))
+            per_req.append({
+                "pulled_bytes": h.metrics.kv_bytes_pulled,
+                "reused_bytes": h.metrics.kv_bytes_reused,
+                "reuse_frac": h.metrics.kv_reuse_frac,
+            })
+        token_streams[variant] = outs
+        metrics[variant] = per_req
+        warm = per_req[1:]
+        cells.append({
+            "variant": variant, "n": n_requests, "prompt_len": prompt_len,
+            "prefix_len": prefix_len, "max_new": max_new,
+            "cold_pulled_bytes": per_req[0]["pulled_bytes"],
+            "warm_mean_pulled_bytes":
+                sum(r["pulled_bytes"] for r in warm) / len(warm),
+            "warm_mean_reuse_frac":
+                sum(r["reuse_frac"] for r in warm) / len(warm),
+            "wire_bytes_moved": svc.engine.stats.bytes_moved,
+        })
+
+    # (a) the delta plan changes which bytes MOVE, never which bytes the
+    # model sees: token streams are bit-identical to full pull
+    assert token_streams["full"] == token_streams["delta"], \
+        "delta transfer diverged from full pull on the real path"
+    # (b) warm pulls shrink by at least the resident-prefix fraction —
+    # exact accounting: pulled + reused covers the full KV footprint
+    resident_frac = prefix_len / prompt_len
+    full = metrics["full"]
+    for i, r in enumerate(metrics["delta"][1:], start=1):
+        assert r["pulled_bytes"] + r["reused_bytes"] \
+            == full[i]["pulled_bytes"], "pulled+reused != full KV footprint"
+        assert r["reuse_frac"] >= resident_frac - 1e-9, (
+            f"warm request {i}: reuse_frac {r['reuse_frac']:.3f} below "
+            f"resident prefix fraction {resident_frac:.3f}")
+    # (c) quantized suffix pulls halve the wire bytes the suffix costs
+    dq = next(c for c in cells if c["variant"] == "delta_quant")
+    d = next(c for c in cells if c["variant"] == "delta")
+    assert dq["wire_bytes_moved"] < d["wire_bytes_moved"], \
+        "int8 wire pages did not reduce bytes moved"
+    return cells
+
+
+def _rows(cells: list[dict], real: list[dict] | None = None) -> list[Row]:
+    rows = []
+    for c in cells:
+        rows.append(Row(
+            f"prefix_reuse/qps{c['qps']}/{c['variant']}",
+            c["p90_ttft_kv_s"] * 1e6,
+            f"p50_ttft_kv={c['p50_ttft_kv_s']:.3f}s;"
+            f"reuse_frac={c['kv_reuse_frac']:.3f};"
+            f"pulled_tok={c['mean_pulled_tokens']:.0f};"
+            f"reused_tok={c['mean_reused_tokens']:.0f}",
+        ))
+    for qps in sorted({c["qps"] for c in cells}):
+        base = next(c for c in cells
+                    if c["qps"] == qps and c["variant"] == "full")
+        delta = next(c for c in cells
+                     if c["qps"] == qps and c["variant"] == "delta")
+        quant = next(c for c in cells
+                     if c["qps"] == qps and c["variant"] == "delta_quant")
+        rows.append(Row(
+            f"prefix_reuse/qps{qps}/summary", 0.0,
+            f"full_vs_delta_p90_ttft_kv="
+            f"{base['p90_ttft_kv_s'] / max(delta['p90_ttft_kv_s'], 1e-9):.2f}x;"
+            f"full_vs_delta_quant="
+            f"{base['p90_ttft_kv_s'] / max(quant['p90_ttft_kv_s'], 1e-9):.2f}x"))
+    for c in real or []:
+        rows.append(Row(
+            f"prefix_reuse/real/{c['variant']}",
+            c["warm_mean_pulled_bytes"],
+            f"cold_pulled={c['cold_pulled_bytes']};"
+            f"warm_reuse_frac={c['warm_mean_reuse_frac']:.3f};"
+            f"wire_bytes={c['wire_bytes_moved']}"))
+    return rows
+
+
+def run() -> list[Row]:
+    return _rows(sweep(), real_cells())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="fig_prefix_reuse.json")
+    ap.add_argument("--fast", action="store_true",
+                    help="short sim sweep (30 s, 2 QPS points)")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="sim sweep only (no JAX model build)")
+    ap.add_argument("--bench-out", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also merge rows into a BENCH_<pr>.json "
+                         "trajectory point (default path from run.py)")
+    args = ap.parse_args()
+    cells = sweep(fast=args.fast)
+    real = [] if args.skip_real else real_cells()
+    rows = _rows(cells, real)
+    with open(args.out, "w") as f:
+        json.dump({"config": {"duration_s": 30.0 if args.fast else DURATION,
+                              "workload": "shared_prefix",
+                              "prompt_len": PROMPT_LEN,
+                              "response_len": RESPONSE_LEN,
+                              "prefix_frac": PREFIX_FRAC,
+                              "n_prefixes": N_PREFIXES,
+                              "topology": "2P x 2D",
+                              "qps_grid": FAST_QPS_GRID if args.fast
+                              else QPS_GRID,
+                              "variants": VARIANTS},
+                   "cells": cells, "real": real}, f, indent=2)
+    print(f"wrote {len(cells)} sim cells + {len(real)} real cells to {args.out}")
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv())
+    if args.bench_out is not None and rows:
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+        from benchmarks.run import BENCH_PR
+        from repro.obs.bench import BenchTrajectory, bench_path
+        traj = BenchTrajectory(BENCH_PR, source="benchmarks.fig_prefix_reuse")
+        traj.extend_rows(rows)
+        out = traj.write(args.bench_out or bench_path(BENCH_PR))
+        print(f"# merged {len(rows)} prefix-reuse entries into {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,13 +29,14 @@ MODULES = [
     "fig17_coalescing",
     "fig_continuous",
     "fig_overlap",
+    "fig_prefix_reuse",
     "fig_sched_policies",
     "kernel_bench",
 ]
 
 # The PR number stamped into BENCH_<pr>.json artifacts.  Bump when a new
 # PR wants its own trajectory point (see repro.obs.bench.load_trajectory).
-BENCH_PR = 6
+BENCH_PR = 7
 
 
 def select_modules(prefixes: list[str]) -> list[str]:

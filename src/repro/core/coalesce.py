@@ -31,13 +31,19 @@ __all__ = ["CoalescedRead", "coalesce_fifo", "coalesce_sorted", "coalesce"]
 
 @dataclasses.dataclass(frozen=True)
 class CoalescedRead:
-    """One RDMA-level read covering >=1 original transactions."""
+    """One RDMA-level read covering >=1 original transactions.
+
+    ``qscale`` is the int8 dequantization scale carried over from a
+    quantized ``ReadTxn``.  A scale is per-span, so quantized reads never
+    merge with neighbours (each keeps its own scale) — see ``_mergeable``.
+    """
 
     src_worker: str
     dst_worker: str
     remote: ByteRange
     local: ByteRange
     request_ids: tuple[str, ...]
+    qscale: float | None = None
 
     @property
     def nbytes(self) -> int:
@@ -49,8 +55,12 @@ class CoalescedRead:
 
 
 def _mergeable(acc: CoalescedRead, txn: ReadTxn) -> bool:
+    # quantized spans carry one scale each: merging two would lose a
+    # scale, so a qscale on either side blocks the merge
     return (
-        acc.src_worker == txn.src_worker
+        acc.qscale is None
+        and txn.qscale is None
+        and acc.src_worker == txn.src_worker
         and acc.dst_worker == txn.dst_worker
         and acc.remote.abuts(txn.remote)
         and acc.local.abuts(txn.local)
@@ -77,6 +87,7 @@ def _fold(txns: Iterable[ReadTxn]) -> list[CoalescedRead]:
                     remote=t.remote,
                     local=t.local,
                     request_ids=(t.request_id,),
+                    qscale=t.qscale,
                 )
             )
     return out
@@ -100,8 +111,9 @@ def coalesce(window: Sequence[ReadTxn], *, strategy: str = "fifo") -> list[Coale
     if strategy == "sorted":
         return coalesce_sorted(window)
     if strategy == "none":
-        return _fold([])[:0] + [
-            CoalescedRead(t.src_worker, t.dst_worker, t.remote, t.local, (t.request_id,))
+        return [
+            CoalescedRead(t.src_worker, t.dst_worker, t.remote, t.local,
+                          (t.request_id,), qscale=t.qscale)
             for t in window
         ]
     raise ValueError(f"unknown coalescing strategy {strategy!r}")

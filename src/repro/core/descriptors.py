@@ -196,7 +196,14 @@ class ReadTxn:
 
     ``layer`` optionally tags which model layer this read belongs to:
     layer-streamed pulls submit layer 0 first and the engine reports
-    per-layer completion on the request's ``TransferFuture``."""
+    per-layer completion on the request's ``TransferFuture``.
+
+    ``qscale`` optionally carries a symmetric-int8 dequantization scale
+    for this read's span: the source side computed ``scale =
+    max(|span|)/127`` at park time, the wire moves int8 payload
+    (``nbytes // 2`` plus the 4-byte scale the descriptor already
+    carries), and the engine dequantizes into the destination slab.
+    ``None`` = uncompressed (plain byte copy)."""
 
     request_id: str
     src_worker: str
@@ -204,10 +211,13 @@ class ReadTxn:
     remote: ByteRange
     local: ByteRange
     layer: int | None = None
+    qscale: float | None = None
 
     def __post_init__(self) -> None:
         if self.remote.nbytes != self.local.nbytes:
             raise ValueError("read size mismatch between remote and local ranges")
+        if self.qscale is not None and self.qscale <= 0:
+            raise ValueError(f"qscale must be positive, got {self.qscale}")
 
     @property
     def nbytes(self) -> int:
@@ -236,13 +246,22 @@ def build_block_reads(
     *,
     block_dim: str = "B",
     layer: int | None = None,
+    scales: Sequence[Sequence[float]] | None = None,
 ) -> Iterator[ReadTxn]:
     """TRANSFER(): translate (remote block id → local block id) pairs into
     read transactions using only descriptor arithmetic — the decode worker
     never asks the prefill worker where anything lives.
+
+    ``scales`` (optional) requests quantized transfer: ``scales[i][pos]``
+    is the int8 dequantization scale for block position ``i``'s plane
+    ``pos`` (K = 0, V = 1 in the canonical layout), attached to the
+    emitted ``ReadTxn.qscale`` so the scale rides the descriptor — no
+    side channel on the wire.
     """
     if len(remote_blocks) != len(local_blocks):
         raise ValueError("remote/local block list length mismatch")
+    if scales is not None and len(scales) != len(remote_blocks):
+        raise ValueError("scales/block list length mismatch")
     per_block: list[tuple[list[ByteRange], list[ByteRange]]] = []
     for rb, lb in zip(remote_blocks, local_blocks):
         remote_ranges = remote_desc.block_ranges(rb, block_dim=block_dim)
@@ -259,7 +278,7 @@ def build_block_reads(
     # "blocks 0 and 1 merge into one 16384 B transaction" opportunity.
     n_ranges = len(per_block[0][0]) if per_block else 0
     for pos in range(n_ranges):
-        for remote_ranges, local_ranges in per_block:
+        for i, (remote_ranges, local_ranges) in enumerate(per_block):
             yield ReadTxn(
                 request_id=request_id,
                 src_worker=remote_desc.worker_id,
@@ -267,4 +286,5 @@ def build_block_reads(
                 remote=remote_ranges[pos],
                 local=local_ranges[pos],
                 layer=layer,
+                qscale=None if scales is None else float(scales[i][pos]),
             )

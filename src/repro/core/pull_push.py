@@ -46,18 +46,45 @@ def _allocate_decode_blocks(
         req.decode_blocks = decode_pool.allocate(n)  # may raise OutOfBlocks
 
 
-def _pull_txns(req: Request, conn: Connection, decode_cache: PagedKVCache) -> list[Txn]:
+def _pull_txns(
+    req: Request,
+    conn: Connection,
+    decode_cache: PagedKVCache,
+    *,
+    skip: frozenset[int] | set[int] | None = None,
+) -> list[Txn]:
     """Layer-streamed transaction list: layer 0's reads first, every read
     tagged with its layer (per-layer completion lands on the future), a
-    single COMPLETE at the tail."""
+    single COMPLETE at the tail.
+
+    ``skip`` holds block POSITIONS (indices into ``prefill_blocks`` /
+    ``decode_blocks``) a delta transfer plan grafts from blocks already
+    resident decode-side — no read is emitted for them, in any layer.
+    The COMPLETE still tails the plan: the prefill copy frees once the
+    suffix lands (the skipped prefix never needed the prefill copy).
+
+    When the request carries per-block quantization scales
+    (``req.kv_scales[layer][position][plane]``, computed at prefill park
+    time), each emitted read gets its ``qscale`` so the engine moves int8
+    wire bytes and dequantizes with the carried scale."""
+    skip = skip or frozenset()
+    positions = [i for i in range(len(req.prefill_blocks)) if i not in skip]
+    remote_blocks = [req.prefill_blocks[i] for i in positions]
+    local_blocks = [req.decode_blocks[i] for i in positions]
+    kv_scales = getattr(req, "kv_scales", None)
     txns: list[Txn] = []
     for layer in range(decode_cache.num_layers):
+        if not remote_blocks:
+            break  # fully resident: nothing to read, COMPLETE only
         remote = conn.desc(f"layer{layer}/kv")
         local = decode_cache.desc(layer)
+        scales = None
+        if kv_scales is not None:
+            scales = [kv_scales[layer][i] for i in positions]
         txns.extend(
             build_block_reads(
-                req.request_id, remote, local, req.prefill_blocks,
-                req.decode_blocks, layer=layer,
+                req.request_id, remote, local, remote_blocks,
+                local_blocks, layer=layer, scales=scales,
             )
         )
     txns.append(
@@ -103,17 +130,27 @@ def pull_kv_async(
     decode_pool: BlockPool,
     decode_cache: PagedKVCache,
     preallocated: list[int] | None = None,
+    skip: frozenset[int] | set[int] | None = None,
 ) -> TransferFuture:
     """Non-blocking pull: same allocation contract and byte movement as
     ``pull_kv`` but nothing executes yet — the caller advances the
     transfer with ``engine.progress()`` (interleaved with decode compute)
     and observes completion through the returned future, per layer via
-    ``future.layers_done`` and per request via ``future.done()``."""
+    ``future.layers_done`` and per request via ``future.done()``.
+
+    ``skip`` (delta transfer): block positions already resident on the
+    decode worker — grafted into ``decode_blocks`` by the caller, never
+    read over the wire.  A fully-resident plan emits ONLY the COMPLETE;
+    its future pre-marks every layer done so ``wait_layer`` consumers
+    (layer-streamed decode) see the same contract as a real pull."""
     _allocate_decode_blocks(req, decode_pool, preallocated)
     req.connection_epoch = conn.epoch
-    engine.submit(_pull_txns(req, conn, decode_cache))
+    engine.submit(_pull_txns(req, conn, decode_cache, skip=skip))
     fut = engine.future(req.request_id)
     assert fut is not None  # just submitted, cannot have resolved
+    if skip and len(skip) >= len(req.prefill_blocks):
+        # zero reads queued: every layer's bytes are already resident
+        fut._layers_done.extend(range(decode_cache.num_layers))
     return fut
 
 

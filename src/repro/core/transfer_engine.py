@@ -346,6 +346,11 @@ class TransferEngine:
         # accumulate).  Entries live until pulled_bytes(pop=True) — the
         # serving layer pops them into the request handle at completion.
         self._pulled_bytes: collections.Counter[str] = collections.Counter()
+        # Per-request bytes NOT moved because the destination already held
+        # them (delta transfer plans grafting resident prefix / dedup'd
+        # blocks).  Same lifecycle as _pulled_bytes: retries accumulate,
+        # popped at request completion.
+        self._reused_bytes: collections.Counter[str] = collections.Counter()
         self.tick_budget = tick_budget
         self.stats = TransferStats()
         # Observability (optional; see docs/observability.md): the tracer
@@ -525,6 +530,29 @@ class TransferEngine:
             return self._pulled_bytes.pop(request_id, 0)
         return self._pulled_bytes.get(request_id, 0)
 
+    def note_reused(self, request_id: str, nbytes: int) -> None:
+        """Record ``nbytes`` a delta transfer plan for ``request_id``
+        skipped on the wire (resident prefix graft / content-hash dedup).
+        Accumulates across retries, mirroring ``_pulled_bytes`` — a torn
+        suffix that re-admits re-grafts and re-notes, just as its re-pull
+        re-counts."""
+        if nbytes <= 0:
+            return
+        self._reused_bytes[request_id] += nbytes
+        if self.metrics is not None:
+            self.metrics.inc("engine.bytes_reused", nbytes)
+        if self.tracer.enabled:
+            self.tracer.instant("transfer.reuse", track=("request", request_id),
+                                bytes=nbytes)
+
+    def reused_bytes(self, request_id: str, *, pop: bool = False) -> int:
+        """Bytes skipped for ``request_id`` by delta plans so far (retries
+        accumulate); ``pop=True`` retires the entry at request completion,
+        like ``pulled_bytes``."""
+        if pop:
+            return self._reused_bytes.pop(request_id, 0)
+        return self._reused_bytes.get(request_id, 0)
+
     # ------------------------------------------------------------- drain
     def drain(self) -> TransferStats:
         """Process the whole queue (progress-until-empty).  Returns
@@ -562,7 +590,8 @@ class TransferEngine:
         for op in merged:
             self._copy(op)
             self.stats.reads_posted += 1
-            wire = op.nbytes if self.codec == "none" else op.nbytes // 2 + 4
+            quantized = self.codec != "none" or op.qscale is not None
+            wire = op.nbytes // 2 + 4 if quantized else op.nbytes
             self.stats.bytes_moved += wire
             self.stats.modeled_time_s += self.link.read_time(wire)
         self.stats.wall_time_s += time.perf_counter() - t0
@@ -570,6 +599,9 @@ class TransferEngine:
             self.metrics.inc("engine.reads_posted", len(merged))
             self.metrics.inc("engine.bytes_moved",
                              sum(op.nbytes for op in merged))
+        if self.metrics is not None and healthy:
+            self.metrics.inc("engine.bytes_pulled",
+                             sum(t.nbytes for t in healthy))
         # torn reads are accounted too — consumed (future already failed),
         # not executed — so a queued COMPLETE for them stays inert instead
         # of raising "reads still queued"
@@ -685,14 +717,20 @@ class TransferEngine:
         dst = self._regions.get(op.dst_worker)
         if src is None or dst is None:
             raise self._torn(op.src_worker if src is None else op.dst_worker, op)
-        if self.codec == "none":
+        if self.codec == "none" and op.qscale is None:
             dst.view(op.local)[...] = src.view(op.remote)
             return
-        # int8_transport: quantize the bf16 span, move int8, dequantize
+        # int8 transport: quantize the bf16 span, move int8, dequantize.
+        # A carried op.qscale (delta-plan quantized pull) is used as-is —
+        # the PREFILL side computed it per block plane at park time and
+        # it rode the Txn descriptor; otherwise (engine-wide
+        # codec="int8_transport") the scale is computed inline per
+        # coalesced read.
         import ml_dtypes
 
         s = src.view(op.remote).view(ml_dtypes.bfloat16).astype(np.float32)
-        scale = float(np.max(np.abs(s))) / 127.0 or 1.0
+        scale = op.qscale if op.qscale is not None else (
+            float(np.max(np.abs(s))) / 127.0 or 1.0)
         q = np.clip(np.round(s / scale), -127, 127).astype(np.int8)
         deq = (q.astype(np.float32) * scale).astype(ml_dtypes.bfloat16)
         dst.view(op.local)[...] = deq.view(np.uint8)

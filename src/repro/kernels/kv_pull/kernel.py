@@ -77,6 +77,53 @@ def kv_pull(
     return _pull(src_pages, dst_pages, src_ids, dst_ids, 1, interpret)
 
 
+def _dequant_copy_kernel(src_ids, dst_ids, scales, src_ref, dst_in_ref, dst_ref):
+    """One grid step = one QUANTIZED transaction: the landed int8 page is
+    dequantized with its per-transaction scale as it is written into the
+    destination pool (the delta-transfer wire format, docs/transfer.md)."""
+    del src_ids, dst_ids  # consumed by the BlockSpec index maps
+    del dst_in_ref        # aliased with dst_ref; only written
+    i = pl.program_id(0)
+    scale = scales[i]
+    dst_ref[...] = (src_ref[...].astype(jnp.float32) * scale).astype(dst_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(1,))
+def kv_pull_dequant(
+    src_pages: jax.Array,   # [n_src, bs, g, d] int8 (quantized wire pages)
+    dst_pages: jax.Array,   # [n_dst, bs, g, d] bf16/f32 (decode pool; donated)
+    src_ids: jax.Array,     # [n_txn] int32
+    dst_ids: jax.Array,     # [n_txn] int32
+    scales: jax.Array,      # [n_txn] f32 — per-transaction dequant scale
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """dst_pages[dst_ids[i]] = src_pages[src_ids[i]] * scales[i], per
+    transaction — the on-device half of quantized delta transfer.  The
+    scales ride the scalar-prefetch channel next to the page ids, exactly
+    where ``ReadTxn.qscale`` puts them in the CPU engine."""
+    n_txn = src_ids.shape[0]
+    _, bs, g, d = src_pages.shape
+    blk = (1, bs, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_txn,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, sid, did, sc: (sid[i], 0, 0, 0)),
+            pl.BlockSpec(blk, lambda i, sid, did, sc: (did[i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, sid, did, sc: (did[i], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _dequant_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pages.shape, dst_pages.dtype),
+        input_output_aliases={4: 0},  # (sid, did, sc, src, DST) -> out
+        interpret=interpret,
+    )(src_ids, dst_ids, scales, src_pages, dst_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("run_len", "interpret"), donate_argnums=(1,))
 def kv_pull_runs(
     src_pages: jax.Array,    # [n_src, bs, g, d]

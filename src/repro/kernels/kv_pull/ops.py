@@ -3,14 +3,26 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.kv_pull.kernel import kv_pull as _pull, kv_pull_runs as _pull_runs
+from repro.kernels.kv_pull.kernel import (
+    kv_pull as _pull,
+    kv_pull_dequant as _pull_dequant,
+    kv_pull_runs as _pull_runs,
+)
 
-__all__ = ["kv_pull_op", "kv_pull_runs_op"]
+__all__ = ["kv_pull_op", "kv_pull_runs_op", "kv_pull_dequant_op"]
 
 
 def kv_pull_op(src_pages, dst_pages, src_ids, dst_ids):
     interpret = jax.default_backend() != "tpu"
     return _pull(src_pages, dst_pages, src_ids, dst_ids, interpret=interpret)
+
+
+def kv_pull_dequant_op(src_pages, dst_pages, src_ids, dst_ids, scales):
+    """Quantized pull: int8 wire pages land dequantized (per-transaction
+    scale), matching the CPU engine's ``ReadTxn.qscale`` path."""
+    interpret = jax.default_backend() != "tpu"
+    return _pull_dequant(src_pages, dst_pages, src_ids, dst_ids, scales,
+                         interpret=interpret)
 
 
 def kv_pull_runs_op(src_pages, dst_pages, src_starts, dst_starts, *, run_len: int):

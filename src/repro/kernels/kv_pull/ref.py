@@ -3,11 +3,20 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["kv_pull_ref", "kv_pull_runs_ref"]
+__all__ = ["kv_pull_ref", "kv_pull_runs_ref", "kv_pull_dequant_ref"]
 
 
 def kv_pull_ref(src_pages, dst_pages, src_ids, dst_ids) -> jax.Array:
     return dst_pages.at[dst_ids].set(src_pages[src_ids])
+
+
+def kv_pull_dequant_ref(src_pages, dst_pages, src_ids, dst_ids, scales) -> jax.Array:
+    """Quantized-transfer oracle: landed int8 pages dequantize with their
+    per-transaction scale on the way into the destination pool."""
+    import jax.numpy as jnp
+
+    deq = src_pages[src_ids].astype(jnp.float32) * scales[:, None, None, None]
+    return dst_pages.at[dst_ids].set(deq.astype(dst_pages.dtype))
 
 
 def kv_pull_runs_ref(src_pages, dst_pages, src_starts, dst_starts, *, run_len: int) -> jax.Array:

@@ -34,6 +34,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prefill-workers", type=int, default=2)
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="give every request the same first FRAC of its "
+                         "prompt (tagged prefix_id) so delta transfer "
+                         "grafts it after the first pull")
+    ap.add_argument("--quantize-transfer", action="store_true",
+                    help="int8-quantize pulled KV on the wire "
+                         "(docs/transfer.md)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record lifecycle spans and write a Chrome "
                          "trace-event JSON timeline here")
@@ -44,20 +52,30 @@ def main() -> None:
     params = model.init_params(jax.random.PRNGKey(0))
     tracer = Tracer() if args.trace_out else None
     svc = DisaggService(model, params, n_prefill=args.prefill_workers,
-                        num_blocks=256, tracer=tracer)
+                        num_blocks=256, tracer=tracer,
+                        quantize_transfer=args.quantize_transfer)
 
     rng = np.random.default_rng(0)
+    prefix_len = int(args.prompt_len * args.shared_prefix_frac)
+    shared = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
     t0 = time.perf_counter()
     for i in range(args.requests):
-        tokens = rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
-        req = svc.submit(tokens)
+        suffix = rng.integers(0, cfg.vocab_size,
+                              args.prompt_len - prefix_len).astype(np.int32)
+        tokens = np.concatenate([shared, suffix])
+        req = svc.submit(tokens,
+                         prefix_id="shared" if prefix_len else None,
+                         prefix_len=prefix_len)
         out = svc.generate(req, max_new=args.max_new)
         stats = svc.engine.stats
+        hm = req.metrics
         print(f"[serve] {req.request_id}: prefill@{req.prefill_worker} "
               f"tokens={out} "
               f"(engine: {stats.txns_submitted} txns → {stats.reads_posted} reads, "
               f"coalesce {stats.coalesce_factor:.1f}x, "
-              f"{stats.bytes_moved/2**20:.1f} MiB)")
+              f"{stats.bytes_moved/2**20:.1f} MiB; "
+              f"kv pulled={hm.kv_bytes_pulled} reused={hm.kv_bytes_reused} "
+              f"reuse_frac={hm.kv_reuse_frac:.2f})")
     print(f"[serve] {args.requests} requests in {time.perf_counter()-t0:.1f}s; "
           f"transfer modeled {svc.engine.stats.modeled_time_s*1e3:.2f} ms total")
     # the serve-path counters/histograms, from the one registry every

@@ -49,6 +49,22 @@ class LoadReport:
     # count as load for placement) but reclaimable on demand, so
     # admission planning may spend them (the worker evicts lazily).
     evictable_blocks: int = 0
+    # Resident-set advertisement for delta transfer (docs/scheduling.md):
+    # (prefix_id, whole blocks retained) per cached prefix.  The router
+    # prices a pull to this worker as suffix-only — the resident prefix
+    # blocks are grafted decode-side, never moved — and admission
+    # planning charges only the suffix against the worker's budget.
+    prefix_blocks: tuple[tuple[str, int], ...] = ()
+
+    def resident_blocks_for(self, prefix_id: str | None) -> int:
+        """Whole prefix blocks this worker retains for ``prefix_id``
+        (0 when unknown) — the wire savings a delta plan realizes here."""
+        if prefix_id is None:
+            return 0
+        for pid, nblocks in self.prefix_blocks:
+            if pid == prefix_id:
+                return nblocks
+        return 0
 
     @property
     def queued_blocks(self) -> int:

@@ -107,10 +107,34 @@ class RequestRouter:
     def link(self, prefill_worker: str, decode_worker: str) -> LinkModel:
         return self.links.get((prefill_worker, decode_worker), self.default_link)
 
+    def _resident_blocks(self, ctx: RouteRequest, worker_id: str) -> int:
+        """Whole blocks of this request's prefix the worker advertises as
+        resident (``LoadReport.prefix_blocks``), capped at the request's
+        own footprint — the blocks a delta plan would graft instead of
+        pull."""
+        if ctx.prefix_id is None:
+            return 0
+        rep: LoadReport | None = self.scheduler.load(worker_id)
+        if rep is None:
+            return 0
+        total = -(-ctx.prompt_len // max(rep.block_size, 1))
+        return min(rep.resident_blocks_for(ctx.prefix_id), total)
+
     def transfer_cost_s(self, ctx: RouteRequest, prefill_worker: str,
                         decode_worker: str) -> float:
+        """Modeled pull cost, delta-aware: when the decode worker
+        advertises part of this request's prefix as resident, only the
+        suffix bytes move — the router prices exactly what the decode
+        worker's delta plan will put on the wire, so prefix-affinity
+        placement and network-aware placement agree on the savings."""
+        kv_bytes = ctx.kv_bytes
+        resident = self._resident_blocks(ctx, decode_worker)
+        if resident:
+            rep = self.scheduler.load(decode_worker)
+            total = -(-ctx.prompt_len // max(rep.block_size, 1))
+            kv_bytes = kv_bytes * (total - resident) // total
         return modeled_transfer_s(
-            ctx.kv_bytes,
+            kv_bytes,
             self.link(prefill_worker, decode_worker),
             span_bytes=self.span_bytes,
             coalesce_factor=self.coalesce_factor,
@@ -170,6 +194,9 @@ class RequestRouter:
         if rep is None:
             return True  # no telemetry yet: assume room
         needed = -(-ctx.prompt_len // max(rep.block_size, 1))
+        # resident prefix blocks are grafted (shared), not allocated:
+        # only the suffix draws on the worker's free/evictable budget
+        needed -= min(rep.resident_blocks_for(ctx.prefix_id), needed)
         return rep.free_blocks + rep.evictable_blocks >= needed
 
     def _fitting(self, ctx: RouteRequest, cands: list[Candidate]) -> list[Candidate]:
@@ -331,6 +358,10 @@ class RequestRouter:
                 closed.add(wid)
                 continue
             needed = -(-ctx.prompt_len // max(rep.block_size, 1)) if rep else 0
+            if rep is not None:
+                # delta admission: the resident prefix grafts for free,
+                # so only the suffix charges against the worker's budget
+                needed -= min(rep.resident_blocks_for(ctx.prefix_id), needed)
             if rep is not None and needed > rep.total_blocks:
                 continue  # can NEVER fit this worker: don't wedge its queue
             if budget[wid] < needed:

@@ -127,7 +127,13 @@ class BlockPool:
                 raise KeyError(f"block {b} not allocated")
             self._refcount[b] += 1
 
-    def free(self, blocks: list[int]) -> None:
+    def free(self, blocks: list[int]) -> list[int]:
+        """Release one reference per block; returns the blocks that were
+        ACTUALLY freed (refcount reached zero) — shared blocks merely
+        decrement and are not in the returned list.  Callers indexing
+        block contents (e.g. the decode workers' content-hash dedup
+        index) purge exactly the returned ids."""
+        released: list[int] = []
         for b in blocks:
             rc = self._refcount.get(b)
             if rc is None:
@@ -142,6 +148,8 @@ class BlockPool:
             else:
                 self.stats.allocated -= 1
             self._free.add(b)
+            released.append(b)
+        return released
 
     # ------------------------------------------------------------- query
     @property

@@ -64,11 +64,17 @@ __all__ = ["DisaggService"]
 class _HedgeTwin:
     """A hedged prefill's duplicate KV copy: worker + slab blocks + the
     (identical) first token.  Freed when the primary's transfer COMPLETEs
-    (loser aborted); adopted by failover when the primary copy dies."""
+    (loser aborted); adopted by failover when the primary copy dies.
+    Carries the twin's block hashes and quant scales so adoption swaps
+    the FULL transfer-plan identity, not just the block ids — stale
+    hashes/scales from the dead primary would dedup or dequantize against
+    the wrong bytes."""
 
     worker_id: str
     blocks: list[int]
     first_token: int
+    hashes: list[str] = dataclasses.field(default_factory=list)
+    scales: list | None = None
 
 _RETRYABLE = (
     RequestState.PREFILLING,
@@ -95,6 +101,8 @@ class DisaggService:
         prefill_time_fn=None,
         slo_classes: dict[str, float] | None = None,
         consume: str = "full",
+        delta_transfer: bool = True,
+        quantize_transfer: bool = False,
         tracer=None,
         metrics=None,
         clock=None,
@@ -103,6 +111,14 @@ class DisaggService:
         consumption mode: "layerwise" starts a request's first decode step
         on early layers while the tail of its KV pull is still in flight
         (see DecodeWorker).
+
+        ``delta_transfer`` lets decode workers graft resident blocks
+        (retained prefixes, content-hash dedup hits) into admissions and
+        pull only the missing suffix; ``quantize_transfer`` makes prefill
+        workers compute per-block int8 scales at park time so pulls move
+        quantized wire bytes (docs/transfer.md).  Both default to the
+        paper-faithful full-precision pull being the fallback: a request
+        with nothing resident behaves exactly as before.
 
         Observability (docs/observability.md): pass a ``repro.obs.Tracer``
         as ``tracer`` to record per-request lifecycle spans and loop/engine
@@ -116,6 +132,8 @@ class DisaggService:
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
+        self.delta_transfer = delta_transfer
+        self.quantize_transfer = quantize_transfer
         self.model = model
         self.params = params
         self.obs_clock = clock if clock is not None else time.perf_counter
@@ -182,7 +200,8 @@ class DisaggService:
         wid = f"p{next(self._wid_seq['p'])}"  # monotonic: ids never reused
         w = PrefillWorker(_winfo(wid, "prefill"), self.model, self.params,
                           num_blocks=num_blocks,
-                          base_address=self._alloc_base(num_blocks))
+                          base_address=self._alloc_base(num_blocks),
+                          quantize_transfer=self.quantize_transfer)
         self.prefills[wid] = w
         self.engine.register_memory(w.cache.memory_region())
         # seed liveness at the CURRENT clock, else a worker added late is
@@ -195,8 +214,9 @@ class DisaggService:
         w = DecodeWorker(_winfo(wid, "decode"), self.model, self.params,
                          num_blocks=num_blocks, engine=self.engine,
                          base_address=self._alloc_base(num_blocks),
-                         consume=self.consume, tracer=self.tracer,
-                         metrics=self.metrics)
+                         consume=self.consume,
+                         delta_transfer=self.delta_transfer,
+                         tracer=self.tracer, metrics=self.metrics)
         cm = ConnectionManager(w.info)
         cm.on_invalidate(self._on_prefill_invalidate)
         for pwid, pw in self.prefills.items():
@@ -312,6 +332,8 @@ class DisaggService:
                 # admission from the twin's slab
                 req.prefill_worker = twin.worker_id
                 req.prefill_blocks = list(twin.blocks)
+                req.block_hashes = list(twin.hashes)
+                req.kv_scales = twin.scales
                 self.first_tokens[req.request_id] = twin.first_token
                 self.metrics.inc("hedge.adopted")
                 self.tracer.phase(("request", req.request_id), "queue.kv",
@@ -396,7 +418,8 @@ class DisaggService:
                 queued_tokens=q_tokens, queue_depth=q_depth,
                 block_size=w.block_size, t=now,
                 prefix_ids=tuple(sorted(w.known_prefixes)),
-                evictable_blocks=w.evictable_blocks))
+                evictable_blocks=w.evictable_blocks,
+                prefix_blocks=w.resident_prefix_blocks))
 
     # ------------------------------------------------------------ serve
     def _ctx(self, req: Request) -> RouteRequest:
@@ -447,11 +470,13 @@ class DisaggService:
         if twin_wid is None:
             return
         try:
-            first, blocks = self.prefills[twin_wid].prefill_shadow(tokens)
+            first, blocks, hashes, scales = \
+                self.prefills[twin_wid].prefill_shadow(tokens)
         except OutOfBlocks:
             self.router.forget_hedge(req.request_id)  # twin never ran
             return
-        self.hedges[req.request_id] = _HedgeTwin(twin_wid, blocks, first)
+        self.hedges[req.request_id] = _HedgeTwin(twin_wid, blocks, first,
+                                                 hashes, scales)
         self.metrics.inc("hedge.dispatched")
         self.tracer.instant("hedge.dispatch", track=("request", req.request_id),
                             twin=twin_wid)
@@ -604,14 +629,18 @@ class DisaggService:
         the handle's pulled-bytes metric."""
         h = self.handles.pop(rid, None)
         if h is not None:
-            # seal BEFORE DecodeWorker.finish pops the engine's counter
+            # seal BEFORE DecodeWorker.finish pops the engine's counters
             h.metrics.kv_bytes_pulled = self.engine.pulled_bytes(rid)
+            h.metrics.kv_bytes_reused = self.engine.reused_bytes(rid)
             # close the lifecycle track AT the last token's timestamp, so
             # the span partition's extent equals HandleMetrics.ttlt_s
             self.tracer.end_phase(("request", rid), ts=h.metrics.last_token_at)
             m, hm = self.metrics, h.metrics
             m.inc("requests.finished")
             m.inc("request.kv_bytes_pulled", hm.kv_bytes_pulled)
+            m.inc("request.kv_bytes_reused", hm.kv_bytes_reused)
+            if hm.kv_bytes_pulled or hm.kv_bytes_reused:
+                m.observe("request.kv_reuse_frac", hm.kv_reuse_frac)
             if hm.ttft_s is not None:
                 m.observe("request.ttft_s", hm.ttft_s)
             if hm.ttlt_s is not None:
@@ -632,6 +661,7 @@ class DisaggService:
                     self.prefills[req.prefill_worker].release(req)
                 req.to(RequestState.DONE)
         self.engine.pulled_bytes(rid, pop=True)
+        self.engine.reused_bytes(rid, pop=True)
         self.router.forget(rid)
         self._drop_hedge(rid)
         self.first_tokens.pop(rid, None)

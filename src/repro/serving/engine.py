@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 from typing import Sequence
 
 import jax
@@ -35,7 +36,12 @@ __all__ = ["PrefillWorker", "DecodeWorker"]
 
 class PrefillWorker:
     def __init__(self, info: WorkerInfo, model, params, *, num_blocks: int = 256,
-                 base_address: int = 0x7F06F40000):
+                 base_address: int = 0x7F06F40000,
+                 quantize_transfer: bool = False):
+        """``quantize_transfer``: compute per-(layer, block, plane) int8
+        scales at park time so decode-side pulls move quantized wire
+        bytes with the scale carried in each ``ReadTxn`` descriptor
+        (docs/transfer.md § quantized transfer)."""
         cfg = model.cfg
         if not cfg.has_attention or cfg.sliding_window:
             raise NotImplementedError(
@@ -55,16 +61,50 @@ class PrefillWorker:
             base_address=base_address,
         )
         self.pool = BlockPool(num_blocks, block_size=self.block_size)
+        self.quantize_transfer = quantize_transfer
         self.registry = DescriptorRegistry(info.worker_id)
         for d in self.cache.descriptors():
             self.registry.register(d)
 
-    def _compute_and_park(self, tokens: np.ndarray) -> tuple[int, list[int]]:
+    def _digest_blocks(self, blocks: list[int]) -> list[str]:
+        """Content hash per parked block: blake2b over the block's K and V
+        slab bytes across ALL layers.  A block's KV encodes its full
+        prefix context (causal attention), so byte equality between two
+        parked blocks at the same position means the prompts agree up
+        through that block — a hash hit is safe to dedup on the wire."""
+        hashers = [hashlib.blake2b(digest_size=16) for _ in blocks]
+        for layer in range(self.cache.num_layers):
+            kplane, vplane = self.cache.kv_planes(layer)
+            for h, blk in zip(hashers, blocks):
+                h.update(kplane[blk].tobytes())
+                h.update(vplane[blk].tobytes())
+        return [h.hexdigest() for h in hashers]
+
+    def _quant_scales(self, blocks: list[int]) -> list[list[tuple[float, float]]]:
+        """Per-(layer, block position, plane) symmetric-int8 scales:
+        ``scales[layer][pos] = (k_scale, v_scale)``, plane order matching
+        ``TensorDesc.block_ranges`` (ascending offset = K then V)."""
+        scales: list[list[tuple[float, float]]] = []
+        for layer in range(self.cache.num_layers):
+            kplane, vplane = self.cache.kv_planes(layer)
+            per_block = []
+            for blk in blocks:
+                per_block.append(tuple(
+                    float(np.max(np.abs(plane[blk].astype(np.float32)))) / 127.0
+                    or 1.0
+                    for plane in (kplane, vplane)))
+            scales.append(per_block)
+        return scales
+
+    def _compute_and_park(
+        self, tokens: np.ndarray
+    ) -> tuple[int, list[int], list[str], list | None]:
         """Run the model prefill and land the KV pages in the slab.
-        Returns (first token, allocated blocks).  Capacity is checked
-        UP FRONT: a full pool must raise before any state transition or
-        model compute — a queued dispatch retries from QUEUED_PREFILL,
-        which an after-the-fact OutOfBlocks would strand in PREFILLING."""
+        Returns (first token, allocated blocks, per-block content hashes,
+        quant scales or None).  Capacity is checked UP FRONT: a full pool
+        must raise before any state transition or model compute — a
+        queued dispatch retries from QUEUED_PREFILL, which an
+        after-the-fact OutOfBlocks would strand in PREFILLING."""
         need = BlockPool.blocks_for_tokens(len(tokens), self.block_size)
         if not self.pool.can_allocate(need):
             raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
@@ -80,7 +120,9 @@ class PrefillWorker:
             for j, blk in enumerate(blocks):
                 self.cache.write_block(layer, blk, k_pages[layer, j], v_pages[layer, j])
         first = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
-        return first, blocks
+        hashes = self._digest_blocks(blocks)
+        scales = self._quant_scales(blocks) if self.quantize_transfer else None
+        return first, blocks, hashes, scales
 
     def prefill(self, req: Request, tokens: np.ndarray) -> int:
         """Run prefill, park KV blocks in the slab, return the first
@@ -91,10 +133,13 @@ class PrefillWorker:
         if not self.pool.can_allocate(need):
             raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
         req.to(RequestState.PREFILLING)
-        first, req.prefill_blocks = self._compute_and_park(tokens)
+        first, req.prefill_blocks, req.block_hashes, req.kv_scales = \
+            self._compute_and_park(tokens)
         return first
 
-    def prefill_shadow(self, tokens: np.ndarray) -> tuple[int, list[int]]:
+    def prefill_shadow(
+        self, tokens: np.ndarray
+    ) -> tuple[int, list[int], list[str], list | None]:
         """Hedge-twin prefill: same compute and slab landing as
         ``prefill`` but WITHOUT touching any request state — the serving
         layer tracks the twin copy and frees it when the primary's
@@ -119,6 +164,11 @@ class _Resident:
     # re-gathers and re-casts every resident block every round.
     k_cached: np.ndarray | None = None
     v_cached: np.ndarray | None = None
+    # The block ids the cache columns were gathered from.  The cache is
+    # valid only while ``blocks`` still starts with exactly these ids —
+    # a mutated block list (delta-grafted prefix swapped, failover
+    # reassignment) must invalidate, not serve stale pages.
+    cached_from: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -155,11 +205,13 @@ class DecodeWorker:
                  consume: str = "full",
                  step_margin_blocks: int = 2,
                  prefix_cache_cap: int = 4,
+                 delta_transfer: bool = True,
                  tracer=None,
                  metrics=None):
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
+        self.delta_transfer = delta_transfer
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics
         cfg = model.cfg
@@ -195,14 +247,71 @@ class DecodeWorker:
         self.prefix_cache: collections.OrderedDict[str, list[int]] = \
             collections.OrderedDict()
         self.prefix_cache_cap = prefix_cache_cap
+        # Content-hash dedup index: prefill-computed block hash -> a slab
+        # block currently holding that content.  Exact inverses — only the
+        # indexed block is recorded in _block_hash.  Entries register at
+        # promotion (never for in-flight pulls: their bytes haven't
+        # landed) and purge when the pool actually releases the block.
+        self._hash_index: dict[str, int] = {}
+        self._block_hash: dict[int, str] = {}
 
     # ------------------------------------------------------------ admit
+    @property
+    def _block_nbytes(self) -> int:
+        """Slab bytes one block occupies across all layers and both
+        planes — the logical bytes a full pull would move for it (the
+        same basis ``TransferEngine._pulled_bytes`` counts, so pulled +
+        reused always sums to the request's total KV footprint)."""
+        cfg = self.model.cfg
+        kplane, _ = self.cache.kv_planes(0)
+        return int(kplane[0].nbytes) * 2 * cfg.num_layers
+
+    def _plan_reuse(self, req: Request) -> dict[int, int]:
+        """Delta transfer plan: block POSITION -> resident slab block
+        already holding that position's KV bytes.  Two sources, prefix
+        graft first (it needs no hashes and so covers pre-hash senders):
+
+        * prefix graft — the request's ``prefix_id`` is retained here;
+          its whole-block prefix run maps positionally onto the cached
+          blocks (PR 5's retention contract: same prefix_id ⇒ identical
+          first prefix_len tokens);
+        * content-hash dedup — any remaining position whose prefill
+          block hash matches a landed resident block, across requests
+          with no shared prefix_id at all.
+        """
+        n = len(req.prefill_blocks)
+        reuse: dict[int, int] = {}
+        pid = req.prefix_id
+        if pid and pid in self.prefix_cache:
+            pblocks = self.prefix_cache[pid]
+            limit = min(len(pblocks), n,
+                        (req.prefix_len or req.prompt_len) // self.block_size)
+            for pos in range(limit):
+                reuse[pos] = pblocks[pos]
+            self.prefix_cache.move_to_end(pid)
+        for pos in range(min(n, len(req.block_hashes))):
+            if pos in reuse:
+                continue
+            blk = self._hash_index.get(req.block_hashes[pos])
+            if blk is not None:
+                reuse[pos] = blk
+        return reuse
+
     def admit_async(self, req: Request, conn: Connection, first_token: int) -> TransferFuture:
         """Event-driven pull-mode admission: allocate, submit the layer-
         streamed pull, return immediately.  The transfer advances when the
         worker calls ``pump()`` (typically interleaved with decode steps),
         and the request is promoted to DECODING the moment its future
         resolves.
+
+        Delta transfer: positions already resident (retained prefix /
+        hash dedup) are GRAFTED — ``pool.share``d into the request's
+        block list — and skipped on the wire; only the suffix is pulled.
+        The share happens BEFORE the suffix allocation so the eviction
+        fallback below can only decrement the grafted blocks' refcounts,
+        never corrupt them; a torn suffix therefore aborts cleanly (the
+        grafted prefix just un-shares) and a re-admission re-grafts and
+        re-notes reused bytes, mirroring pulled-bytes retry accounting.
 
         Allocation happens BEFORE any state transition so an OutOfBlocks
         failure leaves the request exactly as it was (KV_QUEUED, prefill
@@ -212,24 +321,42 @@ class DecodeWorker:
         req = getattr(req, "request", req)  # a RequestHandle delegates
         # reads but not WRITES (pull_kv_async assigns decode_blocks), so
         # admission must operate on the underlying Request
-        need = len(req.prefill_blocks)
+        n = len(req.prefill_blocks)
+        reuse = self._plan_reuse(req) if self.delta_transfer else {}
+        grafted = [reuse[p] for p in sorted(reuse)]
+        if grafted:
+            self.pool.share(grafted)
+        need = n - len(grafted)
         try:
-            blocks = self.pool.allocate(need)  # may raise
+            try:
+                fresh = self.pool.allocate(need) if need else []
+            except OutOfBlocks:
+                if not self._evict_prefixes(need):
+                    raise
+                fresh = self.pool.allocate(need)
         except OutOfBlocks:
-            if not self._evict_prefixes(need):
-                raise
-            blocks = self.pool.allocate(need)
+            if grafted:
+                self._free_blocks(grafted)  # un-share; request unchanged
+            raise
+        it = iter(fresh)
+        blocks = [reuse[p] if p in reuse else next(it) for p in range(n)]
         req.to(RequestState.KV_TRANSFER)
         fut = pull_kv_async(req, conn=conn, engine=self.engine,
                             decode_pool=self.pool, decode_cache=self.cache,
-                            preallocated=blocks)
+                            preallocated=blocks, skip=frozenset(reuse))
+        if grafted:
+            self.engine.note_reused(req.request_id,
+                                    len(grafted) * self._block_nbytes)
         self.inflight[req.request_id] = _InFlight(req, first_token, fut)
         # the lifecycle track's "transfer" phase: queue.kv ends the moment
         # the pull is SUBMITTED (bytes may start moving this tick)
         self.tracer.phase(("request", req.request_id), "transfer",
-                          worker=self.info.worker_id, blocks=len(blocks))
+                          worker=self.info.worker_id, blocks=len(blocks),
+                          reused_blocks=len(grafted))
         if self.metrics is not None:
             self.metrics.inc("decode.admitted")
+            if grafted:
+                self.metrics.inc("decode.blocks_grafted", len(grafted))
         return fut
 
     def admit_batch(
@@ -279,7 +406,10 @@ class DecodeWorker:
         if fl is None:
             return False
         if fl.req.decode_blocks:
-            self.pool.free(fl.req.decode_blocks)
+            # grafted (shared) blocks merely decrement — the retained
+            # prefix / dedup source they came from stays intact, so a
+            # torn suffix never corrupts resident state
+            self._free_blocks(fl.req.decode_blocks)
             fl.req.decode_blocks = []
         return True
 
@@ -306,6 +436,7 @@ class DecodeWorker:
             self.resident[rid] = _Resident(
                 req, req.decode_blocks, req.prompt_len, fl.first_token)
             req.to(RequestState.DECODING)
+            self._register_hashes(req)  # bytes landed: dedupable now
             # transfer ends when the request JOINS decode (promotion), so
             # resolve→promote latency is charged to transfer, not decode
             self.tracer.phase(("request", rid), "decode",
@@ -330,10 +461,16 @@ class DecodeWorker:
 
     def _resident_pages(self, r: _Resident) -> tuple[np.ndarray, np.ndarray]:
         """Per-request page cache: gather/cast from the slab only for
-        blocks not seen before, reuse the rest.  Today a resident's block
-        list is fixed at promotion, so the append branch runs once; it
-        future-proofs decode-time block growth / layer-streamed
-        consumption without a rewrite."""
+        blocks not seen before, reuse the rest.  The cache is keyed on
+        WHICH blocks its columns came from (``cached_from``), not just
+        how many: if the resident's block list no longer starts with the
+        blocks the cache was gathered from (delta graft swapped the
+        prefix, failover reassigned blocks), the whole cache is rebuilt —
+        a count-only check would silently serve the old blocks' pages."""
+        if r.k_cached is not None and \
+                list(r.cached_from) != r.blocks[: len(r.cached_from)]:
+            r.k_cached = r.v_cached = None
+            r.cached_from = ()
         cached = 0 if r.k_cached is None else r.k_cached.shape[1]
         if cached < len(r.blocks):
             k_new, v_new = self._gather_pages(r.blocks[cached:])
@@ -341,6 +478,7 @@ class DecodeWorker:
                 [r.k_cached, k_new], axis=1)
             r.v_cached = v_new if r.v_cached is None else np.concatenate(
                 [r.v_cached, v_new], axis=1)
+            r.cached_from = tuple(r.blocks)
         return r.k_cached, r.v_cached
 
     def _round_margin(self, max_new: int) -> int:
@@ -509,6 +647,7 @@ class DecodeWorker:
             pages = -(-r.context_len // self.block_size)
             r.k_cached = np.ascontiguousarray(k_all[:, i, :pages])
             r.v_cached = np.ascontiguousarray(v_all[:, i, :pages])
+            r.cached_from = tuple(r.blocks)  # writeback covers all blocks
 
     def _commit_step(self, batch: list[_Resident], state: DecodeState,
                      tokens: jnp.ndarray) -> dict[str, int]:
@@ -632,14 +771,43 @@ class DecodeWorker:
         r = self.resident.pop(req_id, None)
         if r is not None:
             self._retain_prefix(r)
-            self.pool.free(r.blocks)
-            # retire the engine's per-request byte counter here too, so
+            self._free_blocks(r.blocks)
+            # retire the engine's per-request byte counters here too, so
             # legacy callers driving finish() directly (no serving-layer
             # completion) don't grow one entry per request served
             self.engine.pulled_bytes(req_id, pop=True)
+            self.engine.reused_bytes(req_id, pop=True)
             r.req.to(RequestState.DONE)
 
     # ------------------------------------------------------ prefix cache
+    def _free_blocks(self, blocks: list[int]) -> list[int]:
+        """The ONLY free path for decode-side blocks: release through the
+        pool and purge the hash-dedup index for every block that actually
+        left the pool.  Shared blocks that merely decrement stay indexed
+        — their bytes are still resident and still graftable."""
+        released = self.pool.free(blocks)
+        for blk in released:
+            h = self._block_hash.pop(blk, None)
+            if h is not None:
+                self._hash_index.pop(h, None)
+        return released
+
+    def _register_hashes(self, req: Request) -> None:
+        """Index a promoted request's landed blocks by prefill content
+        hash (first holder wins — re-registering a grafted block under
+        the same hash is a no-op).  Never called for in-flight pulls:
+        indexing a block whose bytes haven't landed would graft garbage.
+
+        Quantized-transfer note: the slab holds DEQUANTIZED bytes, not
+        the prefill bytes the hash was computed over — still sound,
+        because equal prefill bytes quantize to equal wire bytes and
+        scales, so a hash hit serves exactly what the new request's own
+        quantized pull would have landed."""
+        for blk, h in zip(req.decode_blocks, req.block_hashes):
+            if h not in self._hash_index:
+                self._hash_index[h] = blk
+                self._block_hash[blk] = h
+
     def _retain_prefix(self, r: _Resident) -> None:
         """Keep a finishing request's shared-prefix blocks refcounted in
         the pool (bounded LRU) so prefix-affinity routing can steer the
@@ -658,15 +826,23 @@ class DecodeWorker:
         self.prefix_cache[req.prefix_id] = list(blocks)
         while len(self.prefix_cache) > self.prefix_cache_cap:
             _, evicted = self.prefix_cache.popitem(last=False)
-            self.pool.free(evicted)
+            self._free_blocks(evicted)
 
     def _evict_prefixes(self, need: int) -> bool:
         """Free retained prefixes (LRU-first) until ``need`` blocks fit;
         True if they now do."""
         while self.prefix_cache and not self.pool.can_allocate(need):
             _, blocks = self.prefix_cache.popitem(last=False)
-            self.pool.free(blocks)
+            self._free_blocks(blocks)
         return self.pool.can_allocate(need)
+
+    @property
+    def resident_prefix_blocks(self) -> tuple[tuple[str, int], ...]:
+        """(prefix_id, whole blocks retained) pairs, sorted — advertised
+        through ``LoadReport.prefix_blocks`` so the router can price a
+        delta pull (only the suffix moves) instead of a full pull."""
+        return tuple(sorted(
+            (pid, len(blocks)) for pid, blocks in self.prefix_cache.items()))
 
     @property
     def evictable_blocks(self) -> int:

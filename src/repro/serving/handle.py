@@ -74,8 +74,16 @@ class HandleMetrics:
     last_token_at: float | None = None
     token_times: list[float] = dataclasses.field(default_factory=list)
     kv_bytes_pulled: int = 0   # bytes landed decode-side, retries included
+    kv_bytes_reused: int = 0   # bytes a delta plan skipped (resident graft)
     hedged: bool = False       # a prefill twin was dispatched
     hedge_adopted: bool = False  # failover switched to the twin's KV
+
+    @property
+    def kv_reuse_frac(self) -> float:
+        """Fraction of this request's KV served from resident blocks
+        instead of the wire (0.0 when nothing was reused)."""
+        total = self.kv_bytes_pulled + self.kv_bytes_reused
+        return self.kv_bytes_reused / total if total else 0.0
 
     @property
     def ttft_s(self) -> float | None:

@@ -64,6 +64,16 @@ class Request:
     connection_epoch: int | None = None
     prefill_blocks: list[int] = dataclasses.field(default_factory=list)
     decode_blocks: list[int] = dataclasses.field(default_factory=list)
+    # Content hashes of the parked prefill KV, one per block position
+    # (digest over the block's K+V bytes across ALL layers).  Byte
+    # equality ⇒ identical prefix context, so decode workers dedup
+    # transfer plans against any resident block with the same hash —
+    # even across requests with no shared prefix_id.
+    block_hashes: list[str] = dataclasses.field(default_factory=list)
+    # Per-(layer, block position, plane) int8 dequant scales computed at
+    # prefill park time — present only under quantized transfer; they
+    # ride the ReadTxn descriptors (see core.descriptors.ReadTxn.qscale).
+    kv_scales: list | None = None
     tokens_generated: int = 0
     retries: int = 0
 

@@ -98,12 +98,27 @@ class SimConfig:
     #                  decode_start_s — and so KV-inclusive TTFT — eats
     #                  the cohort tail).
     batching: str = "continuous"
+    # Delta transfer (pull mode): decode workers retain finished
+    # requests' shared-prefix KV (LRU over prefix ids, bounded by
+    # prefix_cache_cap) and pull only the suffix for a later request
+    # with the same prefix — the sim twin of DecodeWorker's delta
+    # admission (docs/transfer.md).
+    delta_transfer: bool = False
+    prefix_cache_cap: int = 4
+    # Quantized transfer: int8 wire format halves the bytes actually
+    # moved (per-span scales are noise at this scale); compute is
+    # unchanged — the slab dequantizes on landing.
+    quantize_transfer: bool = False
 
 
 @dataclasses.dataclass
 class SimResults:
     requests: list[Request]
     rejected: list[Request] = dataclasses.field(default_factory=list)
+    # Delta-transfer accounting (tokens, per request): what moved on the
+    # wire vs what a delta plan served from resident prefix KV.
+    pulled_tokens: dict[str, int] = dataclasses.field(default_factory=dict)
+    reused_tokens: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def _metric(self, fn) -> list[float]:
         return [v for v in (fn(r) for r in self.requests) if v is not None]
@@ -134,7 +149,18 @@ class SimResults:
             "p50_ttft_kv_s": self.p(50, self._ttft_kv),
             "p90_ttft_kv_s": self.p(90, self._ttft_kv),
             "mean_total_s": float(np.mean(self._metric(lambda r: r.total_latency_s) or [np.nan])),
+            "mean_pulled_tokens": float(np.mean(list(self.pulled_tokens.values()))
+                                        if self.pulled_tokens else 0.0),
+            "mean_reused_tokens": float(np.mean(list(self.reused_tokens.values()))
+                                        if self.reused_tokens else 0.0),
+            "kv_reuse_frac": self._reuse_frac(),
         }
+
+    def _reuse_frac(self) -> float:
+        pulled = sum(self.pulled_tokens.values())
+        reused = sum(self.reused_tokens.values())
+        total = pulled + reused
+        return reused / total if total else 0.0
 
     def mean_breakdown(self) -> dict[str, float]:
         keys = ["prefill_queue_s", "prefill_s", "transfer_s", "decode_queue_s", "decode_s"]
@@ -177,6 +203,10 @@ class _DecodeWorker:
         self.iter_end = 0.0         # end of the in-flight decode iteration
         self.iterating = False
         self.cfg = cfg
+        # Delta transfer: retained prefix KV (prefix_id -> tokens held),
+        # LRU over insertion order; the held tokens stay in used_tokens
+        # until eviction — the sim twin of DecodeWorker.prefix_cache.
+        self.prefix_cache: dict[str, int] = {}
 
     def free_tokens(self) -> int:
         return self.cap_tokens - self.used_tokens
@@ -205,6 +235,11 @@ class ClusterSim:
         self._meta: dict[str, SimRequest] = {}
         self.finished: list[Request] = []
         self.rejected: list[Request] = []
+        # delta-transfer accounting (tokens): wire vs resident-graft,
+        # plus what each admission actually drew from its worker's pool
+        self.pulled_tokens: dict[str, int] = {}
+        self.reused_tokens: dict[str, int] = {}
+        self._alloc_tokens: dict[str, int] = {}
         # per-(prefill, decode) link multiplier on transfer time — the
         # skewed topology the network-aware policy exploits (NetKV)
         self.link_scales = dict(link_scales or {})
@@ -240,7 +275,9 @@ class ClusterSim:
         while self._heap:
             self.now, _, fn = heapq.heappop(self._heap)
             fn()
-        return SimResults(self.finished, self.rejected)
+        return SimResults(self.finished, self.rejected,
+                          pulled_tokens=dict(self.pulled_tokens),
+                          reused_tokens=dict(self.reused_tokens))
 
     # -------------------------------------------------------- scheduling
     def _ctx(self, req: Request) -> RouteRequest:
@@ -248,6 +285,7 @@ class ClusterSim:
             req.request_id, req.prompt_len,
             kv_bytes=req.prompt_len * self.cost.kv_bytes_per_token(),
             slo_class=req.slo_class, arrival_s=req.arrival_s,
+            prefix_id=req.prefix_id,
         )
 
     def _link_scale(self, req: Request, decode_wid: str) -> float:
@@ -255,18 +293,35 @@ class ClusterSim:
             return 1.0
         return self.link_scales.get((req.prefill_worker, decode_wid), 1.0)
 
+    def _resident_tokens(self, req: Request, d: "_DecodeWorker") -> int:
+        """Prefix tokens of ``req`` already resident on ``d`` — what a
+        delta plan grafts instead of pulling."""
+        if not self.cfg.delta_transfer or not req.prefix_id:
+            return 0
+        cached = d.prefix_cache.get(req.prefix_id, 0)
+        plen = req.prefix_len or req.prompt_len
+        return min(cached, plen, req.prompt_len)
+
     def _pair_transfer_s(self, req: Request, decode_wid: str) -> float:
-        return self._link_scale(req, decode_wid) * self.cost.transfer_s(
-            req.prompt_len, mode=self.cfg.transfer_mode,
+        d = next(x for x in self.decodes if x.wid == decode_wid)
+        suffix = req.prompt_len - self._resident_tokens(req, d)
+        wire_scale = 0.5 if self.cfg.quantize_transfer else 1.0
+        return wire_scale * self._link_scale(req, decode_wid) * self.cost.transfer_s(
+            suffix, mode=self.cfg.transfer_mode,
             coalesce_factor=self.cfg.coalesce_factor)
 
     def _pair_layer_tail_s(self, req: Request, decode_wid: str) -> float:
         """Layer-streamed pull: delay from transfer start to the request
         becoming decodable (layer 0 landed; later layers hide behind the
-        per-layer decode pipeline)."""
-        return self._link_scale(req, decode_wid) * self.cost.transfer_layer_tail_s(
-            req.prompt_len, mode=self.cfg.transfer_mode,
-            coalesce_factor=self.cfg.coalesce_factor)
+        per-layer decode pipeline).  Delta/quantized transfer shrink the
+        per-layer share the same way they shrink the whole pull."""
+        d = next(x for x in self.decodes if x.wid == decode_wid)
+        suffix = req.prompt_len - self._resident_tokens(req, d)
+        wire_scale = 0.5 if self.cfg.quantize_transfer else 1.0
+        return wire_scale * self._link_scale(req, decode_wid) * \
+            self.cost.transfer_layer_tail_s(
+                suffix, mode=self.cfg.transfer_mode,
+                coalesce_factor=self.cfg.coalesce_factor)
 
     def _projected_ttft_s(self, req: Request) -> float:
         """Admission-time TTFT projection: mean backlog wait + own
@@ -285,7 +340,8 @@ class ClusterSim:
 
     # ------------------------------------------------------- disagg flow
     def _arrive(self, sr: SimRequest) -> None:
-        req = Request(sr.request_id, sr.prompt_len, sr.response_len, arrival_s=self.now)
+        req = Request(sr.request_id, sr.prompt_len, sr.response_len, arrival_s=self.now,
+                      prefix_id=sr.prefix_id, prefix_len=sr.prefix_len)
         self._meta[sr.request_id] = sr
         # Admission first, in EVERY mode (colocated must not silently
         # bypass the SLO controller).  Projection is O(queue); only pay
@@ -420,10 +476,44 @@ class ClusterSim:
                       total_units=d.cap_tokens,
                       queued_units=sum(r.prompt_len for r in d.kv_queue),
                       resident=len(d.active),
-                      transfer_cost_s=self._pair_transfer_s(req, d.wid))
+                      transfer_cost_s=self._pair_transfer_s(req, d.wid),
+                      prefix_hit=1.0 if (req.prefix_id and
+                                         req.prefix_id in d.prefix_cache)
+                      else 0.0)
             for d in cands
         ])
         return next(d for d in cands if d.wid == chosen.worker_id)
+
+    def _evict_sim_prefix(self, d: _DecodeWorker, keep: str | None) -> bool:
+        """Drop the LRU retained prefix (except ``keep`` — a prefix being
+        grafted right now stays resident, like the real worker's
+        share-before-evict ordering); True if something was freed."""
+        for pid in d.prefix_cache:
+            if pid != keep:
+                d.used_tokens -= d.prefix_cache.pop(pid)
+                return True
+        return False
+
+    def _retain_sim_prefix(self, d: _DecodeWorker, req: Request, alloc: int) -> int:
+        """On finish, keep the request's shared prefix resident for later
+        delta admissions (the real worker's prefix retention).  Returns
+        the token count carved out of the release; retained tokens stay
+        in ``used_tokens`` until the LRU cap evicts them."""
+        if (self.cfg.mode != "pull" or not self.cfg.delta_transfer
+                or not req.prefix_id or self.cfg.prefix_cache_cap <= 0):
+            return 0
+        pid = req.prefix_id
+        if pid in d.prefix_cache:
+            d.prefix_cache[pid] = d.prefix_cache.pop(pid)  # LRU touch
+            return 0  # already resident: the cache's copy owns those tokens
+        ptoks = min(req.prefix_len or req.prompt_len, req.prompt_len, alloc)
+        if ptoks <= 0:
+            return 0
+        d.prefix_cache[pid] = ptoks
+        while len(d.prefix_cache) > self.cfg.prefix_cache_cap:
+            evict = next(iter(d.prefix_cache))
+            d.used_tokens -= d.prefix_cache.pop(evict)
+        return ptoks
 
     def _try_transfers(self, d: _DecodeWorker, holder: _PrefillWorker | None = None) -> None:
         started = 0
@@ -431,11 +521,26 @@ class ClusterSim:
             if self.cfg.admission_batch and started >= self.cfg.admission_batch:
                 return  # batch cap: the rest waits for the next opportunity
             req = d.kv_queue[0]
-            need = self._reserved_tokens(req)
-            if d.free_tokens() < need:
-                return  # decode pool full: request queues, prefill KV stays alive
+            while True:
+                # delta plan: the resident prefix grafts for free, only
+                # the suffix draws on the pool
+                resident = self._resident_tokens(req, d)
+                need = self._reserved_tokens(req) - resident
+                if d.free_tokens() >= need:
+                    break
+                if not self._evict_sim_prefix(d, keep=req.prefix_id):
+                    return  # pool full even after eviction: request queues
+            if resident and req.prefix_id in d.prefix_cache:
+                d.prefix_cache[req.prefix_id] = \
+                    d.prefix_cache.pop(req.prefix_id)  # LRU touch
             d.kv_queue.pop(0)
             d.used_tokens += need
+            self._alloc_tokens[req.request_id] = need
+            self.reused_tokens[req.request_id] = \
+                self.reused_tokens.get(req.request_id, 0) + resident
+            self.pulled_tokens[req.request_id] = \
+                self.pulled_tokens.get(req.request_id, 0) \
+                + (req.prompt_len - resident)
             started += 1
             req.to(RequestState.KV_TRANSFER)
             dt = self._pair_transfer_s(req, d.wid)
@@ -522,8 +627,13 @@ class ClusterSim:
                 r.done_s = self.now
                 r.to(RequestState.DONE)
                 d.active.remove(r)
-                d.used_tokens -= self._reserved_tokens(r) if self.cfg.reserve_response \
-                    else (r.prompt_len + r.tokens_generated)
+                alloc = self._alloc_tokens.pop(r.request_id, None)
+                if alloc is None:  # push path: full reservation was charged
+                    alloc = self._reserved_tokens(r) if self.cfg.reserve_response \
+                        else (r.prompt_len + r.tokens_generated)
+                elif not self.cfg.reserve_response:
+                    alloc += r.tokens_generated  # per-token growth charged above
+                d.used_tokens -= alloc - self._retain_sim_prefix(d, r, alloc)
                 self.finished.append(r)
         if self.cfg.mode == "pull":
             self._try_transfers(d)

@@ -15,7 +15,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["WorkloadSpec", "ARXIV", "SHAREGPT", "sample_requests", "fixed_requests"]
+__all__ = ["WorkloadSpec", "ARXIV", "SHAREGPT", "sample_requests", "fixed_requests",
+           "shared_prefix_requests"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,11 @@ class SimRequest:
     arrival_s: float
     prompt_len: int
     response_len: int
+    # Shared-prefix identity for delta transfer / prefix-affinity sims:
+    # requests with the same prefix_id share their first prefix_len
+    # prompt tokens (0 with a prefix_id = the whole prompt).
+    prefix_id: str | None = None
+    prefix_len: int = 0
 
 
 def sample_requests(spec: WorkloadSpec, *, qps: float, duration_s: float,
@@ -72,5 +78,29 @@ def fixed_requests(prompt_len: int, response_len: int, *, qps: float,
     arrivals = arrivals[arrivals < duration_s]
     return [
         SimRequest(f"fixed-{i}", float(a), prompt_len, response_len)
+        for i, a in enumerate(arrivals)
+    ]
+
+
+def shared_prefix_requests(prompt_len: int, response_len: int, *, qps: float,
+                           duration_s: float, prefix_frac: float = 0.5,
+                           n_prefixes: int = 4, seed: int = 0) -> list[SimRequest]:
+    """Delta-transfer workload: fixed-shape requests where each arrival
+    shares the first ``prefix_frac`` of its prompt with every other
+    request carrying the same prefix id (``n_prefixes`` distinct shared
+    system prompts, assigned uniformly at random).  With delta transfer
+    on, every request after a prefix's first pull moves only the
+    remaining ``1 - prefix_frac`` suffix."""
+    if not 0.0 <= prefix_frac <= 1.0:
+        raise ValueError(f"prefix_frac must be in [0, 1], got {prefix_frac}")
+    rng = np.random.default_rng(seed)
+    n = max(1, int(qps * duration_s * 1.2))
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n))
+    arrivals = arrivals[arrivals < duration_s]
+    prefix_len = int(prompt_len * prefix_frac)
+    picks = rng.integers(0, max(n_prefixes, 1), len(arrivals))
+    return [
+        SimRequest(f"pfx-{i}", float(a), prompt_len, response_len,
+                   prefix_id=f"prefix{picks[i]}", prefix_len=prefix_len)
         for i, a in enumerate(arrivals)
     ]

@@ -11,8 +11,12 @@ import pytest
 
 from repro.kernels.flash_prefill.kernel import flash_prefill
 from repro.kernels.flash_prefill.ref import dense_ref
-from repro.kernels.kv_pull.kernel import kv_pull, kv_pull_runs
-from repro.kernels.kv_pull.ref import kv_pull_ref, kv_pull_runs_ref
+from repro.kernels.kv_pull.kernel import kv_pull, kv_pull_dequant, kv_pull_runs
+from repro.kernels.kv_pull.ref import (
+    kv_pull_dequant_ref,
+    kv_pull_ref,
+    kv_pull_runs_ref,
+)
 from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
@@ -101,6 +105,49 @@ class TestKVPull:
         ref = kv_pull_runs_ref(src, dst, ss, ds, run_len=run_len)
         out = kv_pull_runs(src, dst, ss, ds, run_len=run_len, interpret=True)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("dst_dtype", [jnp.float32, jnp.bfloat16])
+    def test_dequant_txn_list(self, dst_dtype):
+        """Quantized delta pull: int8 wire pages land dequantized with
+        their per-transaction scale (ReadTxn.qscale on device)."""
+        src = jnp.asarray(RNG.integers(-127, 128, (12, 16, 2, 32)), jnp.int8)
+        dst = jnp.asarray(RNG.standard_normal((10, 16, 2, 32)), dst_dtype)
+        sid = jnp.asarray([0, 5, 11, 3], jnp.int32)
+        did = jnp.asarray([9, 1, 4, 0], jnp.int32)
+        scales = jnp.asarray([0.013, 1.0, 0.5, 0.0021], jnp.float32)
+        ref = kv_pull_dequant_ref(src, dst, sid, did, scales)
+        out = kv_pull_dequant(src, dst, sid, did, scales, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_dequant_untouched_pages_survive(self):
+        """Destination is aliased (RDMA-write semantics): pages no
+        transaction names keep their contents bit-for-bit."""
+        src = jnp.asarray(RNG.integers(-127, 128, (4, 8, 2, 16)), jnp.int8)
+        dst = jnp.asarray(RNG.standard_normal((6, 8, 2, 16)), jnp.float32)
+        keep = np.array(dst)
+        sid, did = jnp.asarray([2], jnp.int32), jnp.asarray([3], jnp.int32)
+        out = kv_pull_dequant(src, dst, sid, did,
+                              jnp.asarray([0.25], jnp.float32),
+                              interpret=True)
+        out = np.asarray(out)
+        np.testing.assert_array_equal(out[[0, 1, 2, 4, 5]],
+                                      keep[[0, 1, 2, 4, 5]])
+        np.testing.assert_allclose(out[3], src[2].astype(np.float32) * 0.25)
+
+    def test_dequant_roundtrip_bound(self):
+        """Symmetric int8 round-trip of bf16-scale data stays within the
+        documented tolerance: |err| <= max(|x|)/127 per page."""
+        x = np.asarray(RNG.standard_normal((3, 8, 2, 16)), np.float32)
+        scales = np.abs(x).reshape(3, -1).max(axis=1) / 127.0
+        q = np.clip(np.round(x / scales[:, None, None, None]),
+                    -127, 127).astype(np.int8)
+        dst = jnp.zeros((3, 8, 2, 16), jnp.float32)
+        ids = jnp.arange(3, dtype=jnp.int32)
+        out = kv_pull_dequant(jnp.asarray(q), dst, ids, ids,
+                              jnp.asarray(scales), interpret=True)
+        err = np.max(np.abs(np.asarray(out) - x), axis=(1, 2, 3))
+        assert (err <= np.abs(x).reshape(3, -1).max(axis=1) / 127.0
+                + 1e-7).all()
 
     def test_full_request_transfer_shape(self):
         """Paper-scale mini: 1024-block request pulled in 8-block runs."""

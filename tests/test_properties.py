@@ -264,3 +264,95 @@ def test_any_interleaving_matches_one_shot_drain(program):
             assert b[: len(a)] == a
     # 4. every request's completion was observable exactly once via poll
     assert sorted(polled) == sorted(f"r{i}" for i in range(len(programs)))
+
+
+# ------------------------------------------------- block pool lifecycle
+# 4. Delta-transfer lifecycle: for ANY interleaving of retain / evict /
+#    delta-admit / torn-pull on one BlockPool, refcounts never double-
+#    free, never leak, and free() reports exactly the ids whose last
+#    reference dropped (the contract the hash-dedup purge rides on).
+pool_ops = st.lists(
+    st.tuples(st.sampled_from(["admit", "finish", "torn", "evict"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(pool_ops, st.integers(4, 24))
+def test_pool_delta_lifecycle_never_leaks_or_double_frees(ops, capacity):
+    from repro.serving.blocks import BlockPool, OutOfBlocks
+
+    pool = BlockPool(capacity, block_size=4)
+    shadow: dict[int, int] = {}  # block -> expected refcount
+
+    def s_free(blocks):
+        """Mirror pool.free in the shadow model; return expected releases."""
+        released = []
+        for b in blocks:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+                released.append(b)
+        return released
+
+    live: dict[int, list[int]] = {}  # request -> its block list
+    cache: list[list[int]] = []      # retained prefixes, LRU order
+    next_rid = 0
+
+    for op, arg in ops:
+        if op == "admit":
+            # graft the LRU-newest retained prefix (share FIRST, like
+            # admit_async), then allocate a suffix; on OutOfBlocks evict
+            # retained prefixes, then give up cleanly (un-share the graft)
+            graft = list(cache[-1]) if cache else []
+            n = len(graft) + arg % 3 + 1
+            if graft:
+                pool.share(graft)
+                for b in graft:
+                    shadow[b] += 1
+            need = n - len(graft)
+            try:
+                try:
+                    fresh = pool.allocate(need)
+                except OutOfBlocks:
+                    while cache and not pool.can_allocate(need):
+                        ev = cache.pop(0)
+                        assert pool.free(ev) == s_free(ev)
+                    fresh = pool.allocate(need)
+            except OutOfBlocks:
+                if graft:
+                    assert pool.free(graft) == s_free(graft)
+                continue
+            for b in fresh:
+                assert b not in shadow
+                shadow[b] = 1
+            live[next_rid] = graft + fresh
+            next_rid += 1
+        elif op in ("finish", "torn") and live:
+            rid = sorted(live)[arg % len(live)]
+            blocks = live.pop(rid)
+            if op == "finish" and blocks:  # retain a prefix before freeing
+                prefix = blocks[: max(1, len(blocks) // 2)]
+                pool.share(prefix)
+                for b in prefix:
+                    shadow[b] += 1
+                cache.append(list(prefix))
+                while len(cache) > 2:  # bounded cap, evict LRU
+                    ev = cache.pop(0)
+                    assert pool.free(ev) == s_free(ev)
+            # torn: abort frees everything — grafted ids just decrement
+            assert pool.free(blocks) == s_free(blocks)
+        elif op == "evict" and cache:
+            ev = cache.pop(arg % len(cache))
+            assert pool.free(ev) == s_free(ev)
+        pool.check_invariants()
+        assert pool.stats.in_use == len(shadow)
+
+    # drain everything: the pool must return to fully free — no leaks
+    for blocks in live.values():
+        assert pool.free(blocks) == s_free(blocks)
+    for ev in cache:
+        assert pool.free(ev) == s_free(ev)
+    assert not shadow
+    assert pool.num_free == capacity
+    pool.check_invariants()
