@@ -1,0 +1,315 @@
+"""Elastic fleet sweep: autoscaling + memory-pressure preemption, sim + real.
+
+Two sim contrasts on the discrete-event simulator, mirroring the
+``repro.fleet`` control plane (which the sim runs VERBATIM — the
+autoscaler is the real ``fleet.Autoscaler`` fed LoadReports built from
+sim worker state):
+
+  * **static vs autoscaled at equal peak hardware** — bursty (MMPP)
+    arrivals of a prefill-heavy workload against (a) a static 2P×2D
+    fleet and (b) an autoscaled fleet capped at the SAME peak worker
+    count (``total_cap=4``) that shifts the P/D ratio toward 3P×1D
+    during bursts (P/D-Serve-style).  Asserted: the autoscaled fleet's
+    p90 end-to-end latency beats static.
+
+  * **park-only vs preemption under memory pressure** — two batch-class
+    hogs fill a single decode worker's pool while short interactive
+    requests queue behind them.  Without preemption the shorts wait for
+    a hog to finish; with ``preemption="swap"`` (host-memory swap-out,
+    resume later) or ``"sacrifice"`` (drop + truncate-and-replay) the
+    governor evicts a hog and the shorts complete inside the horizon.
+    Asserted: both preemption modes complete STRICTLY more requests by
+    the horizon than park-only, and no work is lost (everything still
+    finishes eventually).
+
+``real_cells()`` proves the same mechanisms END-TO-END on the real
+substrate (JAX compute, real KV bytes through the transfer engine):
+
+  * swap-out freezes the stream (no tokens while swapped), swap-in
+    resumes it, and the final stream is BIT-IDENTICAL to an unpreempted
+    run — the page cache writeback preserved the appended KV;
+  * sacrifice replays through prefill and regenerates the identical
+    stream (decode is deterministic), with the retry counted;
+  * under real memory pressure (4-block decode pool), a swap-enabled
+    fleet completes strictly more requests in a fixed tick budget than
+    park-only at equal hardware.
+
+    PYTHONPATH=src python -m benchmarks.fig_elastic [--fast] \
+        [--out fig_elastic.json] [--skip-real] [--bench-out [PATH]]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import SimRequest, WorkloadSpec, bursty_requests
+
+SEED = 17
+# prefill-heavy bursty workload: long prompts, short responses — the
+# shape whose optimal P/D ratio shifts toward prefill during bursts
+BURST_SPEC = WorkloadSpec("burst", mean_prompt=40_000, mean_response=128)
+BURST = dict(qps_on=1.2, qps_off=0.05, mean_on_s=60.0, mean_off_s=60.0)
+DURATION = 480.0
+FAST_DURATION = 240.0
+PRESSURE_HORIZON = 100.0
+
+
+def _cost() -> CostModel:
+    return CostModel(get_config("mistral-large-123b"), H100_NODE)
+
+
+# ------------------------------------------------------------- autoscale
+def autoscale_cells(fast: bool = False) -> list[dict]:
+    """Static 2P×2D vs autoscaled at the same peak hardware (cap 4)."""
+    cost = _cost()
+    duration = FAST_DURATION if fast else DURATION
+    reqs = bursty_requests(BURST_SPEC, duration_s=duration, seed=SEED, **BURST)
+    variants = {
+        "static": SimConfig(mode="pull", n_prefill=2, n_decode=2),
+        # equal peak hardware: the autoscaler may only SHIFT the ratio
+        # (min_prefill pins the static prefill size; growing prefill
+        # first drains a decode worker — total never exceeds 4)
+        "autoscaled": SimConfig(mode="pull", n_prefill=2, n_decode=2,
+                                autoscale=True, total_cap=4,
+                                min_prefill=2, max_prefill=3,
+                                min_decode=1, max_decode=2,
+                                autoscale_interval_s=2.0),
+    }
+    cells = []
+    for name, cfg in variants.items():
+        s = ClusterSim(cost, cfg).run(list(reqs)).summary()
+        cells.append({
+            "variant": name, "n": int(s["n"]), "duration_s": duration,
+            "p50_total_s": s["p50_total_s"], "p90_total_s": s["p90_total_s"],
+            "p90_ttft_s": s["p90_ttft_s"], "completed": int(s["completed"]),
+        })
+    static = next(c for c in cells if c["variant"] == "static")
+    auto = next(c for c in cells if c["variant"] == "autoscaled")
+    assert auto["p90_total_s"] < static["p90_total_s"], (
+        f"autoscaled p90 {auto['p90_total_s']:.2f}s not below static "
+        f"{static['p90_total_s']:.2f}s at equal peak hardware")
+    assert auto["completed"] >= static["completed"], \
+        "autoscaling lost completed requests"
+    return cells
+
+
+# ------------------------------------------------------------ preemption
+def _pressure_requests(cap: int) -> list[SimRequest]:
+    """Two batch-class hogs fill 90 % of one decode pool; six short
+    interactive requests arrive behind them and cannot fit until a hog
+    leaves (by completion — minutes away — or by preemption)."""
+    hog_p, short_p = int(cap * 0.45), int(cap * 0.18)
+    return [SimRequest("hog-0", 0.0, hog_p, 4000, slo_class="batch"),
+            SimRequest("hog-1", 0.5, hog_p, 4000, slo_class="batch")] + [
+            SimRequest(f"short-{i}", 2.0 + i, short_p, 64,
+                       slo_class="interactive") for i in range(6)]
+
+
+def preemption_cells() -> list[dict]:
+    cost = _cost()
+    reqs = _pressure_requests(cost.kv_capacity_tokens())
+    base = dict(mode="pull", n_prefill=2, n_decode=1,
+                horizon_s=PRESSURE_HORIZON)
+    variants = {
+        "park_only": SimConfig(**base),
+        "swap": SimConfig(**base, preemption="swap", preempt_high=0.7,
+                          victim_policy="priority"),
+        "sacrifice": SimConfig(**base, preemption="sacrifice",
+                               preempt_high=0.7, victim_policy="priority"),
+    }
+    cells = []
+    for name, cfg in variants.items():
+        r = ClusterSim(cost, cfg).run(list(reqs))
+        s = r.summary()
+        cells.append({
+            "variant": name, "n": int(s["n"]),
+            "completed_by_horizon": r.completed_by(),
+            "horizon_s": PRESSURE_HORIZON,
+            "n_swapped": int(s["n_swapped"]),
+            "n_sacrificed": int(s["n_sacrificed"]),
+            "p90_total_s": s["p90_total_s"],
+        })
+        # no lost work: preemption defers, it never drops
+        assert int(s["n"]) == len(reqs), f"{name} lost requests"
+    park = next(c for c in cells if c["variant"] == "park_only")
+    for name in ("swap", "sacrifice"):
+        c = next(x for x in cells if x["variant"] == name)
+        assert c["completed_by_horizon"] > park["completed_by_horizon"], (
+            f"{name} completed {c['completed_by_horizon']} by "
+            f"{PRESSURE_HORIZON:.0f}s — not strictly more than park-only's "
+            f"{park['completed_by_horizon']}")
+    return cells
+
+
+# ------------------------------------------------------------- real path
+def real_cells() -> list[dict]:
+    """The same mechanisms end-to-end on the real serving substrate."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.fleet import FleetConfig
+    from repro.models.transformer import DecoderLM
+    from repro.serving.disagg import DisaggService
+
+    cfg = get_smoke_config("deepseek-67b")
+    model = DecoderLM(cfg, unroll=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    max_new = 8
+
+    def baseline() -> list[int]:
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1)
+        return svc.generate(svc.submit(prompt), max_new=max_new)
+
+    def drive(svc, h, cap=200):
+        for _ in range(cap):
+            if h.finished:
+                return
+            svc.loop.tick()
+        raise AssertionError(f"{h.request_id} did not finish in {cap} ticks")
+
+    want = baseline()
+    cells = []
+
+    # ---- swap-out / swap-in: stream pauses, resumes token-identical.
+    # preempt="none" keeps the governor off so the bench controls the
+    # swap points; the controller still owns the host swap pool.
+    svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                        fleet=FleetConfig(preempt="none"))
+    h = svc.submit(prompt, max_new=max_new)
+    while h.decoded < 2:
+        svc.loop.tick()
+    wid = h.request.decode_worker
+    assert svc.swap_out_request(h.request_id), "swap_out refused"
+    frozen = len(h.tokens)
+    for _ in range(3):
+        svc.loop.tick()
+    assert len(h.tokens) == frozen, "tokens advanced while swapped out"
+    assert svc.swap_in_request(h.request_id, wid), "swap_in refused"
+    drive(svc, h)
+    assert h.tokens == want, "swap cycle changed the token stream"
+    assert h.metrics.swapped_out == 1
+    cells.append({"cell": "swap_identity", "tokens": len(h.tokens),
+                  "swapped_out": h.metrics.swapped_out,
+                  "ticks_frozen": 3})
+
+    # ---- sacrifice: drop KV, truncate-and-replay, identical stream
+    svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                        fleet=FleetConfig(preempt="none"))
+    h = svc.submit(prompt, max_new=max_new)
+    while h.decoded < 2:
+        svc.loop.tick()
+    assert svc.sacrifice_request(h.request_id), "sacrifice refused"
+    drive(svc, h)
+    assert h.tokens == want, "sacrifice replay changed the token stream"
+    assert h.metrics.sacrificed == 1
+    assert h.request.retries >= 1
+    cells.append({"cell": "sacrifice_identity", "tokens": len(h.tokens),
+                  "sacrificed": h.metrics.sacrificed,
+                  "retries": h.request.retries})
+
+    # ---- memory pressure: park-only vs swap, equal hardware, fixed tick
+    # budget.  A 4-block decode pool: request A (3 prompt blocks, grows
+    # to 4) fills it; B (2 blocks) cannot admit until A leaves.
+    def pressure(fleet) -> int:
+        svc = DisaggService(model, params, n_prefill=1, n_decode=0,
+                            fleet=fleet)
+        svc.add_decode_worker(num_blocks=4)
+        a = svc.submit(rng.integers(0, cfg.vocab_size, 96).astype(np.int32),
+                       max_new=24, slo_class="batch")
+        b = svc.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32),
+                       max_new=4)
+        for _ in range(16):
+            svc.loop.tick()
+        return sum(1 for x in (a, b) if x.done)
+
+    done_park = pressure(None)
+    done_swap = pressure(FleetConfig(preempt="swap", preempt_high=0.5,
+                                     victim_policy="fifo"))
+    assert done_swap > done_park, (
+        f"swap completed {done_swap} in 16 ticks, park-only {done_park} — "
+        "preemption must complete strictly more under pressure")
+    cells.append({"cell": "pressure_16_ticks", "park_only_done": done_park,
+                  "swap_done": done_swap})
+    return cells
+
+
+def _rows(auto: list[dict], preempt: list[dict],
+          real: list[dict] | None = None) -> list[Row]:
+    rows = []
+    for c in auto:
+        rows.append(Row(
+            f"elastic/burst/{c['variant']}", c["p90_total_s"] * 1e6,
+            f"p50={c['p50_total_s']:.2f}s;p90_ttft={c['p90_ttft_s']:.2f}s;"
+            f"completed={c['completed']}"))
+    static = next(c for c in auto if c["variant"] == "static")
+    scaled = next(c for c in auto if c["variant"] == "autoscaled")
+    rows.append(Row(
+        "elastic/burst/summary", 0.0,
+        f"static_vs_autoscaled_p90="
+        f"{static['p90_total_s'] / max(scaled['p90_total_s'], 1e-9):.2f}x"))
+    for c in preempt:
+        rows.append(Row(
+            f"elastic/pressure/{c['variant']}",
+            c["p90_total_s"] * 1e6,
+            f"completed_by_{c['horizon_s']:.0f}s={c['completed_by_horizon']};"
+            f"swapped={c['n_swapped']};sacrificed={c['n_sacrificed']}"))
+    for c in real or []:
+        detail = ";".join(f"{k}={v}" for k, v in c.items() if k != "cell")
+        rows.append(Row(f"elastic/real/{c['cell']}", 0.0, detail))
+    return rows
+
+
+def run() -> list[Row]:
+    return _rows(autoscale_cells(), preemption_cells(), real_cells())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="fig_elastic.json")
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter bursty sweep (240 s instead of 480 s)")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="sim cells only (no JAX model build)")
+    ap.add_argument("--bench-out", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also merge rows into a BENCH_<pr>.json "
+                         "trajectory point (default path from run.py)")
+    args = ap.parse_args()
+    auto = autoscale_cells(fast=args.fast)
+    preempt = preemption_cells()
+    real = [] if args.skip_real else real_cells()
+    rows = _rows(auto, preempt, real)
+    with open(args.out, "w") as f:
+        json.dump({"config": {"burst": {**BURST, "spec": BURST_SPEC.name},
+                              "duration_s": FAST_DURATION if args.fast
+                              else DURATION,
+                              "pressure_horizon_s": PRESSURE_HORIZON,
+                              "topology": "2P x 2D (cap 4)"},
+                   "autoscale": auto, "preemption": preempt,
+                   "real": real}, f, indent=2)
+    print(f"wrote {len(auto)} autoscale + {len(preempt)} preemption sim "
+          f"cells + {len(real)} real cells to {args.out}")
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv())
+    if args.bench_out is not None and rows:
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+        from benchmarks.run import BENCH_PR
+        from repro.obs.bench import BenchTrajectory, bench_path
+        traj = BenchTrajectory(BENCH_PR, source="benchmarks.fig_elastic")
+        traj.extend_rows(rows)
+        out = traj.write(args.bench_out or bench_path(BENCH_PR))
+        print(f"# merged {len(rows)} elastic entries into {out}")
+
+
+if __name__ == "__main__":
+    main()

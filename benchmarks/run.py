@@ -28,6 +28,7 @@ MODULES = [
     "fig16_pull_vs_push",
     "fig17_coalescing",
     "fig_continuous",
+    "fig_elastic",
     "fig_overlap",
     "fig_prefix_reuse",
     "fig_sched_policies",
@@ -36,7 +37,7 @@ MODULES = [
 
 # The PR number stamped into BENCH_<pr>.json artifacts.  Bump when a new
 # PR wants its own trajectory point (see repro.obs.bench.load_trajectory).
-BENCH_PR = 7
+BENCH_PR = 9
 
 
 def select_modules(prefixes: list[str]) -> list[str]:

@@ -45,15 +45,38 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record lifecycle spans and write a Chrome "
                          "trace-event JSON timeline here")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the fleet autoscaler (docs/fleet.md): "
+                         "grow/drain workers from LoadReport pressure")
+    ap.add_argument("--preempt", default="none",
+                    choices=("none", "swap", "sacrifice"),
+                    help="memory-pressure preemption mode on decode "
+                         "workers (victims resume via host-memory swap "
+                         "or truncate-and-replay)")
+    ap.add_argument("--victim-policy", default="lifo",
+                    choices=("lifo", "fifo", "priority"),
+                    help="preemption victim selection")
+    ap.add_argument("--admission-budget", type=float, default=None,
+                    metavar="FRAC",
+                    help="reject dispatch when projected decode KV "
+                         "occupancy exceeds FRAC of fleet capacity")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     tracer = Tracer() if args.trace_out else None
+    fleet = None
+    if args.autoscale or args.preempt != "none" \
+            or args.admission_budget is not None:
+        from repro.fleet import FleetConfig
+        fleet = FleetConfig(autoscale=args.autoscale, preempt=args.preempt,
+                            victim_policy=args.victim_policy,
+                            admission_budget=args.admission_budget)
     svc = DisaggService(model, params, n_prefill=args.prefill_workers,
                         num_blocks=256, tracer=tracer,
-                        quantize_transfer=args.quantize_transfer)
+                        quantize_transfer=args.quantize_transfer,
+                        fleet=fleet)
 
     rng = np.random.default_rng(0)
     prefix_len = int(args.prompt_len * args.shared_prefix_frac)
@@ -82,7 +105,8 @@ def main() -> None:
     # layer (loop, engine, router, request completion) reports into
     print("[serve] metrics:")
     for line in svc.metrics.format(
-            prefixes=("requests.", "request.", "engine.", "loop.")).splitlines():
+            prefixes=("requests.", "request.", "engine.", "loop.",
+                      "fleet.")).splitlines():
         print(f"[serve]   {line}")
     if tracer is not None:
         breakdowns = all_request_breakdowns(tracer)

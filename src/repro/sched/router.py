@@ -83,9 +83,22 @@ class RequestRouter:
         coalesce_factor: float = 8.0,
         span_bytes: int = 64 * 1024,
         metrics=None,
+        stale_after_s: float | None = None,
         **policy_kwargs,
     ) -> None:
         self.scheduler = scheduler
+        # LoadReport staleness guard: a report older than this (relative
+        # to the routing call's ``now``) is distrusted — the worker is
+        # scored as fully loaded and excluded from capacity fits, so the
+        # router stops placing work on a silently-dead or wedged worker
+        # before liveness reaping catches it.  None derives the cutoff
+        # from the scheduler's heartbeat timeout (a small multiple: one
+        # missed heartbeat is jitter, several is a signal).
+        self.stale_after_s = stale_after_s
+        # Draining workers (fleet scale-down): still alive, still serving
+        # what they hold, but no NEW placements — candidates skip them
+        # unless literally nobody else is left.
+        self.draining: set[str] = set()
         # optional repro.obs.MetricsRegistry: routing decisions and hedge
         # outcomes land here when the serving layer wires one in
         self.metrics = metrics
@@ -141,14 +154,41 @@ class RequestRouter:
         )
 
     # -------------------------------------------------------- candidates
+    def _stale_cutoff_s(self) -> float:
+        if self.stale_after_s is not None:
+            return self.stale_after_s
+        # 2.5 heartbeats: one missed beat is jitter, several a signal
+        return 2.5 * getattr(self.scheduler, "heartbeat_timeout_s", 5.0)
+
+    def _is_stale(self, rep: LoadReport | None, now: float | None) -> bool:
+        if rep is None or now is None:
+            return False
+        return now - rep.t > self._stale_cutoff_s()
+
     def _candidate(self, worker_id: str, *, ready_s: float = 0.0,
                    transfer_cost_s: float = 0.0,
-                   prefix_hit: float = 0.0) -> Candidate:
+                   prefix_hit: float = 0.0,
+                   now: float | None = None) -> Candidate:
         rep: LoadReport | None = self.scheduler.load(worker_id)
         if rep is None:
             return Candidate(worker_id, ready_s=ready_s,
                              transfer_cost_s=transfer_cost_s,
                              prefix_hit=prefix_hit)
+        if self._is_stale(rep, now):
+            # A frozen report must not make the worker look attractive —
+            # its blocks may be full (or the worker dead).  Score it as
+            # fully loaded so every load-sensitive policy avoids it;
+            # _has_room excludes it from capacity fits the same way.
+            return Candidate(
+                worker_id,
+                free_units=0,
+                total_units=rep.total_blocks,
+                queued_units=rep.total_blocks,
+                resident=rep.resident_requests,
+                ready_s=ready_s,
+                transfer_cost_s=transfer_cost_s,
+                prefix_hit=prefix_hit,
+            )
         return Candidate(
             worker_id,
             free_units=rep.free_blocks,
@@ -170,41 +210,55 @@ class RequestRouter:
             return 0.0
         return 1.0 if ctx.prefix_id in rep.prefix_ids else 0.0
 
+    def _routable(self, role: str) -> list:
+        """Live members minus draining workers — unless draining is all
+        that's left (better to place than to wedge every request)."""
+        members = self.scheduler.workers(role)
+        open_ = [w for w in members if w.worker_id not in self.draining]
+        return open_ or members
+
     def prefill_candidates(self, now: float = 0.0) -> list[Candidate]:
         return [
             self._candidate(
                 w.worker_id,
                 ready_s=max(0.0, self._busy_until.get(w.worker_id, 0.0) - now),
+                now=now,
             )
-            for w in self.scheduler.workers("prefill")
+            for w in self._routable("prefill")
         ]
 
-    def decode_candidates(self, ctx: RouteRequest, prefill_worker: str) -> list[Candidate]:
+    def decode_candidates(self, ctx: RouteRequest, prefill_worker: str,
+                          *, now: float | None = None) -> list[Candidate]:
         return [
             self._candidate(
                 w.worker_id,
                 transfer_cost_s=self.transfer_cost_s(ctx, prefill_worker, w.worker_id),
                 prefix_hit=self._prefix_hit(ctx, w.worker_id),
+                now=now,
             )
-            for w in self.scheduler.workers("decode")
+            for w in self._routable("decode")
         ]
 
-    def _has_room(self, ctx: RouteRequest, worker_id: str) -> bool:
+    def _has_room(self, ctx: RouteRequest, worker_id: str,
+                  now: float | None = None) -> bool:
         rep: LoadReport | None = self.scheduler.load(worker_id)
         if rep is None:
             return True  # no telemetry yet: assume room
+        if self._is_stale(rep, now):
+            return False  # frozen occupancy can't vouch for capacity
         needed = -(-ctx.prompt_len // max(rep.block_size, 1))
         # resident prefix blocks are grafted (shared), not allocated:
         # only the suffix draws on the worker's free/evictable budget
         needed -= min(rep.resident_blocks_for(ctx.prefix_id), needed)
         return rep.free_blocks + rep.evictable_blocks >= needed
 
-    def _fitting(self, ctx: RouteRequest, cands: list[Candidate]) -> list[Candidate]:
+    def _fitting(self, ctx: RouteRequest, cands: list[Candidate],
+                 now: float | None = None) -> list[Candidate]:
         """Only offer candidates that can hold the request's KV right
         now — a cost-first policy (network_aware) must not pin requests
         to a full worker while another has room.  Falls back to the full
         list when nobody fits (the request queues rather than erroring)."""
-        fitting = [c for c in cands if self._has_room(ctx, c.worker_id)]
+        fitting = [c for c in cands if self._has_room(ctx, c.worker_id, now)]
         return fitting or cands
 
     # ------------------------------------------------------------- route
@@ -223,12 +277,12 @@ class RequestRouter:
         pcands = self.prefill_candidates(now)
         if not pcands:
             raise NoWorkersError("no live prefill workers")
-        p = self.policy.pick_prefill(ctx, self._fitting(ctx, pcands))
+        p = self.policy.pick_prefill(ctx, self._fitting(ctx, pcands, now))
 
-        dcands = self.decode_candidates(ctx, p.worker_id)
+        dcands = self.decode_candidates(ctx, p.worker_id, now=now)
         if not dcands:
             raise NoWorkersError("no live decode workers")
-        d = self.policy.pick_decode(ctx, self._fitting(ctx, dcands))
+        d = self.policy.pick_decode(ctx, self._fitting(ctx, dcands, now))
 
         t_prefill = self.prefill_time_fn(ctx.prompt_len)
         # Projected TTFT follows the paper's definition (§5.1: TTFT
@@ -276,7 +330,7 @@ class RequestRouter:
             if self.metrics is not None:
                 self.metrics.inc("router.hedge_unavailable")
             return None
-        p = self.policy.pick_prefill(ctx, self._fitting(ctx, cands))
+        p = self.policy.pick_prefill(ctx, self._fitting(ctx, cands, now))
         t_prefill = self.prefill_time_fn(ctx.prompt_len)
         self._busy_until[p.worker_id] = now + p.ready_s + t_prefill
         self._charges[f"{ctx.request_id}#hedge"] = (p.worker_id, t_prefill)
@@ -372,14 +426,15 @@ class RequestRouter:
         return {wid: rids for wid, rids in batches.items() if rids}
 
     # ---------------------------------------------------------- failover
-    def reassign_decode(self, ctx: RouteRequest, prefill_worker: str) -> str:
+    def reassign_decode(self, ctx: RouteRequest, prefill_worker: str,
+                        *, now: float | None = None) -> str:
         """Re-pick only the decode side for an already-routed request
         (decode failover while its prefill KV is still alive).  Keeps the
         recorded decision and transfer-cost accounting consistent."""
-        cands = self.decode_candidates(ctx, prefill_worker)
+        cands = self.decode_candidates(ctx, prefill_worker, now=now)
         if not cands:
             raise NoWorkersError("no live decode workers")
-        d = self.policy.pick_decode(ctx, self._fitting(ctx, cands))
+        d = self.policy.pick_decode(ctx, self._fitting(ctx, cands, now))
         old = self.decisions.get(ctx.request_id)
         if old is not None:
             self.total_transfer_cost_s += d.transfer_cost_s - old.transfer_cost_s
@@ -389,6 +444,16 @@ class RequestRouter:
 
     def on_worker_failed(self, worker_id: str) -> None:
         self._busy_until.pop(worker_id, None)
+        self.draining.discard(worker_id)
+
+    # ---------------------------------------------------------- draining
+    def mark_draining(self, worker_id: str) -> None:
+        """Fleet scale-down: stop offering ``worker_id`` for new
+        placements while it drains what it already holds."""
+        self.draining.add(worker_id)
+
+    def clear_draining(self, worker_id: str) -> None:
+        self.draining.discard(worker_id)
 
     def forget(self, request_id: str) -> None:
         """Drop a request's decision AND retire its ledger charge, so a

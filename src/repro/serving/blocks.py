@@ -68,7 +68,7 @@ class BlockPool:
     # ---------------------------------------------------------- allocate
     def _take(self, n: int) -> list[int]:
         if n > len(self._free):
-            raise OutOfBlocks(f"need {n} blocks, {len(self._free)} free")
+            raise OutOfBlocks(f"need {n} blocks: pool {self.describe()}")
         # Find contiguous runs among free IDs; prefer the tightest run that
         # fits (best-fit) to keep long runs available for long prompts.
         runs: list[tuple[int, int]] = []  # (start, length)
@@ -155,6 +155,22 @@ class BlockPool:
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_shared(self) -> int:
+        """Blocks held by more than one reference (prefix grafts, the
+        retention cache) — occupancy that frees only when every holder
+        releases."""
+        return sum(1 for rc in self._refcount.values() if rc > 1)
+
+    def describe(self) -> str:
+        """One-line occupancy summary (used/free/shared) — what every
+        ``OutOfBlocks`` message embeds so preemption-threshold debugging
+        reads the pool state straight off the exception."""
+        s = self.stats
+        return (f"{s.in_use}/{s.capacity} used "
+                f"({len(self._free)} free, {self.num_shared} shared, "
+                f"{s.reserved} reserved)")
 
     def can_allocate(self, n: int) -> bool:
         return n <= len(self._free)

@@ -47,6 +47,8 @@ import numpy as np
 from repro.core.cluster import ClusterScheduler, MembershipEvent
 from repro.core.connection import ChipInfo, ConnectionManager, WorkerInfo
 from repro.core.transfer_engine import LinkModel, TransferEngine
+from repro.fleet import FleetController
+from repro.fleet.admission import AdmissionDeferred
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
 from repro.sched import LoadReport, NoWorkersError, RequestRouter, RouteRequest
@@ -106,6 +108,7 @@ class DisaggService:
         tracer=None,
         metrics=None,
         clock=None,
+        fleet=None,
     ):
         """``consume`` ("full" | "layerwise") is the decode workers' pull
         consumption mode: "layerwise" starts a request's first decode step
@@ -128,7 +131,13 @@ class DisaggService:
         every observability timestamp — tracer spans, handle metrics, and
         token times share it, so the span-derived breakdown and
         ``HandleMetrics`` agree exactly (a sim harness can inject a
-        virtual clock and produce the identical span schema)."""
+        virtual clock and produce the identical span schema).
+
+        ``fleet`` is an optional ``repro.fleet.FleetConfig``: when given,
+        a ``FleetController`` (autoscaling, memory-pressure preemption,
+        KV-budget admission — docs/fleet.md) is built and stepped by the
+        serving loop every tick.  Without it the service behaves exactly
+        as before (no control plane)."""
         if consume not in ("full", "layerwise"):
             raise ValueError(f"consume must be 'full' or 'layerwise', got {consume!r}")
         self.consume = consume
@@ -160,6 +169,11 @@ class DisaggService:
         # whether the caller ticks it directly (streaming) or goes
         # through the generate/generate_many shims.
         self.loop = ServeLoop(self)
+        # Fleet control plane (docs/fleet.md), stepped by the loop each
+        # tick; admission is consulted by _dispatch.  Tests may attach a
+        # bare AdmissionController to self.admission without a fleet.
+        self.fleet = FleetController(self, fleet) if fleet is not None else None
+        self.admission = self.fleet.admission if self.fleet is not None else None
 
         policy_kwargs = {"classes": slo_classes} if (
             policy == "slo" and slo_classes is not None) else {}
@@ -391,6 +405,96 @@ class DisaggService:
             revived.append(rid)
         return revived
 
+    # -------------------------------------------------------- fleet ops
+    # Mechanism for repro.fleet (docs/fleet.md): the MemoryGovernor and
+    # FleetController decide WHAT to preempt/drain; these methods own the
+    # page copies, ledger updates, tracer phases, and handle metrics.
+
+    def swap_out_request(self, rid: str) -> bool:
+        """Preempt a DECODING resident to the host swap pool.  The
+        request stays pending (state DECODING, stream paused); False when
+        it isn't resident or the pool's byte budget refuses the entry —
+        the caller degrades to park behavior."""
+        entry = self.pending.get(rid)
+        if entry is None or self.fleet is None:
+            return False
+        req = entry[0]
+        dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
+        if dw is None:
+            return False
+        swapped = dw.swap_out(rid)
+        if swapped is None:
+            return False
+        if not self.fleet.swap_pool.put(rid, swapped, swapped.nbytes):
+            dw.swap_in(swapped)  # budget refused; its blocks just freed, so this fits
+            return False
+        h = self.handles.get(rid)
+        if h is not None:
+            h.metrics.swapped_out += 1
+        # paused wall time reads as queue time — the lifecycle track
+        # stays a gap-free partition across a swap cycle (same
+        # convention as parking)
+        self.tracer.phase(("request", rid), "queue", swapped=True)
+        self.metrics.inc("fleet.preempt_swap")
+        return True
+
+    def swap_in_request(self, rid: str, worker_id: str) -> bool:
+        """Resume a swapped request on ``worker_id`` (any decode worker —
+        the entry is worker-agnostic, which lets drains migrate swapped
+        victims).  False when that worker can't hold it yet."""
+        if self.fleet is None:
+            return False
+        swapped = self.fleet.swap_pool.get(rid)
+        dw = self.decodes.get(worker_id)
+        if swapped is None or dw is None:
+            return False
+        if not dw.swap_in(swapped):
+            return False
+        self.fleet.swap_pool.pop(rid)
+        self.tracer.phase(("request", rid), "decode", worker=worker_id,
+                          resumed=True)
+        self.metrics.inc("fleet.resume_swap")
+        return True
+
+    def sacrifice_request(self, rid: str) -> bool:
+        """Preempt by sacrifice: drop the resident's decode KV and replay
+        through truncate-and-replay (``_restart``) — the replay re-pulls
+        the KV and regenerates the identical stream (decode is
+        deterministic)."""
+        entry = self.pending.get(rid)
+        if entry is None:
+            return False
+        req, tokens = entry
+        dw = self.decodes.get(req.decode_worker) if req.decode_worker else None
+        if dw is None or not dw.evict_resident(rid):
+            return False
+        h = self.handles.get(rid)
+        if h is not None:
+            h.metrics.sacrificed += 1
+        self.metrics.inc("fleet.preempt_sacrifice")
+        self._restart(req, tokens)
+        return True
+
+    def reassign_queued_off(self, worker_id: str) -> list[str]:
+        """Move every KV_QUEUED request off a draining decode worker
+        (their prefill KV stays put — only the pull destination changes).
+        Stragglers the router can't place yet stay assigned; the drain
+        waits for them."""
+        moved = []
+        for rid, (req, _) in list(self.pending.items()):
+            if req.decode_worker != worker_id \
+                    or req.state is not RequestState.KV_QUEUED:
+                continue
+            try:
+                self._assign_decode(req)
+            except NoWorkersError:
+                continue
+            if req.decode_worker != worker_id:
+                self.tracer.phase(("request", rid), "queue.kv",
+                                  decode_worker=req.decode_worker)
+                moved.append(rid)
+        return moved
+
     # ------------------------------------------------------------ loads
     def _report_loads(self, now: float | None = None) -> None:
         """Refresh every worker's LoadReport (the payload a worker's own
@@ -437,6 +541,13 @@ class DisaggService:
     def _dispatch(self, req: Request, tokens: np.ndarray, *,
                   force: bool = False, hedge: int = 1) -> None:
         self._report_loads()
+        if self.admission is not None and not force:
+            # KV-budget admission (docs/fleet.md): reject/defer before
+            # any prefill compute is spent.  force (failover re-dispatch)
+            # bypasses it — the request was already admitted once.
+            need = -(-req.prompt_len // self.model.BLOCK_SIZE)
+            self.admission.check(self.scheduler.loads("decode"), need,
+                                 req.request_id)
         decision = self.router.route(self._ctx(req), now=self.clock, force=force)
         req.prefill_worker = decision.prefill_worker
         req.decode_worker = decision.decode_worker
@@ -536,6 +647,8 @@ class DisaggService:
         if dispatch == "eager":
             try:
                 self._dispatch(req, tokens, hedge=hedge)
+            except AdmissionDeferred:
+                pass  # stays QUEUED_PREFILL; the loop dispatches later
             except Exception:
                 self.pending.pop(req.request_id, None)
                 self.handles.pop(req.request_id, None)

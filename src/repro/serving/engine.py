@@ -31,7 +31,7 @@ from repro.serving.blocks import BlockPool, OutOfBlocks
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState
 
-__all__ = ["PrefillWorker", "DecodeWorker"]
+__all__ = ["PrefillWorker", "DecodeWorker", "SwappedKV"]
 
 
 class PrefillWorker:
@@ -107,7 +107,7 @@ class PrefillWorker:
         after-the-fact OutOfBlocks would strand in PREFILLING."""
         need = BlockPool.blocks_for_tokens(len(tokens), self.block_size)
         if not self.pool.can_allocate(need):
-            raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
+            raise OutOfBlocks(f"need {need} blocks: pool {self.pool.describe()}")
         logits, state = self.model.prefill(
             self.params, {"tokens": jnp.asarray(tokens[None], jnp.int32)},
             max_blocks_margin=0, remat=False,
@@ -131,7 +131,7 @@ class PrefillWorker:
         dispatchable (QUEUED_PREFILL) for the serving loop's next tick."""
         need = BlockPool.blocks_for_tokens(len(tokens), self.block_size)
         if not self.pool.can_allocate(need):
-            raise OutOfBlocks(f"need {need} blocks, {self.pool.num_free} free")
+            raise OutOfBlocks(f"need {need} blocks: pool {self.pool.describe()}")
         req.to(RequestState.PREFILLING)
         first, req.prefill_blocks, req.block_hashes, req.kv_scales = \
             self._compute_and_park(tokens)
@@ -178,6 +178,29 @@ class _InFlight:
     req: Request
     first_token: int
     future: TransferFuture
+
+
+@dataclasses.dataclass
+class SwappedKV:
+    """A preempted resident's full KV, parked in host memory.
+
+    ``k_pages``/``v_pages`` are the float32 page arrays the resident's
+    compute path was using ([L, pages, bs, heads, hd]) — pulled AND
+    decode-appended pages, flushed through ``_invalidate_step`` first, so
+    a resume continues from byte-identical state.  The entry is worker-
+    agnostic: any decode worker can ``swap_in`` it (the pages carry no
+    worker-local identity), which is what lets a drain migrate swapped
+    victims off a retiring worker."""
+
+    req: Request
+    k_pages: np.ndarray
+    v_pages: np.ndarray
+    context_len: int
+    last_token: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.k_pages.nbytes + self.v_pages.nbytes)
 
 
 class DecodeWorker:
@@ -765,6 +788,76 @@ class DecodeWorker:
         self._install_step(batch, state, tokens)
         self._invalidate_step()
         return out
+
+    # ------------------------------------------------- memory-pressure
+    @property
+    def occupancy(self) -> float:
+        """KV-pool occupancy fraction (allocated + reserved over
+        capacity) — the signal memory-pressure preemption triggers on."""
+        s = self.pool.stats
+        return s.in_use / max(s.capacity, 1)
+
+    def swap_out(self, request_id: str) -> SwappedKV | None:
+        """Preempt a resident: copy its full KV — pulled AND decode-
+        appended pages — out of the slab, free its blocks, and remove it
+        from the batch.  Returns the host-memory entry (None if the
+        request isn't resident).  The request stays DECODING; it is
+        simply not stepped until ``swap_in`` restores it, so the token
+        stream pauses and resumes byte-identically (the pages round-trip
+        through the same float32 cache the compute path reads)."""
+        r = self.resident.get(request_id)
+        if r is None:
+            return None
+        self._invalidate_step()  # flush appended KV into the page cache
+        k, v = self._resident_pages(r)
+        del self.resident[request_id]
+        self._free_blocks(r.blocks)
+        r.req.decode_blocks = []
+        if self.metrics is not None:
+            self.metrics.inc("fleet.swapped_out")
+        return SwappedKV(r.req, k, v, r.context_len, r.last_token)
+
+    def swap_in(self, entry: SwappedKV) -> bool:
+        """Restore a swapped-out request into this worker's batch: land
+        its pages back in the slab (so later prefix retention and delta
+        grafts read real bytes), allocate fresh blocks, and re-insert the
+        resident with its page cache intact.  False when the pool can't
+        hold it yet (caller retries when capacity returns).  Restoring on
+        a DIFFERENT worker than the one that swapped it out is legal —
+        the entry is worker-agnostic (see ``SwappedKV``)."""
+        pages = int(entry.k_pages.shape[1])
+        if not self.pool.can_allocate(pages) and not self._evict_prefixes(pages):
+            return False
+        blocks = self.pool.allocate(pages)
+        for layer in range(self.cache.num_layers):
+            for j, blk in enumerate(blocks):
+                self.cache.write_block(layer, blk,
+                                       entry.k_pages[layer, j],
+                                       entry.v_pages[layer, j])
+        req = entry.req
+        req.decode_blocks = blocks
+        req.decode_worker = self.info.worker_id
+        self.resident[req.request_id] = _Resident(
+            req, blocks, entry.context_len, entry.last_token,
+            k_cached=entry.k_pages, v_cached=entry.v_pages,
+            cached_from=tuple(blocks))
+        if self.metrics is not None:
+            self.metrics.inc("fleet.swapped_in")
+        return True
+
+    def evict_resident(self, request_id: str) -> bool:
+        """Sacrifice a resident under memory pressure: drop its decode-
+        side KV entirely (blocks freed, batch membership removed).  The
+        serving layer replays it via truncate-and-replay (PR 5's
+        ``_restart``) — decode is deterministic, so the replay regenerates
+        the identical stream."""
+        r = self.resident.pop(request_id, None)
+        if r is None:
+            return False
+        self._invalidate_step()  # survivors keep their appended pages
+        self._free_blocks(r.blocks)
+        r.req.decode_blocks = []
+        return True
 
     # ------------------------------------------------------------ finish
     def finish(self, req_id: str) -> None:

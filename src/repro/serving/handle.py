@@ -77,6 +77,8 @@ class HandleMetrics:
     kv_bytes_reused: int = 0   # bytes a delta plan skipped (resident graft)
     hedged: bool = False       # a prefill twin was dispatched
     hedge_adopted: bool = False  # failover switched to the twin's KV
+    swapped_out: int = 0       # preempted to host memory (resumed later)
+    sacrificed: int = 0        # preempted by drop + truncate-and-replay
 
     @property
     def kv_reuse_frac(self) -> float:

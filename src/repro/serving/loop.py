@@ -39,6 +39,7 @@ import collections
 import dataclasses
 import time
 
+from repro.fleet.admission import AdmissionDeferred
 from repro.obs.trace import NULL_TRACER
 from repro.sched import AdmissionRejected, NoWorkersError
 from repro.serving.blocks import OutOfBlocks
@@ -86,12 +87,17 @@ class TickReport:
     tokens: dict[str, int] = dataclasses.field(default_factory=dict)
     finished: list[str] = dataclasses.field(default_factory=list)
     engine_processed: int = 0
+    # requests auto-revived from a failover park this tick
+    revived: list[str] = dataclasses.field(default_factory=list)
+    # fleet control-plane action counts (FleetController.step): nonzero
+    # entries like {"swapped_out": 1, "added": 1, "retired": 1}
+    fleet: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def progressed(self) -> bool:
         return bool(self.dispatched or self.rejected or self.admitted
                     or self.promoted or self.tokens or self.finished
-                    or self.engine_processed)
+                    or self.engine_processed or self.revived or self.fleet)
 
     def describe(self) -> str:
         """Every field on one line — what ServeLoopStalled embeds."""
@@ -99,7 +105,8 @@ class TickReport:
                 f"rejected={self.rejected} admitted={self.admitted} "
                 f"promoted={self.promoted} tokens={self.tokens} "
                 f"finished={self.finished} "
-                f"engine_processed={self.engine_processed}")
+                f"engine_processed={self.engine_processed} "
+                f"revived={self.revived} fleet={self.fleet}")
 
 
 class ServeLoop:
@@ -119,6 +126,9 @@ class ServeLoop:
         # report plus cumulative per-phase progress totals.
         self.last_report: TickReport | None = None
         self.phase_counters: collections.Counter[str] = collections.Counter()
+        # (n_prefill, n_decode) at the end of the last tick — parked
+        # requests auto-revive when this changes (capacity returned)
+        self._fleet_size: tuple[int, int] | None = None
 
     # ------------------------------------------------------------- tick
     def tick(self, now: float | None = None) -> TickReport:
@@ -132,6 +142,12 @@ class ServeLoop:
         clock = getattr(svc, "obs_clock", time.monotonic)
         tick_span = tracer.span("tick", track="loop", tick=self.ticks)
 
+        # Snapshot the dispatch backlog BEFORE step 1 drains it: the
+        # autoscaler's prefill-pressure signal (docs/fleet.md) must see
+        # the queue depth arrivals produced, not the post-dispatch zero.
+        backlog = sum(1 for req, _ in svc.pending.values()
+                      if req.state is RequestState.QUEUED_PREFILL)
+
         # 1. dispatch queued submissions (prefill + routing)
         with tracer.span("tick.dispatch", track="loop"):
             for rid, h in list(svc.handles.items()):
@@ -143,6 +159,8 @@ class ServeLoop:
                 try:
                     svc._dispatch(h.request, entry[1], hedge=h.hedge)
                     report.dispatched.append(rid)
+                except AdmissionDeferred:
+                    pass  # soft verdict: stays QUEUED, retried next tick
                 except AdmissionRejected as e:
                     svc._reject_queued(rid, e)
                     report.rejected.append(rid)
@@ -165,6 +183,29 @@ class ServeLoop:
                         and h.decode_finished()):
                     svc._finish_request(rid)
                     report.finished.append(rid)
+
+        # 2½. fleet control plane (docs/fleet.md) — preemption governor,
+        # autoscaler, drain advancement — BETWEEN retire and admit, so
+        # capacity it frees (a swap-out, a retired drain, a hot-added
+        # worker) is usable for admission in this same tick.
+        if getattr(svc, "fleet", None) is not None:
+            with tracer.span("tick.fleet", track="loop") as s:
+                report.fleet = svc.fleet.step(dispatch_backlog=backlog)
+                s.set(**report.fleet)
+
+        # 2¾. auto-revive parked requests when capacity returned this
+        # tick: the fleet changed size, a fleet action freed blocks, or
+        # a request finished (its blocks are back in the pool).  A bare
+        # retry every tick would inflate retry counters for nothing.
+        fleet_size = (len(svc.prefills), len(svc.decodes))
+        capacity_changed = (fleet_size != self._fleet_size
+                            or bool(report.finished) or bool(report.fleet))
+        self._fleet_size = fleet_size
+        if capacity_changed and any(
+                req.state is RequestState.FAILED
+                for req, _ in svc.pending.values()):
+            with tracer.span("tick.revive", track="loop"):
+                report.revived = svc.retry_parked()
 
         # 3. router-planned admission batches (KV_QUEUED -> pulls queued)
         with tracer.span("tick.admit", track="loop"):
@@ -229,7 +270,10 @@ class ServeLoop:
             "tokens": len(report.tokens),
             "finished": len(report.finished),
             "engine_processed": report.engine_processed,
+            "revived": len(report.revived),
         }
+        for k, n in report.fleet.items():
+            pc[f"fleet.{k}"] += n
         for k, n in moved.items():
             if n:
                 pc[k] += n

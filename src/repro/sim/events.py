@@ -31,6 +31,9 @@ from typing import Callable
 
 import numpy as np
 
+from repro.fleet.autoscale import Autoscaler as FleetAutoscaler
+from repro.fleet.config import DEFAULT_CLASS_RANK, FleetConfig
+from repro.sched.load import LoadReport
 from repro.sched.policies import Candidate, Policy, RouteRequest, make_policy
 from repro.serving.request import Request, RequestState
 from repro.sim.costs import CostModel
@@ -109,6 +112,36 @@ class SimConfig:
     # moved (per-span scales are noise at this scale); compute is
     # unchanged — the slab dequantizes on landing.
     quantize_transfer: bool = False
+    # ---- fleet mirror (docs/fleet.md): the SAME policy space as
+    # repro.fleet, so swap-vs-sacrifice and autoscaling choices rank in
+    # simulation before they run on the real substrate. ----
+    # Memory-pressure preemption (pull mode): what a decode worker does
+    # when its pool is >= preempt_high full and the head waiter doesn't
+    # fit even after prefix eviction.  "swap" parks the victim's KV in
+    # host memory (resume priced at swap_cost_scale x the wire transfer
+    # of its context); "sacrifice" drops it and replays from prefill.
+    preemption: str = "none"        # none | swap | sacrifice
+    victim_policy: str = "lifo"     # lifo | fifo | priority
+    preempt_high: float = 0.92
+    swap_cost_scale: float = 0.25
+    max_preemptions: int = 2
+    # Autoscaling (pull mode): the sim drives the REAL repro.fleet
+    # Autoscaler (same decision code) on LoadReports built from sim
+    # worker state, evaluated every autoscale_interval_s.  Shrink is
+    # drain-then-retire, exactly like the serving layer.
+    autoscale: bool = False
+    autoscale_interval_s: float = 5.0
+    autoscale_up: float = 0.85
+    autoscale_down: float = 0.25
+    autoscale_patience: int = 2
+    min_prefill: int = 1
+    max_prefill: int = 4
+    min_decode: int = 1
+    max_decode: int = 4
+    total_cap: int | None = None    # equal-peak-hardware P/D-ratio mode
+    # Completed-by-horizon accounting: requests DONE by horizon_s count
+    # as completed in SimResults.summary() (None = end of sim).
+    horizon_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -119,6 +152,22 @@ class SimResults:
     # wire vs what a delta plan served from resident prefix KV.
     pulled_tokens: dict[str, int] = dataclasses.field(default_factory=dict)
     reused_tokens: dict[str, int] = dataclasses.field(default_factory=dict)
+    # Fleet-mirror accounting: preemption action counts and the horizon
+    # for completed-by-horizon throughput (None = end of sim).
+    n_swapped: int = 0
+    n_sacrificed: int = 0
+    horizon_s: float | None = None
+
+    def completed_by(self, t: float | None = None) -> int:
+        """Requests DONE by ``t`` (default: the configured horizon; no
+        horizon = all finished requests) — the throughput metric that
+        makes park-only vs preemption comparable: parked work that never
+        ran counts as zero, not as 'still pending'."""
+        t = self.horizon_s if t is None else t
+        if t is None:
+            return len(self.requests)
+        return sum(1 for r in self.requests
+                   if r.done_s is not None and r.done_s <= t)
 
     def _metric(self, fn) -> list[float]:
         return [v for v in (fn(r) for r in self.requests) if v is not None]
@@ -154,6 +203,9 @@ class SimResults:
             "mean_reused_tokens": float(np.mean(list(self.reused_tokens.values()))
                                         if self.reused_tokens else 0.0),
             "kv_reuse_frac": self._reuse_frac(),
+            "completed": self.completed_by(),
+            "n_swapped": self.n_swapped,
+            "n_sacrificed": self.n_sacrificed,
         }
 
     def _reuse_frac(self) -> float:
@@ -188,6 +240,7 @@ class _PrefillWorker:
         self.held_tokens = 0      # KV held until COMPLETE (pull) / pushed (push)
         self.cap_tokens = cap_tokens
         self.slowdown = slowdown  # >1 = straggling node
+        self.draining = False     # no new work; retires when idle + empty
 
 
 class _DecodeWorker:
@@ -207,6 +260,12 @@ class _DecodeWorker:
         # LRU over insertion order; the held tokens stay in used_tokens
         # until eviction — the sim twin of DecodeWorker.prefix_cache.
         self.prefix_cache: dict[str, int] = {}
+        # Fleet mirror: swapped-out victims (FIFO resume order; base
+        # alloc tokens recharged at swap-in), drain flag, and in-flight
+        # pull count (a draining worker retires only when all are zero).
+        self.swapped: list[tuple[Request, int]] = []
+        self.draining = False
+        self.inflight_pulls = 0
 
     def free_tokens(self) -> int:
         return self.cap_tokens - self.used_tokens
@@ -224,12 +283,16 @@ class ClusterSim:
         self._seq = itertools.count()
         self.now = 0.0
         cap = cost.kv_capacity_tokens()
+        self._cap = cap
         slows = prefill_slowdowns or {}
         self.prefills = [
             _PrefillWorker(f"p{i}", cap, slows.get(f"p{i}", 1.0))
             for i in range(sim_cfg.n_prefill)
         ]
         self.decodes = [_DecodeWorker(f"d{i}", cap, sim_cfg) for i in range(sim_cfg.n_decode)]
+        # hot-added worker ids continue the seed numbering (never reused)
+        self._wid_p = itertools.count(sim_cfg.n_prefill)
+        self._wid_d = itertools.count(sim_cfg.n_decode)
         self.prefill_queue: list[Request] = []
         self.push_admission: list[Request] = []
         self._meta: dict[str, SimRequest] = {}
@@ -264,20 +327,56 @@ class ClusterSim:
             self.policy = make_policy("slo", classes={"standard": sim_cfg.slo_s})
         else:
             self.policy = make_policy(sim_cfg.policy)
+        # ---- fleet mirror ----
+        if sim_cfg.preemption not in ("none", "swap", "sacrifice"):
+            raise ValueError(
+                f"preemption must be none|swap|sacrifice, got {sim_cfg.preemption!r}")
+        if sim_cfg.victim_policy not in ("lifo", "fifo", "priority"):
+            raise ValueError(
+                f"victim_policy must be lifo|fifo|priority, got {sim_cfg.victim_policy!r}")
+        if sim_cfg.preemption != "none" and sim_cfg.mode != "pull":
+            raise ValueError("preemption models the pull-mode decode pool "
+                             f"(mode={sim_cfg.mode!r})")
+        if sim_cfg.autoscale and sim_cfg.mode != "pull":
+            raise ValueError(f"autoscale requires mode='pull' (got {sim_cfg.mode!r})")
+        self.n_swapped = 0
+        self.n_sacrificed = 0
+        self._preempt_count: dict[str, int] = {}
+        self._tok_at_preempt: dict[str, int] = {}
+        self._n_expected = 0
+        if sim_cfg.autoscale:
+            # the REAL autoscaler decision code (repro.fleet), fed
+            # LoadReports built from sim worker state — the decision
+            # path cannot drift between sim and serving layer
+            self.autoscaler = FleetAutoscaler(FleetConfig(
+                autoscale=True,
+                min_prefill=sim_cfg.min_prefill, max_prefill=sim_cfg.max_prefill,
+                min_decode=sim_cfg.min_decode, max_decode=sim_cfg.max_decode,
+                total_cap=sim_cfg.total_cap,
+                scale_up=sim_cfg.autoscale_up, scale_down=sim_cfg.autoscale_down,
+                patience=sim_cfg.autoscale_patience))
+        else:
+            self.autoscaler = None
 
     # ------------------------------------------------------------ events
     def _at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn))
 
     def run(self, sim_reqs: list[SimRequest]) -> SimResults:
+        self._n_expected = len(sim_reqs)
         for sr in sim_reqs:
             self._at(sr.arrival_s, lambda sr=sr: self._arrive(sr))
+        if self.autoscaler is not None:
+            self._at(self.cfg.autoscale_interval_s, self._autoscale_tick)
         while self._heap:
             self.now, _, fn = heapq.heappop(self._heap)
             fn()
         return SimResults(self.finished, self.rejected,
                           pulled_tokens=dict(self.pulled_tokens),
-                          reused_tokens=dict(self.reused_tokens))
+                          reused_tokens=dict(self.reused_tokens),
+                          n_swapped=self.n_swapped,
+                          n_sacrificed=self.n_sacrificed,
+                          horizon_s=self.cfg.horizon_s)
 
     # -------------------------------------------------------- scheduling
     def _ctx(self, req: Request) -> RouteRequest:
@@ -341,7 +440,8 @@ class ClusterSim:
     # ------------------------------------------------------- disagg flow
     def _arrive(self, sr: SimRequest) -> None:
         req = Request(sr.request_id, sr.prompt_len, sr.response_len, arrival_s=self.now,
-                      prefix_id=sr.prefix_id, prefix_len=sr.prefix_len)
+                      prefix_id=sr.prefix_id, prefix_len=sr.prefix_len,
+                      slo_class=sr.slo_class)
         self._meta[sr.request_id] = sr
         # Admission first, in EVERY mode (colocated must not silently
         # bypass the SLO controller).  Projection is O(queue); only pay
@@ -402,7 +502,7 @@ class ClusterSim:
         while self.prefill_queue:
             req = self.prefill_queue[0]
             cands = [w for w in self.prefills
-                     if w.busy_until <= self.now
+                     if not w.draining and w.busy_until <= self.now
                      and w.held_tokens + req.prompt_len <= w.cap_tokens]
             if not cands:
                 break  # every worker busy or HBM-full: wait
@@ -427,7 +527,8 @@ class ClusterSim:
         if req.state is not RequestState.PREFILLING or req.prefill_end_s is not None:
             return
         cand = [w for w in self.prefills
-                if w.busy_until <= self.now and w.wid != req.prefill_worker
+                if not w.draining and w.busy_until <= self.now
+                and w.wid != req.prefill_worker
                 and w.held_tokens + req.prompt_len <= w.cap_tokens]
         if not cand:
             return
@@ -446,7 +547,11 @@ class ClusterSim:
             return
         req.prefill_worker = w.wid  # the winner owns the KV to pull from
         req.prefill_end_s = self.now
-        req.token_times_s.append(self.now)  # first token from prefill
+        if not req.token_times_s:
+            # first token from prefill — a sacrificed request's replay
+            # keeps its ORIGINAL first-token time (the stream paused,
+            # it didn't restart from the caller's point of view)
+            req.token_times_s.append(self.now)
         if self.cfg.mode == "push":
             # transfer overlapped layer-by-layer; visible tail ≈ 1 layer
             tail = self._pair_layer_tail_s(req, req.decode_worker)
@@ -460,7 +565,8 @@ class ClusterSim:
             # cost-first policy while another has room (fall back to all
             # when everyone is full — the request queues per §4.3)
             need = self._reserved_tokens(req)
-            fitting = [x for x in self.decodes if x.free_tokens() >= need]
+            fitting = [x for x in self.decodes
+                       if not x.draining and x.free_tokens() >= need]
             d = self._pick_decode(req, fitting or None)
             req.decode_worker = d.wid
             d.kv_queue.append(req)
@@ -469,7 +575,9 @@ class ClusterSim:
 
     def _pick_decode(self, req: Request,
                      cands: list[_DecodeWorker] | None = None) -> _DecodeWorker:
-        cands = self.decodes if cands is None else cands
+        if cands is None:
+            # route around draining workers — unless that's everyone
+            cands = [d for d in self.decodes if not d.draining] or self.decodes
         chosen = self.policy.pick_decode(self._ctx(req), [
             Candidate(d.wid,
                       free_units=d.free_tokens(),
@@ -528,12 +636,17 @@ class ClusterSim:
                 need = self._reserved_tokens(req) - resident
                 if d.free_tokens() >= need:
                     break
-                if not self._evict_sim_prefix(d, keep=req.prefix_id):
-                    return  # pool full even after eviction: request queues
+                if self._evict_sim_prefix(d, keep=req.prefix_id):
+                    continue
+                # pool full even after prefix eviction: preempt a
+                # resident (fleet mirror) or leave the request queued
+                if not self._preempt_victim(d):
+                    return
             if resident and req.prefix_id in d.prefix_cache:
                 d.prefix_cache[req.prefix_id] = \
                     d.prefix_cache.pop(req.prefix_id)  # LRU touch
             d.kv_queue.pop(0)
+            d.inflight_pulls += 1
             d.used_tokens += need
             self._alloc_tokens[req.request_id] = need
             self.reused_tokens[req.request_id] = \
@@ -565,10 +678,12 @@ class ClusterSim:
         # COMPLETE(): prefill frees its copy
         w.held_tokens -= req.prompt_len
         self._try_start_prefills()
+        d = next(x for x in self.decodes if x.wid == req.decode_worker)
+        d.inflight_pulls -= 1
         if self.cfg.transfer_overlap != "layerwise":
             self._join_decode(req)  # layerwise mode joined at layer 0
-        d = next(x for x in self.decodes if x.wid == req.decode_worker)
         self._try_transfers(d)  # NIC freed: admit the next batch
+        self._try_swap_in(d)
 
     def _join_decode(self, req: Request) -> None:
         d = next(x for x in self.decodes if x.wid == req.decode_worker)
@@ -619,6 +734,8 @@ class ClusterSim:
 
     def _iteration_done(self, d: _DecodeWorker, batch: list[Request]) -> None:
         for r in batch:
+            if r not in d.active:
+                continue  # preempted (swapped/sacrificed) mid-iteration
             r.tokens_generated += 1
             r.token_times_s.append(self.now)
             if not self.cfg.reserve_response:
@@ -637,9 +754,153 @@ class ClusterSim:
                 self.finished.append(r)
         if self.cfg.mode == "pull":
             self._try_transfers(d)
+            self._try_swap_in(d)
         elif self.cfg.mode == "push":
             self._try_push_admissions()  # freed KV unblocks stalled arrivals
         self._schedule_iteration(d)
+
+    # ------------------------------------------- fleet mirror (preemption)
+    def _preempt_victim(self, d: _DecodeWorker) -> bool:
+        """Memory-pressure preemption, mirroring ``fleet.MemoryGovernor``:
+        free a resident decode by swap-out (host memory, resumed later)
+        or sacrifice (drop KV, truncate-and-replay through prefill).
+        Returns True if tokens were freed."""
+        cfg = self.cfg
+        if cfg.preemption == "none" or not d.active:
+            return False
+        if d.used_tokens / max(d.cap_tokens, 1) < cfg.preempt_high:
+            return False  # pressure below the trigger: let the pull queue
+        # anti-thrash eligibility: a bounded number of preemptions per
+        # request, and never re-preempt before the victim made progress
+        eligible = [
+            r for r in d.active
+            if self._preempt_count.get(r.request_id, 0) < cfg.max_preemptions
+            and r.tokens_generated > self._tok_at_preempt.get(r.request_id, -1)
+        ]
+        if not eligible:
+            return False
+        if cfg.victim_policy == "fifo":
+            r = eligible[0]           # oldest resident: earliest to rejoin
+        elif cfg.victim_policy == "priority":
+            # lowest SLO class first; ties broken LIFO (newest resident)
+            r = max(enumerate(eligible),
+                    key=lambda p: (DEFAULT_CLASS_RANK.get(p[1].slo_class, 1),
+                                   p[0]))[1]
+        else:  # lifo — newest resident has the least sunk decode work
+            r = eligible[-1]
+        rid = r.request_id
+        self._preempt_count[rid] = self._preempt_count.get(rid, 0) + 1
+        self._tok_at_preempt[rid] = r.tokens_generated
+        d.active.remove(r)
+        base = self._alloc_tokens.pop(rid, 0)
+        freed = base + (0 if cfg.reserve_response else r.tokens_generated)
+        d.used_tokens -= freed
+        if cfg.preemption == "swap":
+            d.swapped.append((r, base))  # KV parked host-side, state kept
+            self.n_swapped += 1
+            return True
+        # sacrifice: drop the KV and replay through prefill.  The caller's
+        # stream pauses and resumes (decode is deterministic), so the
+        # ORIGINAL first-token time survives — only later tokens re-emit.
+        r.retries += 1
+        r.tokens_generated = 0
+        r.prefill_end_s = None
+        r.transfer_start_s = r.transfer_end_s = None
+        r.decode_start_s = None
+        r.decode_worker = None
+        del r.token_times_s[1:]
+        r.to(RequestState.FAILED)
+        r.to(RequestState.QUEUED_PREFILL)
+        self.prefill_queue.append(r)
+        self.n_sacrificed += 1
+        self._at(self.now, lambda: self._try_start_prefills())
+        return True
+
+    def _try_swap_in(self, d: _DecodeWorker) -> None:
+        """Resume swapped-out requests (oldest first) once the pressure
+        that evicted them has cleared — never while pulls are still
+        queued (resuming under a waiting pull re-triggers the squeeze)."""
+        while d.swapped and not d.kv_queue:
+            r, base = d.swapped[0]
+            need = base + (0 if self.cfg.reserve_response else r.tokens_generated)
+            if d.free_tokens() < need:
+                return
+            d.swapped.pop(0)
+            d.used_tokens += need
+            self._alloc_tokens[r.request_id] = base
+            # swap-in cost: the full KV footprint re-crosses host<->device,
+            # cheaper than a network pull by swap_cost_scale
+            dt = self.cfg.swap_cost_scale * self.cost.transfer_s(
+                r.prompt_len + r.tokens_generated,
+                mode=self.cfg.transfer_mode,
+                coalesce_factor=self.cfg.coalesce_factor)
+            self._at(self.now + dt, lambda r=r, d=d: self._swap_rejoin(d, r))
+
+    def _swap_rejoin(self, d: _DecodeWorker, r: Request) -> None:
+        d.active.append(r)
+        if not d.iterating:
+            self._schedule_iteration(d)
+
+    # ------------------------------------------- fleet mirror (autoscale)
+    def _autoscale_tick(self) -> None:
+        """Periodic fleet evaluation: feed the REAL ``fleet.Autoscaler``
+        LoadReports built from sim worker state (tokens-as-blocks,
+        block_size=1) and apply its add/drain plan."""
+        p_reports = {
+            w.wid: LoadReport(w.wid, "prefill",
+                              free_blocks=max(0, w.cap_tokens - w.held_tokens),
+                              total_blocks=w.cap_tokens, block_size=1,
+                              t=self.now)
+            for w in self.prefills}
+        d_reports = {
+            d.wid: LoadReport(d.wid, "decode",
+                              free_blocks=d.free_tokens(),
+                              total_blocks=d.cap_tokens,
+                              queued_tokens=sum(r.prompt_len
+                                                for r in d.kv_queue),
+                              block_size=1, t=self.now)
+            for d in self.decodes}
+        draining = {w.wid: "prefill" for w in self.prefills if w.draining}
+        draining.update({d.wid: "decode" for d in self.decodes if d.draining})
+        for act in self.autoscaler.plan(p_reports, d_reports,
+                                        dispatch_backlog=len(self.prefill_queue),
+                                        draining=draining):
+            if act[0] == "add" and act[1] == "prefill":
+                self.prefills.append(
+                    _PrefillWorker(f"p{next(self._wid_p)}", self._cap))
+            elif act[0] == "add":
+                self.decodes.append(
+                    _DecodeWorker(f"d{next(self._wid_d)}", self._cap, self.cfg))
+            elif act[1] == "prefill":
+                next(x for x in self.prefills if x.wid == act[2]).draining = True
+            else:
+                dw = next(x for x in self.decodes if x.wid == act[2])
+                dw.draining = True
+                # reassign queued pulls onto live workers that fit them;
+                # what doesn't fit stays and drains out normally
+                for r in list(dw.kv_queue):
+                    need = self._reserved_tokens(r)
+                    fitting = [x for x in self.decodes
+                               if not x.draining and x.free_tokens() >= need]
+                    if not fitting:
+                        break
+                    dw.kv_queue.remove(r)
+                    tgt = self._pick_decode(r, fitting)
+                    r.decode_worker = tgt.wid
+                    tgt.kv_queue.append(r)
+                    self._try_transfers(tgt)
+        # advance drains: retire workers that have gone quiet
+        self.prefills = [w for w in self.prefills
+                         if not (w.draining and w.held_tokens <= 0
+                                 and w.busy_until <= self.now)]
+        self.decodes = [d for d in self.decodes
+                        if not (d.draining and not d.active and not d.kv_queue
+                                and not d.round_wait and not d.swapped
+                                and not d.inflight_pulls)]
+        self._try_start_prefills()  # hot-added capacity admits immediately
+        if len(self.finished) + len(self.rejected) < self._n_expected:
+            self._at(self.now + self.cfg.autoscale_interval_s,
+                     self._autoscale_tick)
 
     # --------------------------------------------------- colocated (vLLM)
     def _co_arrive(self, req: Request) -> None:

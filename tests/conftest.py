@@ -1,0 +1,18 @@
+"""Suite-wide fixtures.
+
+The XLA CPU backend segfaults inside ``backend_compile`` once enough
+live compiled executables accumulate in a single process (observed with
+jax 0.4.37: a full-suite run crashes deterministically compiling a
+computation that compiles fine in isolation).  Clearing the jit caches
+between test modules keeps the live-executable set bounded; each module
+recompiles what it needs, which costs a little wall clock and removes
+the cliff.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bound_live_xla_executables():
+    yield
+    jax.clear_caches()

@@ -19,9 +19,15 @@ class TestBasics:
     def test_all_or_nothing(self):
         p = BlockPool(4)
         p.allocate(3)
-        with pytest.raises(OutOfBlocks):
+        with pytest.raises(OutOfBlocks) as ei:
             p.allocate(2)
         assert p.num_free == 1  # nothing partially taken
+        # the failure message carries the pool occupancy snapshot so a
+        # preemption-threshold tune doesn't need a debugger attached
+        msg = str(ei.value)
+        assert "need 2 blocks" in msg
+        assert "3/4 used" in msg and "1 free" in msg
+        assert "shared" in msg and "reserved" in msg
 
     def test_contiguous_preferred(self):
         p = BlockPool(16)

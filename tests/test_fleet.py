@@ -1,0 +1,294 @@
+"""Fleet control plane: autoscaler planning, host swap pool, admission
+control, and end-to-end preemption correctness on the real substrate.
+
+Acceptance anchors (ISSUE 9):
+  * a swapped-out victim resumes token-identical (the page-cache
+    writeback preserved its appended KV) with NO extra wire pull;
+  * a sacrificed victim replays via truncate-and-replay and regenerates
+    the identical stream, with pulled_bytes counted exactly once per
+    actual pull (original + replay, never double);
+  * an admission-rejected handle reaches FAILED carrying the typed
+    ``KVBudgetExceeded`` (an ``AdmissionRejected`` subclass).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.fleet import (
+    AdmissionController,
+    AdmissionDeferred,
+    Autoscaler,
+    FleetConfig,
+    HostSwapPool,
+    KVBudgetExceeded,
+)
+from repro.models.registry import build_model
+from repro.sched import AdmissionRejected, LoadReport
+from repro.serving.disagg import DisaggService
+from repro.serving.handle import HandleStatus
+
+
+def _toks(cfg, seed, n=64):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32)
+
+
+# ----------------------------------------------------------- pure pieces
+class TestFleetConfig:
+    def test_enum_validation(self):
+        with pytest.raises(ValueError):
+            FleetConfig(preempt="evaporate")
+        with pytest.raises(ValueError):
+            FleetConfig(victim_policy="coinflip")
+        with pytest.raises(ValueError):
+            FleetConfig(admission_mode="maybe")
+
+
+class TestHostSwapPool:
+    def test_put_get_pop_fifo(self):
+        pool = HostSwapPool()
+        assert pool.put("a", "entry-a", 100)
+        assert pool.put("b", "entry-b", 50)
+        assert pool.ids() == ["a", "b"]  # FIFO resume order
+        assert pool.get("a") == "entry-a"
+        assert pool.pop("a") == "entry-a"
+        assert "a" not in pool and len(pool) == 1
+        assert pool.used_bytes == 50 and pool.peak_bytes == 150
+
+    def test_budget_refusal_leaves_pool_unchanged(self):
+        pool = HostSwapPool(capacity_bytes=100)
+        assert pool.put("a", "x", 80)
+        assert not pool.put("b", "y", 30)  # would exceed the budget
+        assert pool.ids() == ["a"] and pool.used_bytes == 80
+
+    def test_duplicate_put_rejected(self):
+        pool = HostSwapPool()
+        pool.put("a", "x", 1)
+        with pytest.raises(KeyError):
+            pool.put("a", "y", 1)
+
+
+def _reports(role, loads, *, t=0.0, total=100):
+    """wid -> LoadReport with the given load fractions (no queue)."""
+    return {
+        f"{role[0]}{i}": LoadReport(f"{role[0]}{i}", role,
+                                    free_blocks=int(total * (1 - f)),
+                                    total_blocks=total, t=t)
+        for i, f in enumerate(loads)
+    }
+
+
+class TestAutoscaler:
+    def test_hot_role_adds_after_patience(self):
+        a = Autoscaler(FleetConfig(autoscale=True, patience=2))
+        hot = _reports("decode", [0.95, 0.9])
+        cold = _reports("prefill", [0.1, 0.1])
+        assert a.plan(cold, hot) == []          # patience 1/2
+        assert ("add", "decode") in a.plan(cold, hot)
+
+    def test_backlog_counts_as_prefill_pressure(self):
+        a = Autoscaler(FleetConfig(autoscale=True, patience=1))
+        idle = _reports("prefill", [0.0, 0.0])
+        acts = a.plan(idle, _reports("decode", [0.5]), dispatch_backlog=4)
+        assert ("add", "prefill") in acts  # 4 queued / 2 workers = 2.0
+
+    def test_cold_role_drains_least_loaded(self):
+        a = Autoscaler(FleetConfig(autoscale=True, patience=1, min_decode=1))
+        acts = a.plan(_reports("prefill", [0.5]),
+                      _reports("decode", [0.4, 0.05]))
+        assert ("drain", "decode", "d1") in acts
+
+    def test_total_cap_shifts_ratio(self):
+        # at peak hardware, growing prefill drains a decode worker first
+        a = Autoscaler(FleetConfig(autoscale=True, patience=1,
+                                   total_cap=4, min_decode=1,
+                                   scale_down=0.0))  # decode never "cold"
+        acts = a.plan(_reports("prefill", [0.95, 0.95]),
+                      _reports("decode", [0.5, 0.4]))
+        assert ("drain", "decode", "d1") in acts
+        assert ("add", "prefill") in acts
+
+    def test_draining_role_left_alone(self):
+        a = Autoscaler(FleetConfig(autoscale=True, patience=1))
+        acts = a.plan(_reports("prefill", [0.1]),
+                      _reports("decode", [0.95, 0.95]),
+                      draining={"d1": "decode"})
+        assert acts == []  # decode capacity already in motion
+
+    def test_respects_max_bound(self):
+        a = Autoscaler(FleetConfig(autoscale=True, patience=1, max_decode=2))
+        acts = a.plan(_reports("prefill", [0.5]),
+                      _reports("decode", [0.95, 0.95]))
+        assert ("add", "decode") not in acts
+
+
+class TestAdmissionController:
+    def test_projected_fraction(self):
+        ac = AdmissionController(0.8)
+        reports = _reports("decode", [0.5, 0.5], total=100)
+        # 100 used + 40 needed over 200 total
+        assert ac.projected_fraction(reports, 40) == pytest.approx(0.7)
+
+    def test_reject_is_typed_admission_rejected(self):
+        ac = AdmissionController(0.6)
+        reports = _reports("decode", [0.5, 0.5], total=100)
+        with pytest.raises(KVBudgetExceeded) as ei:
+            ac.check(reports, 40, "r0")
+        assert isinstance(ei.value, AdmissionRejected)
+        assert "occupancy" in str(ei.value) and "r0" in str(ei.value)
+
+    def test_defer_mode_raises_soft_error(self):
+        ac = AdmissionController(0.6, mode="defer")
+        with pytest.raises(AdmissionDeferred) as ei:
+            ac.check(_reports("decode", [0.9]), 10, "r1")
+        # soft verdict: NOT an AdmissionRejected — the loop retries it
+        assert not isinstance(ei.value, AdmissionRejected)
+
+    def test_under_budget_passes(self):
+        ac = AdmissionController(0.9)
+        ac.check(_reports("decode", [0.1]), 5, "r2")  # no raise
+
+
+# ------------------------------------------------------- real substrate
+@pytest.fixture(scope="module")
+def service_setup():
+    cfg = get_smoke_config("deepseek-67b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _drive(svc, h, cap=200):
+    for _ in range(cap):
+        if h.finished:
+            return
+        svc.loop.tick()
+    raise AssertionError(f"{h.request_id} did not finish in {cap} ticks")
+
+
+class TestPreemptionCorrectness:
+    def test_swap_resume_token_identical_no_repull(self, service_setup):
+        cfg, model, params = service_setup
+        base = DisaggService(model, params, n_prefill=1, n_decode=1)
+        hb = base.submit(_toks(cfg, 7), max_new=6)
+        _drive(base, hb)
+        baseline_pulled = hb.metrics.kv_bytes_pulled
+
+        # preempt="none": the controller owns the swap pool but the
+        # governor is off, so the test controls the swap points
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            fleet=FleetConfig(preempt="none"))
+        h = svc.submit(_toks(cfg, 7), max_new=6)
+        while h.decoded < 2:
+            svc.loop.tick()
+        wid = h.request.decode_worker
+        assert svc.swap_out_request(h.request_id)
+        assert h.request_id in svc.fleet.swap_pool
+        frozen = len(h.tokens)
+        for _ in range(3):
+            svc.loop.tick()
+        assert len(h.tokens) == frozen, "stream advanced while swapped out"
+        assert h.status is HandleStatus.DECODING  # paused, not failed
+        assert svc.swap_in_request(h.request_id, wid)
+        _drive(svc, h)
+        assert h.tokens == hb.tokens
+        assert h.metrics.swapped_out == 1
+        # swap moves pages host<->device, never the wire: no extra pull
+        assert h.metrics.kv_bytes_pulled == baseline_pulled
+
+    def test_sacrifice_replay_identical_pull_counted_once(self, service_setup):
+        cfg, model, params = service_setup
+        base = DisaggService(model, params, n_prefill=1, n_decode=1)
+        hb = base.submit(_toks(cfg, 8), max_new=6)
+        _drive(base, hb)
+        baseline_pulled = hb.metrics.kv_bytes_pulled
+
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            fleet=FleetConfig(preempt="none"))
+        h = svc.submit(_toks(cfg, 8), max_new=6)
+        while h.decoded < 2:
+            svc.loop.tick()
+        assert svc.sacrifice_request(h.request_id)
+        _drive(svc, h)
+        assert h.tokens == hb.tokens
+        assert h.metrics.sacrificed == 1 and h.request.retries >= 1
+        # exactly one replay pull on top of the original — each pulled
+        # byte counted once per actual wire crossing, never double
+        assert h.metrics.kv_bytes_pulled == 2 * baseline_pulled
+
+    def test_governor_relieves_pressure_automatically(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=0,
+                            fleet=FleetConfig(preempt="swap",
+                                              preempt_high=0.5,
+                                              victim_policy="fifo"))
+        svc.add_decode_worker(num_blocks=4)
+        # A fills the 4-block pool (3 prompt blocks + growth); B (2
+        # blocks) cannot admit until the governor swaps A out
+        a = svc.submit(_toks(cfg, 9, 96), max_new=24, slo_class="batch")
+        b = svc.submit(_toks(cfg, 10, 64), max_new=4)
+        _drive(svc, b)
+        assert b.done
+        assert a.metrics.swapped_out >= 1
+        assert svc.metrics.counter("fleet.preempt_swap").value >= 1
+        _drive(svc, a, cap=400)  # the victim resumes and finishes too
+        assert a.done
+
+    def test_admission_rejected_handle_fails_typed(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=8,
+                            fleet=FleetConfig(admission_budget=0.25))
+        h = svc.submit(_toks(cfg, 11, 96), max_new=4, dispatch="queued")
+        svc.loop.tick()  # queued dispatch: rejection surfaces on the handle
+        assert h.failed and h.status is HandleStatus.FAILED
+        assert isinstance(h.error, KVBudgetExceeded)
+        assert isinstance(h.error, AdmissionRejected)
+        with pytest.raises(KVBudgetExceeded):
+            h.result()
+        assert svc.metrics.counter("fleet.admission_rejected").value >= 1
+
+    def test_admission_defer_holds_then_serves(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            num_blocks=8,
+                            fleet=FleetConfig(admission_budget=0.25,
+                                              admission_mode="defer"))
+        h = svc.submit(_toks(cfg, 12, 96), max_new=2)
+        # deferred, not failed: the request waits for occupancy headroom
+        assert not h.failed
+        assert svc.metrics.counter("fleet.admission_deferred").value >= 1
+
+
+class TestFleetController:
+    def test_autoscale_adds_prefill_under_backlog(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=1,
+                            fleet=FleetConfig(autoscale=True, patience=1,
+                                              max_prefill=2, max_decode=1))
+        for s in (13, 14, 15):
+            svc.submit(_toks(cfg, s), max_new=2, dispatch="queued")
+        before = len(svc.prefills)
+        for _ in range(40):
+            svc.loop.tick()
+            if len(svc.prefills) > before:
+                break
+        assert len(svc.prefills) > before
+        assert svc.metrics.counter("fleet.autoscale_add_prefill").value >= 1
+
+    def test_drain_then_retire_decode_worker(self, service_setup):
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=1, n_decode=2,
+                            fleet=FleetConfig(preempt="none"))
+        wid = next(iter(svc.decodes))
+        svc.router.mark_draining(wid)
+        svc.fleet.draining[wid] = "decode"
+        for _ in range(4):
+            svc.loop.tick()
+        assert wid not in svc.decodes  # idle drain retires immediately
+        assert wid not in svc.fleet.draining
+        # the fleet still serves
+        h = svc.submit(_toks(cfg, 16), max_new=2)
+        _drive(svc, h)
+        assert h.done

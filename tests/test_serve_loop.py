@@ -185,6 +185,23 @@ class TestHandleStreaming:
         svc.loop.run_until_idle()
         assert h.done and len(h.tokens) == 3
 
+    def test_parked_request_auto_revives_on_tick(self, service_setup):
+        """Regression: a request parked FAILED by failover overflow
+        revives through ``tick()`` ALONE once live requests finish and
+        their blocks return — no user-driven ``retry_parked()`` call."""
+        cfg, model, params = service_setup
+        svc = DisaggService(model, params, n_prefill=2, n_decode=1,
+                            num_blocks=8)
+        hs = [svc.submit(_toks(cfg, 90 + i), max_new=2) for i in range(6)]
+        svc.fail_prefill_worker("p0")  # survivor can't absorb everyone
+        parked = [h for h in hs if h.request.state is RequestState.FAILED]
+        assert parked  # overflow parked at least one request
+        for _ in range(400):
+            if all(h.finished for h in hs):
+                break
+            svc.loop.tick()
+        assert all(h.done and len(h.tokens) == 3 for h in hs)
+
     def test_legacy_direct_finish_does_not_wedge_the_loop(self, service_setup):
         """A request finished through the direct DecodeWorker path (the
         fig_overlap/fig_continuous benchmark pattern) is swept by the

@@ -5,7 +5,15 @@ import pytest
 from repro.configs import get_config
 from repro.sim.costs import CostModel, H100_NODE, V5E_POD_SLICE
 from repro.sim.events import ClusterSim, SimConfig
-from repro.sim.workloads import ARXIV, SHAREGPT, fixed_requests, sample_requests
+from repro.sim.workloads import (
+    ARXIV,
+    SHAREGPT,
+    SimRequest,
+    bursty_requests,
+    diurnal_requests,
+    fixed_requests,
+    sample_requests,
+)
 
 
 @pytest.fixture(scope="module")
@@ -65,6 +73,50 @@ class TestConservation:
             assert r.tokens_generated == r.max_new_tokens - 1
             assert len(r.token_times_s) == r.max_new_tokens
 
+    @pytest.mark.parametrize("preemption", ["swap", "sacrifice"])
+    def test_preemption_conserves_every_request(self, cost, preemption):
+        """Under memory pressure the preemption path must still land
+        every request (swap victims resume, sacrifice victims replay)
+        and drain the pools — and the pressure must actually have
+        triggered preemptions, or the test proves nothing."""
+        cap = cost.kv_capacity_tokens()
+        reqs = [SimRequest(f"hog-{i}", 0.5 * i, int(0.45 * cap), 2000,
+                           slo_class="batch") for i in range(2)]
+        reqs += [SimRequest(f"short-{i}", 2.0 + i, int(0.18 * cap), 64,
+                            slo_class="interactive") for i in range(4)]
+        sim = ClusterSim(cost, SimConfig(
+            mode="pull", n_prefill=2, n_decode=1,
+            preemption=preemption, preempt_high=0.7,
+            victim_policy="priority"))
+        res = sim.run(list(reqs))
+        assert len(res.requests) == len(reqs)
+        assert all(r.done_s is not None for r in res.requests)
+        preempted = res.n_swapped if preemption == "swap" else res.n_sacrificed
+        assert preempted > 0
+        for d in sim.decodes:
+            assert d.used_tokens == 0 and not d.active and not d.kv_queue
+            assert not d.swapped
+        for p in sim.prefills:
+            assert p.held_tokens == 0
+
+    def test_autoscale_conserves_every_request(self, cost):
+        """Elastic sizing (hot-adds, drain-then-retire) must not lose or
+        duplicate requests; retired workers leave nothing behind."""
+        reqs = bursty_requests(SHAREGPT, qps_on=1.0, qps_off=0.05,
+                               mean_on_s=30.0, mean_off_s=30.0,
+                               duration_s=120.0, seed=11)
+        sim = ClusterSim(cost, SimConfig(
+            mode="pull", n_prefill=2, n_decode=2, autoscale=True,
+            total_cap=4, min_prefill=1, max_prefill=3,
+            min_decode=1, max_decode=3, autoscale_interval_s=2.0))
+        res = sim.run(list(reqs))
+        assert len(res.requests) == len(reqs)
+        assert all(r.done_s is not None for r in res.requests)
+        for d in sim.decodes:
+            assert d.used_tokens == 0 and not d.active and not d.kv_queue
+        for p in sim.prefills:
+            assert p.held_tokens == 0
+
     def test_timeline_monotone(self, cost):
         reqs = sample_requests(ARXIV, qps=0.2, duration_s=120, seed=2)
         res = ClusterSim(cost, SimConfig()).run(reqs)
@@ -121,3 +173,39 @@ class TestWorkloads:
     def test_poisson_rate(self):
         reqs = sample_requests(SHAREGPT, qps=1.0, duration_s=4000, seed=1)
         assert 0.9 * 4000 < len(reqs) < 1.1 * 4000
+
+    def test_bursty_seeded_deterministic(self):
+        kw = dict(qps_on=2.0, qps_off=0.1, mean_on_s=30.0, mean_off_s=30.0,
+                  duration_s=600.0, seed=3)
+        a = bursty_requests(SHAREGPT, **kw)
+        b = bursty_requests(SHAREGPT, **kw)
+        # byte-for-byte: the SAME list drives sim AND real substrate
+        assert [(r.request_id, r.arrival_s, r.prompt_len, r.response_len)
+                for r in a] == \
+               [(r.request_id, r.arrival_s, r.prompt_len, r.response_len)
+                for r in b]
+        assert bursty_requests(SHAREGPT, **{**kw, "seed": 4}) != a
+
+    def test_bursty_rate_between_phases(self):
+        reqs = bursty_requests(SHAREGPT, qps_on=2.0, qps_off=0.1,
+                               mean_on_s=50.0, mean_off_s=50.0,
+                               duration_s=4000.0, seed=5)
+        ts = [r.arrival_s for r in reqs]
+        assert ts == sorted(ts) and 0.0 <= ts[0] and ts[-1] < 4000.0
+        # mean rate sits strictly between the off and on phase rates
+        assert 0.1 * 4000 < len(reqs) < 2.0 * 4000
+
+    def test_diurnal_rate_between_trough_and_peak(self):
+        reqs = diurnal_requests(SHAREGPT, qps_peak=2.0, qps_trough=0.2,
+                                period_s=1000.0, duration_s=4000.0, seed=6)
+        ts = [r.arrival_s for r in reqs]
+        assert ts == sorted(ts) and ts[-1] < 4000.0
+        assert 0.2 * 4000 < len(reqs) < 2.0 * 4000
+        assert reqs == diurnal_requests(SHAREGPT, qps_peak=2.0,
+                                        qps_trough=0.2, period_s=1000.0,
+                                        duration_s=4000.0, seed=6)
+
+    def test_diurnal_rejects_inverted_rates(self):
+        with pytest.raises(ValueError, match="exceeds"):
+            diurnal_requests(SHAREGPT, qps_peak=0.5, qps_trough=1.0,
+                             period_s=100.0, duration_s=10.0)
