@@ -6,8 +6,18 @@ Paper effects reproduced:
   (b) more prefill workers cut prefill time (2.34×-4.04× from 1P→2P);
       3P can REGRESS total latency: extra prefill throughput floods the
       decode worker and intensifies decode contention.
+
+By default every cell runs on homogeneous reference nodes.  Pass
+``--cluster PRESET[:SEED]`` to replay the grid on a generated
+heterogeneous ``ClusterSpec`` instead — the SAME seeded cluster source
+``benchmarks.fig_topology`` sweeps (``repro.topo.generate_cluster``), so
+the two studies cannot drift apart on what "the cluster" is.  Each xP yD
+cell then asks the placement planner for the best machines at exactly
+those pinned role counts (the rest idle as spares).
 """
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import Row
 from repro.configs import get_config
@@ -19,11 +29,21 @@ from repro.sim.workloads import fixed_requests
 GRID = [(8192, 2.0), (16384, 1.0), (32768, 0.5), (65536, 0.3)]
 
 
-def _run(prompt, resp, qps, n_p, n_d) -> dict:
+def _run(prompt, resp, qps, n_p, n_d, spec=None) -> dict:
     cfg = get_config("mistral-large-123b")
     reqs = fixed_requests(prompt, resp, qps=qps, duration_s=200, seed=5)
-    sim = ClusterSim(CostModel(cfg, H100_NODE),
-                     SimConfig(n_prefill=n_p, n_decode=n_d, mode="pull"))
+    cost = CostModel(cfg, H100_NODE)
+    sim_cfg = SimConfig(n_prefill=n_p, n_decode=n_d, mode="pull")
+    if spec is None:
+        sim = ClusterSim(cost, sim_cfg)
+    else:
+        from repro.topo import PlacementPlanner, TopologyBinding, WorkloadShape
+        planner = PlacementPlanner(shape=WorkloadShape.from_cost(
+            cost, prompt_len=prompt, response_len=resp))
+        placement = planner.plan(spec, n_prefill=n_p, n_decode=n_d)
+        sim = ClusterSim(cost, sim_cfg,
+                         topology=TopologyBinding(spec, placement,
+                                                  planner=planner))
     res = sim.run(reqs)
     s = res.summary()
     b = res.mean_breakdown()
@@ -36,31 +56,55 @@ def _run(prompt, resp, qps, n_p, n_d) -> dict:
     }
 
 
-def run() -> list[Row]:
+def run(spec=None) -> list[Row]:
+    tag = "" if spec is None else f";cluster={spec.name}"
     rows = []
     # (a) decode scaling at response 1024
     for prompt, qps in GRID[:3]:
-        r1 = _run(prompt, 1024, qps, 1, 1)
-        r3 = _run(prompt, 1024, qps, 1, 3)
+        r1 = _run(prompt, 1024, qps, 1, 1, spec)
+        r3 = _run(prompt, 1024, qps, 1, 3, spec)
         rows.append(Row(
             f"fig12a/{prompt}-1024/1P3D", r3["total"] * 1e6,
             f"decode_stage_cut={1 - r3['decode_stage']/max(r1['decode_stage'],1e-9):.2f};"
-            f"prefill_stage_cut={1 - r3['prefill_stage']/max(r1['prefill_stage'],1e-9):.2f}",
+            f"prefill_stage_cut={1 - r3['prefill_stage']/max(r1['prefill_stage'],1e-9):.2f}"
+            f"{tag}",
         ))
     # (b) prefill scaling at response 128
     for prompt, qps in GRID:
-        r1 = _run(prompt, 128, qps, 1, 1)
-        r2 = _run(prompt, 128, qps, 2, 1)
+        r1 = _run(prompt, 128, qps, 1, 1, spec)
+        r2 = _run(prompt, 128, qps, 2, 1, spec)
         rows.append(Row(
             f"fig12b/{prompt}-128/2P1D", r2["total"] * 1e6,
             f"prefill_speedup={r1['prefill_stage']/max(r2['prefill_stage'],1e-9):.2f}x;"
-            f"paper_range=2.34-4.04x",
+            f"paper_range=2.34-4.04x{tag}",
         ))
     # (b) the 3P regression
-    r2 = _run(16384, 1024, 1.5, 2, 1)
-    r3 = _run(16384, 1024, 1.5, 3, 1)
+    r2 = _run(16384, 1024, 1.5, 2, 1, spec)
+    r3 = _run(16384, 1024, 1.5, 3, 1, spec)
     rows.append(Row(
         "fig12b/16384-1024/3P1D-regression", r3["total"] * 1e6,
-        f"total_vs_2P={r3['total']/max(r2['total'],1e-9):.3f}x;paper=>1 (regression)",
+        f"total_vs_2P={r3['total']/max(r2['total'],1e-9):.3f}x;"
+        f"paper=>1 (regression){tag}",
     ))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", default=None, metavar="PRESET[:SEED]",
+                    help="replay the grid on a generated heterogeneous "
+                         "ClusterSpec (e.g. hetero_rack:0) — the same "
+                         "seeded source fig_topology sweeps")
+    args = ap.parse_args()
+    spec = None
+    if args.cluster is not None:
+        from repro.topo import generate_cluster
+        preset, _, seed = args.cluster.partition(":")
+        spec = generate_cluster(preset, int(seed) if seed else 0)
+    print("name,us_per_call,derived")
+    for row in run(spec=spec):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -32,12 +32,13 @@ MODULES = [
     "fig_overlap",
     "fig_prefix_reuse",
     "fig_sched_policies",
+    "fig_topology",
     "kernel_bench",
 ]
 
 # The PR number stamped into BENCH_<pr>.json artifacts.  Bump when a new
 # PR wants its own trajectory point (see repro.obs.bench.load_trajectory).
-BENCH_PR = 9
+BENCH_PR = 10
 
 
 def select_modules(prefixes: list[str]) -> list[str]:

@@ -66,6 +66,12 @@ class LinkModel:
 
     bandwidth_Bps: float = 50e9          # 400 Gbps NIC
     post_overhead_s: float = 2e-6        # posting one RDMA verb
+    # One-way propagation delay of the path (0 for a rack-local link;
+    # tens of ms for a cross-region hop).  Charged ONCE per logical
+    # pull by the router's ``modeled_transfer_s`` and the simulator's
+    # pair costs — not per read, since in-flight reads pipeline and only
+    # the first byte pays the propagation latency.
+    latency_s: float = 0.0
     rpc_latency_s: float = 1.0e-3        # Fig. 3 step 1: metadata RPC
     gather_launch_s: float = 3.25e-3     # Fig. 3 step 2: gather kernel + copy to buffer
     cpu_sync_s: float = 1.3e-3           # Fig. 3 step 3: GPU sync + NIC op (fixed part)

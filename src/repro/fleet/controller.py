@@ -91,14 +91,20 @@ class FleetController:
                                        draining=self.draining)
         for act in actions:
             if act[0] == "add":
-                self._add(act[1])
-                counts["added"] = counts.get("added", 0) + 1
+                if self._add(act[1]) is not None:
+                    counts["added"] = counts.get("added", 0) + 1
             else:  # ("drain", role, wid)
                 self._drain(act[1], act[2])
                 counts["draining"] = counts.get("draining", 0) + 1
 
-    def _add(self, role: str) -> str:
+    def _add(self, role: str) -> str | None:
         svc = self.service
+        if svc.topology is not None and not svc.topology.has_spare(role):
+            # topology-bound fleet: every machine in the ClusterSpec
+            # already holds a role — there is nothing to hot-add onto.
+            # Skip (with a metric) rather than conjure hardware.
+            svc.metrics.inc("fleet.autoscale_no_spare")
+            return None
         if role == "prefill":
             wid = svc.add_prefill_worker(num_blocks=self.cfg.worker_blocks)
         else:
@@ -151,6 +157,8 @@ class FleetController:
             if alive:
                 # graceful leave: same membership event as any teardown
                 svc.scheduler.remove_worker(wid)
+                if svc.topology is not None:
+                    svc.topology.release_worker(wid)  # machine -> spare pool
                 svc.metrics.inc("fleet.workers_retired")
                 svc.tracer.instant("fleet.retire", track="loop",
                                    worker=wid, role=role)

@@ -60,6 +60,13 @@ def main() -> None:
                     metavar="FRAC",
                     help="reject dispatch when projected decode KV "
                          "occupancy exceeds FRAC of fleet capacity")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="serve on a heterogeneous cluster topology "
+                         "(docs/topology.md): either PRESET[:SEED] for a "
+                         "generated cluster (e.g. hetero_rack:3) or a "
+                         "path to a ClusterSpec JSON file; the placement "
+                         "planner assigns roles, per-pair link costs "
+                         "drive routing (overrides --prefill-workers)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -73,10 +80,32 @@ def main() -> None:
         fleet = FleetConfig(autoscale=args.autoscale, preempt=args.preempt,
                             victim_policy=args.victim_policy,
                             admission_budget=args.admission_budget)
-    svc = DisaggService(model, params, n_prefill=args.prefill_workers,
-                        num_blocks=256, tracer=tracer,
-                        quantize_transfer=args.quantize_transfer,
-                        fleet=fleet)
+    if args.topology is not None:
+        import os
+
+        from repro.topo import ClusterSpec, PRESETS, generate_cluster
+        if os.path.exists(args.topology):
+            with open(args.topology) as f:
+                spec = ClusterSpec.from_json(f.read())
+        else:
+            preset, _, seed = args.topology.partition(":")
+            if preset not in PRESETS:
+                raise SystemExit(
+                    f"--topology {args.topology!r}: no such file, and not a "
+                    f"PRESET[:SEED] (presets: {sorted(PRESETS)})")
+            spec = generate_cluster(preset, int(seed) if seed else 0)
+        svc = DisaggService.from_cluster_spec(
+            model, params, spec, num_blocks=256, tracer=tracer,
+            quantize_transfer=args.quantize_transfer, fleet=fleet)
+        b = svc.topology
+        print(f"[serve] topology {spec.name}: "
+              f"prefill={[f'{w}={b.machine(w).machine_id}' for w in sorted(svc.prefills)]} "
+              f"decode={[f'{w}={b.machine(w).machine_id}' for w in sorted(svc.decodes)]}")
+    else:
+        svc = DisaggService(model, params, n_prefill=args.prefill_workers,
+                            num_blocks=256, tracer=tracer,
+                            quantize_transfer=args.quantize_transfer,
+                            fleet=fleet)
 
     rng = np.random.default_rng(0)
     prefix_len = int(args.prompt_len * args.shared_prefix_frac)

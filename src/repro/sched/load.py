@@ -90,10 +90,15 @@ def modeled_transfer_s(
     ``span_bytes`` is one K-or-V span of a block (one read transaction);
     ``coalesce_factor`` is the average spans-per-RDMA-op the engine
     achieves (§4.2 coalescing).  Post overheads scale with ops, wire time
-    with bytes at the link's effective utilization.
+    with bytes at the link's effective utilization, and the link's
+    propagation latency is charged once per pull (pipelined reads mean
+    only the first byte pays it) — on a cross-region link this term can
+    dominate small deltas, which is exactly what topology-aware routing
+    needs to see (docs/topology.md).
     """
     if kv_bytes <= 0:
         return 0.0
     n_spans = -(-kv_bytes // max(span_bytes, 1))
     n_ops = max(1, int(n_spans / max(coalesce_factor, 1.0)))
-    return n_ops * link.post_overhead_s + kv_bytes / (utilization * link.bandwidth_Bps)
+    return (n_ops * link.post_overhead_s + link.latency_s
+            + kv_bytes / (utilization * link.bandwidth_Bps))

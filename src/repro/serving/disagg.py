@@ -158,6 +158,12 @@ class DisaggService:
         self._next_base = 0x7F00_0000_0000  # bump allocator for KV slabs
         self.clock = 0.0
 
+        # Heterogeneous-cluster binding (topo.TopologyBinding), set by
+        # from_cluster_spec: maps worker ids to machines, sizes pools by
+        # VRAM, feeds the router per-pair links, and picks which spare
+        # machine a fleet hot-add claims.  None = homogeneous service.
+        self.topology = None
+
         self.prefills: dict[str, PrefillWorker] = {}
         self.decodes: dict[str, DecodeWorker] = {}
         self.conn_mgrs: dict[str, ConnectionManager] = {}
@@ -193,6 +199,36 @@ class DisaggService:
         for _ in range(n_prefill):
             self.add_prefill_worker(num_blocks=num_blocks)
 
+    # ---------------------------------------------------- topology entry
+    @classmethod
+    def from_cluster_spec(cls, model, params, spec, *, placement=None,
+                          planner=None, seed: int = 0, num_blocks: int = 256,
+                          policy: str = "network_aware", **kwargs):
+        """Build a service from a ``topo.ClusterSpec``: plan prefill/
+        decode roles over the topology (or take an explicit
+        ``placement``), size each worker's KV pool by its machine's VRAM
+        (``num_blocks`` = the largest machine's pool), and feed the
+        router the per-pair ``LinkModel``s so ``network_aware`` /
+        ``prefix_affinity`` routing prices real bandwidth + latency.
+
+        The SAME spec replays in the simulator
+        (``ClusterSim(..., topology=TopologyBinding(spec, placement))``)
+        byte-for-byte — ``spec.to_json()`` is the shared artifact.
+        """
+        from repro.topo import PlacementPlanner, TopologyBinding
+        planner = planner if planner is not None else PlacementPlanner()
+        if placement is None:
+            placement = planner.plan(spec, seed=seed)
+        binding = TopologyBinding(spec, placement, planner=planner)
+        svc = cls(model, params, n_prefill=0, n_decode=0, policy=policy,
+                  **kwargs)
+        svc.topology = binding
+        for _ in placement.decode:
+            svc.add_decode_worker(num_blocks=num_blocks)
+        for _ in placement.prefill:
+            svc.add_prefill_worker(num_blocks=num_blocks)
+        return svc
+
     # -------------------------------------------------- address space
     def _slab_bytes(self, num_blocks: int) -> int:
         cfg = self.model.cfg
@@ -210,8 +246,24 @@ class DisaggService:
         return base
 
     # ------------------------------------------------------- membership
+    def _bind_topology(self, role: str, wid: str, num_blocks: int) -> int:
+        """Topology-bound pool sizing: ``num_blocks`` is the reference
+        (largest-VRAM) machine's pool; the bound machine gets a
+        VRAM-proportional share.  Hot-adds claim the best spare machine
+        (raising ``topo.NoSpareMachine`` on an exhausted cluster) and
+        refresh the router's per-pair link map."""
+        topo = self.topology
+        if topo is None:
+            return num_blocks
+        m = topo.machine(wid)
+        if m is None:  # hot-add beyond the placement: claim a spare
+            m = topo.add_worker(role, wid)
+        return max(1, round(num_blocks * m.profile.vram_bytes
+                            / topo.spec.max_vram))
+
     def add_prefill_worker(self, *, num_blocks: int = 256) -> str:
         wid = f"p{next(self._wid_seq['p'])}"  # monotonic: ids never reused
+        num_blocks = self._bind_topology("prefill", wid, num_blocks)
         w = PrefillWorker(_winfo(wid, "prefill"), self.model, self.params,
                           num_blocks=num_blocks,
                           base_address=self._alloc_base(num_blocks),
@@ -221,10 +273,13 @@ class DisaggService:
         # seed liveness at the CURRENT clock, else a worker added late is
         # instantly reapable
         self.scheduler.add_worker(w.info, now=self.clock)  # broadcast → CONNECT
+        if self.topology is not None:
+            self.router.links.update(self.topology.links())
         return wid
 
     def add_decode_worker(self, *, num_blocks: int = 256) -> str:
         wid = f"d{next(self._wid_seq['d'])}"
+        num_blocks = self._bind_topology("decode", wid, num_blocks)
         w = DecodeWorker(_winfo(wid, "decode"), self.model, self.params,
                          num_blocks=num_blocks, engine=self.engine,
                          base_address=self._alloc_base(num_blocks),
@@ -238,6 +293,8 @@ class DisaggService:
         self.decodes[wid] = w
         self.conn_mgrs[wid] = cm
         self.scheduler.add_worker(w.info, now=self.clock)
+        if self.topology is not None:
+            self.router.links.update(self.topology.links())
         return wid
 
     def fail_prefill_worker(self, wid: str) -> None:

@@ -244,9 +244,11 @@ class _PrefillWorker:
 
 
 class _DecodeWorker:
-    def __init__(self, wid: str, cap_tokens: int, cfg: SimConfig):
+    def __init__(self, wid: str, cap_tokens: int, cfg: SimConfig,
+                 slowdown: float = 1.0):
         self.wid = wid
         self.cap_tokens = cap_tokens
+        self.slowdown = slowdown  # >1 = slower HBM than the reference node
         self.used_tokens = 0
         self.active: list[Request] = []
         self.kv_queue: list[Request] = []      # pull: waiting for decode KV
@@ -276,7 +278,9 @@ class ClusterSim:
 
     def __init__(self, cost: CostModel, sim_cfg: SimConfig,
                  *, prefill_slowdowns: dict[str, float] | None = None,
-                 link_scales: dict[tuple[str, str], float] | None = None):
+                 link_scales: dict[tuple[str, str], float] | None = None,
+                 symmetric_links: bool = False,
+                 topology=None):
         self.cost = cost
         self.cfg = sim_cfg
         self._heap: list = []
@@ -284,12 +288,31 @@ class ClusterSim:
         self.now = 0.0
         cap = cost.kv_capacity_tokens()
         self._cap = cap
-        slows = prefill_slowdowns or {}
-        self.prefills = [
-            _PrefillWorker(f"p{i}", cap, slows.get(f"p{i}", 1.0))
-            for i in range(sim_cfg.n_prefill)
-        ]
-        self.decodes = [_DecodeWorker(f"d{i}", cap, sim_cfg) for i in range(sim_cfg.n_decode)]
+        self._slowdowns = dict(prefill_slowdowns or {})
+        # Heterogeneous topology (topo.TopologyBinding): per-machine
+        # capability scales and per-pair bandwidth/latency replayed from
+        # the SAME ClusterSpec the real service binds — mutually
+        # exclusive with the flat link_scales/prefill_slowdowns knobs.
+        if topology is not None:
+            if link_scales:
+                raise ValueError("topology and link_scales are mutually "
+                                 "exclusive — the binding derives pair costs")
+            if prefill_slowdowns:
+                raise ValueError("topology and prefill_slowdowns are mutually "
+                                 "exclusive — the binding derives slowdowns")
+            if sim_cfg.mode == "colocated":
+                raise ValueError("topology models a disaggregated cluster "
+                                 f"(mode={sim_cfg.mode!r})")
+            if (topology.n_prefill, topology.n_decode) != \
+                    (sim_cfg.n_prefill, sim_cfg.n_decode):
+                raise ValueError(
+                    f"topology binds {topology.n_prefill}P+{topology.n_decode}D "
+                    f"but SimConfig says {sim_cfg.n_prefill}P+{sim_cfg.n_decode}D")
+        self.topology = topology
+        self.prefills = [self._new_prefill(f"p{i}")
+                         for i in range(sim_cfg.n_prefill)]
+        self.decodes = [self._new_decode(f"d{i}")
+                        for i in range(sim_cfg.n_decode)]
         # hot-added worker ids continue the seed numbering (never reused)
         self._wid_p = itertools.count(sim_cfg.n_prefill)
         self._wid_d = itertools.count(sim_cfg.n_decode)
@@ -304,8 +327,12 @@ class ClusterSim:
         self.reused_tokens: dict[str, int] = {}
         self._alloc_tokens: dict[str, int] = {}
         # per-(prefill, decode) link multiplier on transfer time — the
-        # skewed topology the network-aware policy exploits (NetKV)
-        self.link_scales = dict(link_scales or {})
+        # skewed topology the network-aware policy exploits (NetKV).
+        # Keys are validated against the worker-id space up front: a typo
+        # or a reversed (decode, prefill) pair used to silently fall back
+        # to 1.0 and quietly un-skew the experiment.
+        self.link_scales = self._validate_link_scales(
+            link_scales or {}, symmetric_links)
         if sim_cfg.transfer_overlap not in (
                 "pipelined", "blocking", "overlapped", "layerwise"):
             raise ValueError(
@@ -358,6 +385,56 @@ class ClusterSim:
         else:
             self.autoscaler = None
 
+    # ----------------------------------------------------------- topology
+    def _new_prefill(self, wid: str) -> _PrefillWorker:
+        topo = self.topology
+        if topo is None:
+            return _PrefillWorker(wid, self._cap, self._slowdowns.get(wid, 1.0))
+        if topo.machine(wid) is None:  # hot-add: claim the best spare
+            topo.add_worker("prefill", wid)
+        cap = max(1, int(self._cap * topo.cap_scale(wid, self.cost.hw.hbm_bytes)))
+        return _PrefillWorker(
+            wid, cap, topo.prefill_slowdown(wid, self.cost.hw.peak_flops))
+
+    def _new_decode(self, wid: str) -> _DecodeWorker:
+        topo = self.topology
+        if topo is None:
+            return _DecodeWorker(wid, self._cap, self.cfg)
+        if topo.machine(wid) is None:
+            topo.add_worker("decode", wid)
+        cap = max(1, int(self._cap * topo.cap_scale(wid, self.cost.hw.hbm_bytes)))
+        return _DecodeWorker(
+            wid, cap, self.cfg,
+            slowdown=topo.decode_slowdown(wid, self.cost.hw.hbm_bw))
+
+    def _validate_link_scales(self, scales, symmetric: bool):
+        n_p = max(self.cfg.n_prefill,
+                  self.cfg.max_prefill if self.cfg.autoscale else 0)
+        n_d = max(self.cfg.n_decode,
+                  self.cfg.max_decode if self.cfg.autoscale else 0)
+        pids = {f"p{i}" for i in range(n_p)}
+        dids = {f"d{i}" for i in range(n_d)}
+        out: dict[tuple[str, str], float] = {}
+        for (a, b), v in scales.items():
+            if a in pids and b in dids:
+                key = (a, b)
+            elif a in dids and b in pids:
+                if not symmetric:
+                    raise ValueError(
+                        f"link_scales key {(a, b)} is (decode, prefill) — "
+                        "keys are directed (prefill, decode); pass "
+                        "symmetric_links=True for undirected scales")
+                key = (b, a)
+            else:
+                raise ValueError(
+                    f"link_scales key {(a, b)} references unknown worker "
+                    f"ids (prefill: {sorted(pids)}, decode: {sorted(dids)})")
+            if key in out and out[key] != v:
+                raise ValueError(f"conflicting link_scales for pair {key}: "
+                                 f"{out[key]} vs {v}")
+            out[key] = v
+        return out
+
     # ------------------------------------------------------------ events
     def _at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn))
@@ -392,6 +469,16 @@ class ClusterSim:
             return 1.0
         return self.link_scales.get((req.prefill_worker, decode_wid), 1.0)
 
+    def _pair_cost(self, req: Request, decode_wid: str) -> tuple[float, float]:
+        """(bandwidth scale, propagation latency) for the request's
+        (prefill, decode) pair: from the bound topology when present,
+        else the flat link_scales multiplier (zero latency)."""
+        if self.topology is None or req.prefill_worker is None:
+            return self._link_scale(req, decode_wid), 0.0
+        ref_bw = self.cost.hw.link.bandwidth_Bps
+        return (self.topology.pair_scale(req.prefill_worker, decode_wid, ref_bw),
+                self.topology.pair_latency_s(req.prefill_worker, decode_wid))
+
     def _resident_tokens(self, req: Request, d: "_DecodeWorker") -> int:
         """Prefix tokens of ``req`` already resident on ``d`` — what a
         delta plan grafts instead of pulling."""
@@ -405,7 +492,8 @@ class ClusterSim:
         d = next(x for x in self.decodes if x.wid == decode_wid)
         suffix = req.prompt_len - self._resident_tokens(req, d)
         wire_scale = 0.5 if self.cfg.quantize_transfer else 1.0
-        return wire_scale * self._link_scale(req, decode_wid) * self.cost.transfer_s(
+        scale, latency_s = self._pair_cost(req, decode_wid)
+        return latency_s + wire_scale * scale * self.cost.transfer_s(
             suffix, mode=self.cfg.transfer_mode,
             coalesce_factor=self.cfg.coalesce_factor)
 
@@ -417,7 +505,10 @@ class ClusterSim:
         d = next(x for x in self.decodes if x.wid == decode_wid)
         suffix = req.prompt_len - self._resident_tokens(req, d)
         wire_scale = 0.5 if self.cfg.quantize_transfer else 1.0
-        return wire_scale * self._link_scale(req, decode_wid) * \
+        scale, latency_s = self._pair_cost(req, decode_wid)
+        # layer 0 cannot land before the first byte crosses the path, so
+        # the propagation latency is part of the visible tail too
+        return latency_s + wire_scale * scale * \
             self.cost.transfer_layer_tail_s(
                 suffix, mode=self.cfg.transfer_mode,
                 coalesce_factor=self.cfg.coalesce_factor)
@@ -728,7 +819,7 @@ class ClusterSim:
             start = max(start, d.pull_busy_until)
         batch = batch[: self.cfg.max_decode_batch]
         active_tokens = sum(r.prompt_len + r.tokens_generated for r in batch)
-        dt = self.cost.decode_step_s(active_tokens, len(batch))
+        dt = self.cost.decode_step_s(active_tokens, len(batch)) * d.slowdown
         d.iter_end = start + dt
         self._at(start + dt, lambda d=d, batch=batch: self._iteration_done(d, batch))
 
@@ -866,11 +957,11 @@ class ClusterSim:
                                         dispatch_backlog=len(self.prefill_queue),
                                         draining=draining):
             if act[0] == "add" and act[1] == "prefill":
-                self.prefills.append(
-                    _PrefillWorker(f"p{next(self._wid_p)}", self._cap))
+                if self.topology is None or self.topology.has_spare("prefill"):
+                    self.prefills.append(self._new_prefill(f"p{next(self._wid_p)}"))
             elif act[0] == "add":
-                self.decodes.append(
-                    _DecodeWorker(f"d{next(self._wid_d)}", self._cap, self.cfg))
+                if self.topology is None or self.topology.has_spare("decode"):
+                    self.decodes.append(self._new_decode(f"d{next(self._wid_d)}"))
             elif act[1] == "prefill":
                 next(x for x in self.prefills if x.wid == act[2]).draining = True
             else:
@@ -889,14 +980,20 @@ class ClusterSim:
                     r.decode_worker = tgt.wid
                     tgt.kv_queue.append(r)
                     self._try_transfers(tgt)
-        # advance drains: retire workers that have gone quiet
-        self.prefills = [w for w in self.prefills
-                         if not (w.draining and w.held_tokens <= 0
-                                 and w.busy_until <= self.now)]
-        self.decodes = [d for d in self.decodes
-                        if not (d.draining and not d.active and not d.kv_queue
-                                and not d.round_wait and not d.swapped
-                                and not d.inflight_pulls)]
+        # advance drains: retire workers that have gone quiet (their
+        # machines return to the topology's spare pool)
+        retire_p = [w for w in self.prefills
+                    if w.draining and w.held_tokens <= 0
+                    and w.busy_until <= self.now]
+        retire_d = [d for d in self.decodes
+                    if d.draining and not d.active and not d.kv_queue
+                    and not d.round_wait and not d.swapped
+                    and not d.inflight_pulls]
+        if self.topology is not None:
+            for w in retire_p + retire_d:
+                self.topology.release_worker(w.wid)
+        self.prefills = [w for w in self.prefills if w not in retire_p]
+        self.decodes = [d for d in self.decodes if d not in retire_d]
         self._try_start_prefills()  # hot-added capacity admits immediately
         if len(self.finished) + len(self.rejected) < self._n_expected:
             self._at(self.now + self.cfg.autoscale_interval_s,

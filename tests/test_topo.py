@@ -1,0 +1,471 @@
+"""Topology subsystem tests (docs/topology.md).
+
+Covers the cluster model (validated spec, seeded generator, JSON
+round-trip), the placement planner's invariants (hypothesis: exactly one
+role per machine, >=1 per role, never below the same-seed random
+baseline, deterministic), the binding math the sim and router consume,
+network-aware routing under ASYMMETRIC per-pair costs (directed links:
+the cheap direction wins), the flat ``link_scales`` back-compat contract
+(validation + symmetric fallback + degenerate-topology equivalence), and
+the real-service topology wiring (``from_cluster_spec``, topology-aware
+hot-add, ``NoSpareMachine``, the autoscaler's no-spare metric).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterScheduler
+from repro.core.connection import ChipInfo, WorkerInfo
+from repro.sched import LoadReport, RequestRouter, RouteRequest
+from repro.sim.costs import CostModel, H100_NODE
+from repro.sim.events import ClusterSim, SimConfig
+from repro.sim.workloads import fixed_requests
+from repro.topo import (
+    PRESETS,
+    PROFILES,
+    ClusterGenerator,
+    ClusterSpec,
+    Link,
+    MachineProfile,
+    MachineSpec,
+    NoSpareMachine,
+    Placement,
+    PlacementPlanner,
+    TopologyBinding,
+    WorkloadShape,
+    generate_cluster,
+    random_placement,
+)
+
+
+@pytest.fixture(scope="module")
+def cost():
+    from repro.configs import get_config
+
+    return CostModel(get_config("mistral-large-123b"), H100_NODE)
+
+
+def h100_spec(n: int, links=()) -> ClusterSpec:
+    """Homogeneous reference-node cluster (the degenerate topology)."""
+    return ClusterSpec(
+        name=f"flat{n}",
+        machines=tuple(MachineSpec(f"m{i}", PROFILES["8xh100"])
+                       for i in range(n)),
+        links=tuple(links))
+
+
+# ----------------------------------------------------------- spec + gen
+class TestSpec:
+    def test_duplicate_machine_ids_rejected(self):
+        with pytest.raises(ValueError, match="duplicate machine ids"):
+            ClusterSpec("bad", machines=(
+                MachineSpec("m0", PROFILES["8xh100"]),
+                MachineSpec("m0", PROFILES["8xa100"])))
+
+    def test_unknown_link_endpoint_rejected(self):
+        with pytest.raises(ValueError, match="unknown machine"):
+            ClusterSpec("bad",
+                        machines=(MachineSpec("m0", PROFILES["8xh100"]),
+                                  MachineSpec("m1", PROFILES["8xh100"])),
+                        links=(Link("m0", "mX", bandwidth_Bps=1e9),))
+
+    def test_duplicate_link_rejected(self):
+        with pytest.raises(ValueError, match="duplicate link"):
+            h100_spec(2, links=(Link("m0", "m1", bandwidth_Bps=1e9),
+                                Link("m0", "m1", bandwidth_Bps=2e9)))
+
+    def test_link_validation(self):
+        with pytest.raises(ValueError, match="self-link"):
+            Link("m0", "m0", bandwidth_Bps=1e9)
+        with pytest.raises(ValueError, match="non-positive bandwidth"):
+            Link("m0", "m1", bandwidth_Bps=0.0)
+        with pytest.raises(ValueError, match="negative latency"):
+            Link("m0", "m1", bandwidth_Bps=1e9, latency_s=-1e-3)
+        with pytest.raises(ValueError, match="unknown tier"):
+            Link("m0", "m1", bandwidth_Bps=1e9, tier="wan")
+        with pytest.raises(ValueError, match="empty cluster"):
+            ClusterSpec("bad", machines=())
+
+    def test_unlisted_pair_defaults_to_nic_limited_rack_link(self):
+        spec = ClusterSpec("t", machines=(
+            MachineSpec("m0", PROFILES["8xh100"]),   # 400G NIC
+            MachineSpec("m1", PROFILES["8xl4"])))    # 100G NIC
+        lk = spec.link("m0", "m1")
+        assert lk.bandwidth_Bps == PROFILES["8xl4"].nic_Bps
+        assert lk.tier == "rack" and lk.latency_s == 0.0
+
+    def test_json_round_trip_is_stable(self):
+        spec = generate_cluster("geo_pair", 3)
+        wire = spec.to_json()
+        again = ClusterSpec.from_json(wire)
+        assert again.to_json() == wire
+        assert again.ids() == spec.ids()
+        assert again.link("m0", "m1") == spec.link("m0", "m1")
+
+    def test_generator_deterministic_per_seed(self):
+        for preset in PRESETS:
+            a = generate_cluster(preset, 5).to_json()
+            b = generate_cluster(preset, 5).to_json()
+            assert a == b, f"{preset}: same seed produced different specs"
+        assert generate_cluster("hetero_rack", 0).to_json() != \
+            generate_cluster("hetero_rack", 1).to_json()
+
+    def test_generator_asymmetric_directions(self):
+        spec = generate_cluster("geo_pair", 0)
+        ids = spec.ids()
+        assert any(
+            spec.link(a, b).bandwidth_Bps != spec.link(b, a).bandwidth_Bps
+            for a in ids for b in ids if a != b), \
+            "asymmetric generator produced a fully symmetric cluster"
+        sym = dataclasses.replace(PRESETS["geo_pair"], asymmetric=False)
+        spec = sym.generate(0)
+        for a in spec.ids():
+            for b in spec.ids():
+                if a != b:
+                    assert spec.link(a, b).bandwidth_Bps == \
+                        spec.link(b, a).bandwidth_Bps
+
+    def test_cross_region_links_slower_and_laggier(self):
+        gen = PRESETS["geo_pair"]
+        spec = gen.generate(2)
+        for lk in spec.links:
+            src = spec.machine(lk.src)
+            dst = spec.machine(lk.dst)
+            if src.region == dst.region:
+                assert lk.tier == "rack"
+                assert lk.latency_s <= gen.intra_latency_s[1]
+            else:
+                assert lk.tier == "cross_region"
+                assert lk.latency_s >= gen.cross_latency_s[0]
+                assert lk.bandwidth_Bps <= gen.cross_bw_gbps[1] * 1e9 / 8
+
+
+# -------------------------------------------------------------- planner
+class TestPlanner:
+    def test_plan_partitions_every_machine(self):
+        spec = generate_cluster("hetero_rack", 0)
+        p = PlacementPlanner().plan(spec)
+        assert sorted(p.prefill + p.decode) == sorted(spec.ids())
+        assert not (set(p.prefill) & set(p.decode))
+        assert p.prefill and p.decode
+
+    def test_plan_deterministic(self):
+        spec = generate_cluster("geo_triad", 4)
+        planner = PlacementPlanner()
+        assert planner.plan(spec, seed=3) == planner.plan(spec, seed=3)
+
+    def test_pinned_counts_respected(self):
+        spec = generate_cluster("geo_pair", 0)
+        p = PlacementPlanner().plan(spec, n_prefill=2, n_decode=3)
+        assert len(p.prefill) == 2 and len(p.decode) == 3
+        with pytest.raises(ValueError, match="cannot place"):
+            PlacementPlanner().plan(spec, n_prefill=8, n_decode=8)
+
+    def test_plan_never_below_random_baseline(self):
+        planner = PlacementPlanner()
+        for preset in PRESETS:
+            spec = generate_cluster(preset, 1)
+            planned = planner.plan(spec)
+            for seed in range(5):
+                rand = random_placement(spec, seed=seed, planner=planner)
+                assert planned.score >= rand.score - 1e-9, \
+                    f"{preset}: random seed {seed} beat the planner"
+
+    def test_score_charges_the_cross_partition_link(self, cost):
+        """A fast prefill machine with only a slow path to decode must
+        score below the same machines joined by a fast path."""
+        planner = PlacementPlanner(shape=WorkloadShape.from_cost(cost))
+        fast = h100_spec(2, links=(Link("m0", "m1", bandwidth_Bps=50e9),))
+        slow = h100_spec(2, links=(Link("m0", "m1", bandwidth_Bps=1e9),))
+        s_fast = planner.score(fast, ["m0"], ["m1"])
+        s_slow = planner.score(slow, ["m0"], ["m1"])
+        assert s_slow < s_fast
+
+    def test_placement_validation(self):
+        with pytest.raises(ValueError, match=">=1 prefill"):
+            Placement(prefill=(), decode=("m0",))
+        with pytest.raises(ValueError, match="both roles"):
+            Placement(prefill=("m0",), decode=("m0",))
+
+
+# -------------------------------------------------------------- binding
+class TestBinding:
+    def test_wid_mapping_positional_over_sorted_ids(self):
+        spec = h100_spec(4)
+        b = TopologyBinding(spec, Placement(prefill=("m2", "m0"),
+                                            decode=("m3", "m1")))
+        # Placement sorts: prefill=(m0, m2) -> p0, p1; decode=(m1, m3)
+        assert b.machine("p0").machine_id == "m0"
+        assert b.machine("p1").machine_id == "m2"
+        assert b.machine("d0").machine_id == "m1"
+        assert b.machine("d1").machine_id == "m3"
+        assert b.machine("d9") is None
+        assert b.spares == ()
+
+    def test_scales_are_capability_ratios(self):
+        spec = ClusterSpec("t", machines=(
+            MachineSpec("m0", PROFILES["8xh100"]),
+            MachineSpec("m1", PROFILES["8xa100"])))
+        b = TopologyBinding(spec, Placement(prefill=("m0",), decode=("m1",)))
+        a100 = PROFILES["8xa100"]
+        h100 = PROFILES["8xh100"]
+        assert b.prefill_slowdown("p0", h100.peak_flops) == 1.0
+        assert b.decode_slowdown("d0", h100.hbm_Bps) == \
+            h100.hbm_Bps / a100.hbm_Bps
+        assert b.cap_scale("d0", h100.vram_bytes) == \
+            a100.vram_bytes / h100.vram_bytes
+        # pair cost: the directed prefill->decode link, NIC-limited
+        assert b.pair_scale("p0", "d0", 50e9) == 50e9 / a100.nic_Bps
+        assert b.pair_latency_s("p0", "d0") == 0.0
+
+    def test_spare_lifecycle_and_no_spare(self):
+        spec = h100_spec(3)
+        b = TopologyBinding(spec, Placement(prefill=("m0",), decode=("m1",)))
+        assert b.spares == ("m2",)
+        assert b.has_spare("prefill")
+        m = b.add_worker("prefill", "p1")
+        assert m.machine_id == "m2" and b.spares == ()
+        with pytest.raises(NoSpareMachine):
+            b.add_worker("decode", "d1")
+        with pytest.raises(ValueError, match="already bound"):
+            b.add_worker("prefill", "p1")
+        b.release_worker("p1")
+        assert b.spares == ("m2",)
+
+    def test_pick_spare_maximizes_planner_score(self, cost):
+        """With a planner attached, a hot-add claims the spare whose
+        addition maximizes max-flow — not just the beefiest machine."""
+        # m2 (H100) has only a starved link to the decode machine; m3
+        # (slower A100) has a fat one.  A decode-side... prefill add
+        # must prefer m3 despite m2's higher FLOPs.
+        spec = ClusterSpec("t", machines=(
+            MachineSpec("m0", PROFILES["8xa100"]),
+            MachineSpec("m1", PROFILES["8xh100"]),
+            MachineSpec("m2", PROFILES["8xh100"]),
+            MachineSpec("m3", PROFILES["8xa100"])),
+            links=(Link("m2", "m1", bandwidth_Bps=0.1e9),
+                   Link("m3", "m1", bandwidth_Bps=25e9)))
+        planner = PlacementPlanner(shape=WorkloadShape.from_cost(cost))
+        b = TopologyBinding(spec, Placement(prefill=("m0",), decode=("m1",)),
+                            planner=planner)
+        assert b.pick_spare("prefill") == "m3"
+
+
+# -------------------------------------------- asymmetric-cost routing
+def _asym_spec() -> ClusterSpec:
+    """m0 prefill; m1/m2 decode.  FORWARD m0->m1 is fast and m0->m2 is
+    starved; the REVERSE directions are deliberately opposite, so a
+    router that priced the wrong direction would flip its pick."""
+    return h100_spec(3, links=(
+        Link("m0", "m1", bandwidth_Bps=50e9),        # cheap forward
+        Link("m1", "m0", bandwidth_Bps=0.5e9),       # expensive reverse
+        Link("m0", "m2", bandwidth_Bps=0.5e9),       # expensive forward
+        Link("m2", "m0", bandwidth_Bps=50e9)))       # cheap reverse
+
+
+def _router(links) -> RequestRouter:
+    cs = ClusterScheduler()
+    for wid, role in (("p0", "prefill"), ("d0", "decode"), ("d1", "decode")):
+        cs.add_worker(WorkerInfo(wid, role, f"host-{wid}",
+                                 (ChipInfo(0, f"ici://{wid}/0"),)))
+        cs.heartbeat(wid, 0.0, load=LoadReport(wid, role, 64, 64))
+    return RequestRouter(cs, "network_aware", links=links)
+
+
+class TestAsymmetricRouting:
+    def test_router_prices_the_forward_direction(self):
+        b = TopologyBinding(_asym_spec(),
+                            Placement(prefill=("m0",), decode=("m1", "m2")))
+        r = _router(b.links())
+        d = r.route(RouteRequest("r0", 4096, kv_bytes=64 << 20))
+        assert d.decode_worker == "d0", \
+            "network_aware did not pick the cheap m0->m1 direction"
+
+    def test_router_charges_link_latency(self):
+        """Equal bandwidth, one path with cross-region latency: the
+        low-latency pair must win (latency_s flows through
+        modeled_transfer_s once per pull)."""
+        spec = h100_spec(3, links=(
+            Link("m0", "m1", bandwidth_Bps=25e9, latency_s=0.0),
+            Link("m0", "m2", bandwidth_Bps=25e9, latency_s=30e-3,
+                 tier="cross_region")))
+        b = TopologyBinding(spec,
+                            Placement(prefill=("m0",), decode=("m1", "m2")))
+        r = _router(b.links())
+        # tiny KV: wire time ~0, so the 30 ms propagation dominates
+        d = r.route(RouteRequest("r0", 128, kv_bytes=1 << 16))
+        assert d.decode_worker == "d0"
+
+    def test_sim_routes_down_the_cheap_direction(self, cost):
+        b = TopologyBinding(_asym_spec(),
+                            Placement(prefill=("m0",), decode=("m1", "m2")))
+        sim = ClusterSim(cost, SimConfig(mode="pull", n_prefill=1,
+                                         n_decode=2, policy="network_aware"),
+                         topology=b)
+        reqs = fixed_requests(16384, 32, qps=0.2, duration_s=40, seed=3)
+        res = sim.run(list(reqs))
+        assert res.requests and all(
+            r.decode_worker == "d0" for r in res.requests), \
+            "sim's network_aware routing ignored the directed pair costs"
+
+
+# -------------------------------------------- link_scales back-compat
+class TestLinkScales:
+    def test_flat_config_unchanged(self, cost):
+        """Regression: the pre-topology flat form still works as-is."""
+        reqs = fixed_requests(16384, 32, qps=0.3, duration_s=40, seed=4)
+        sim = ClusterSim(cost, SimConfig(mode="pull", n_prefill=1, n_decode=2,
+                                         policy="network_aware"),
+                         link_scales={("p0", "d1"): 5.0})
+        res = sim.run(list(reqs))
+        assert len(res.requests) == len(reqs)
+
+    def test_reversed_pair_rejected_without_symmetric(self, cost):
+        with pytest.raises(ValueError, match="keys are directed"):
+            ClusterSim(cost, SimConfig(n_prefill=1, n_decode=2),
+                       link_scales={("d1", "p0"): 5.0})
+
+    def test_unknown_worker_rejected(self, cost):
+        with pytest.raises(ValueError, match="unknown"):
+            ClusterSim(cost, SimConfig(n_prefill=1, n_decode=2),
+                       link_scales={("p0", "d7"): 5.0})
+
+    def test_symmetric_fallback_normalizes_reversed_keys(self, cost):
+        """(d, p) keys under symmetric_links=True behave exactly like
+        the (p, d) form — same sim, same numbers."""
+        reqs = fixed_requests(16384, 32, qps=0.3, duration_s=40, seed=4)
+        runs = {}
+        for name, kw in {
+            "forward": dict(link_scales={("p0", "d1"): 5.0}),
+            "reversed": dict(link_scales={("d1", "p0"): 5.0},
+                             symmetric_links=True),
+        }.items():
+            sim = ClusterSim(cost, SimConfig(mode="pull", n_prefill=1,
+                                             n_decode=2), **kw)
+            assert sim.link_scales == {("p0", "d1"): 5.0}
+            runs[name] = sim.run(list(reqs)).summary()
+        assert runs["forward"] == runs["reversed"]
+
+    def test_conflicting_symmetric_values_rejected(self, cost):
+        with pytest.raises(ValueError, match="conflict"):
+            ClusterSim(cost, SimConfig(n_prefill=1, n_decode=2),
+                       link_scales={("p0", "d1"): 5.0, ("d1", "p0"): 2.0},
+                       symmetric_links=True)
+
+    def test_topology_excludes_flat_knobs(self, cost):
+        b = TopologyBinding(h100_spec(2),
+                            Placement(prefill=("m0",), decode=("m1",)))
+        cfg = SimConfig(mode="pull", n_prefill=1, n_decode=1)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            ClusterSim(cost, cfg, topology=b,
+                       link_scales={("p0", "d0"): 2.0})
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            ClusterSim(cost, cfg, topology=b,
+                       prefill_slowdowns={"p0": 2.0})
+        with pytest.raises(ValueError, match="binds 1P\\+1D"):
+            ClusterSim(cost, SimConfig(mode="pull", n_prefill=2, n_decode=1),
+                       topology=b)
+
+    def test_degenerate_topology_matches_flat_sim(self, cost):
+        """A homogeneous reference-node ClusterSpec (default NIC-limited
+        links = the reference 400G link) must reproduce the flat sim
+        EXACTLY — scales all 1.0, latency 0."""
+        reqs = fixed_requests(16384, 64, qps=0.5, duration_s=60, seed=6)
+        cfg = SimConfig(mode="pull", n_prefill=2, n_decode=2,
+                        policy="network_aware")
+        flat = ClusterSim(cost, cfg).run(list(reqs)).summary()
+        b = TopologyBinding(h100_spec(4),
+                            Placement(prefill=("m0", "m1"),
+                                      decode=("m2", "m3")))
+        topo = ClusterSim(cost, cfg, topology=b).run(list(reqs)).summary()
+        for k, v in flat.items():
+            assert topo[k] == v or (math.isnan(v) and math.isnan(topo[k])), \
+                f"degenerate topology drifted from flat sim on {k}"
+
+
+# ------------------------------------------------------- real substrate
+class TestServiceTopology:
+    @pytest.fixture(scope="class")
+    def smoke(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models.transformer import DecoderLM
+
+        cfg = get_smoke_config("deepseek-67b")
+        model = DecoderLM(cfg, unroll=True)
+        return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+    def test_from_cluster_spec_binds_and_serves(self, smoke):
+        from repro.serving.disagg import DisaggService
+
+        cfg, model, params = smoke
+        spec = generate_cluster("hetero_rack", 0)
+        svc = DisaggService.from_cluster_spec(model, params, spec,
+                                              num_blocks=32)
+        b = svc.topology
+        planned = PlacementPlanner().plan(spec)
+        assert (b.placement.prefill, b.placement.decode) == \
+            (planned.prefill, planned.decode)
+        assert len(svc.prefills) == len(planned.prefill)
+        assert len(svc.decodes) == len(planned.decode)
+        # every (prefill, decode) pair is priced from the spec's links
+        assert set(svc.router.links) == {
+            (p, d) for p in svc.prefills for d in svc.decodes}
+        for (p, d), lm in svc.router.links.items():
+            lk = b.pair_link(p, d)
+            assert lm.bandwidth_Bps == lk.bandwidth_Bps
+            assert lm.latency_s == lk.latency_s
+        prompt = np.arange(40, dtype=np.int32) % cfg.vocab_size
+        out = svc.generate(svc.submit(prompt), max_new=4)
+        assert len(out) >= 4
+
+    def test_vram_scales_worker_pools(self, smoke):
+        from repro.serving.disagg import DisaggService
+
+        cfg, model, params = smoke
+        spec = ClusterSpec("t", machines=(
+            MachineSpec("m0", PROFILES["8xh100"]),
+            MachineSpec("m1", PROFILES["8xh100"]),
+            MachineSpec("m2", PROFILES["8xl4"])))
+        svc = DisaggService.from_cluster_spec(
+            model, params, spec,
+            placement=Placement(prefill=("m0",), decode=("m1", "m2")),
+            num_blocks=40)
+        pools = {w: svc.decodes[w].pool.stats.capacity for w in svc.decodes}
+        ratio = PROFILES["8xl4"].vram_bytes / PROFILES["8xh100"].vram_bytes
+        assert pools["d0"] == 40                      # m1: reference VRAM
+        assert pools["d1"] == max(1, round(40 * ratio))  # m2: 0.3x VRAM
+
+    def test_hot_add_consumes_spares_then_raises(self, smoke):
+        from repro.serving.disagg import DisaggService
+
+        cfg, model, params = smoke
+        spec = h100_spec(3)
+        svc = DisaggService.from_cluster_spec(
+            model, params, spec,
+            placement=Placement(prefill=("m0",), decode=("m1",)),
+            num_blocks=16)
+        assert svc.topology.spares == ("m2",)
+        wid = svc.add_prefill_worker(num_blocks=16)
+        assert svc.topology.machine(wid).machine_id == "m2"
+        # hot-add refreshed the router's pair map for the new worker
+        assert (wid, "d0") in svc.router.links
+        with pytest.raises(NoSpareMachine):
+            svc.add_decode_worker(num_blocks=16)
+
+    def test_autoscaler_skips_add_when_no_spare(self, smoke):
+        from repro.fleet import FleetConfig
+        from repro.serving.disagg import DisaggService
+
+        cfg, model, params = smoke
+        spec = h100_spec(2)
+        svc = DisaggService.from_cluster_spec(
+            model, params, spec, num_blocks=16,
+            fleet=FleetConfig(autoscale=True))
+        assert svc.topology.spares == ()
+        assert svc.fleet._add("prefill") is None
+        assert svc.metrics.counters()["fleet.autoscale_no_spare"] == 1
+        assert len(svc.prefills) == 1  # nothing was conjured

@@ -1,0 +1,64 @@
+"""Property-based tests (hypothesis) for the placement planner.
+
+For ANY generated heterogeneous cluster, ``PlacementPlanner.plan`` must
+(1) give every machine exactly one role with >=1 prefill and >=1 decode,
+(2) be deterministic given (spec, seed), (3) never score below the
+same-seed uniform-random role assignment on the same spec, and (4)
+report the score of the placement it returns.
+"""
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.topo import (
+    ClusterGenerator,
+    ClusterSpec,
+    PlacementPlanner,
+    random_placement,
+)
+
+
+def _spec(n_machines: int, n_regions: int, seed: int) -> ClusterSpec:
+    gen = ClusterGenerator(
+        name="prop", n_machines=n_machines,
+        n_regions=min(n_regions, n_machines),
+        profile_mix=(("8xh100", 1.0), ("8xa100", 1.0), ("8xl4", 1.0)))
+    return gen.generate(seed)
+
+
+@given(n=st.integers(2, 8), regions=st.integers(1, 3),
+       cluster_seed=st.integers(0, 50), plan_seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_plan_invariants(n, regions, cluster_seed, plan_seed):
+    spec = _spec(n, regions, cluster_seed)
+    planner = PlacementPlanner()
+    p = planner.plan(spec, seed=plan_seed)
+    # every machine exactly one role; >=1 prefill and >=1 decode
+    assert sorted(p.prefill + p.decode) == sorted(spec.ids())
+    assert not (set(p.prefill) & set(p.decode))
+    assert len(p.prefill) >= 1 and len(p.decode) >= 1
+    # deterministic given (spec, seed)
+    assert planner.plan(spec, seed=plan_seed) == p
+    # never below the same-seed random baseline
+    rand = random_placement(spec, seed=plan_seed, planner=planner)
+    assert p.score >= rand.score - 1e-9
+    # the reported score is the score of the reported placement
+    assert math.isclose(p.score, planner.score_placement(spec, p),
+                        rel_tol=1e-12, abs_tol=1e-12)
+
+
+@given(n=st.integers(3, 8), cluster_seed=st.integers(0, 50),
+       k_p=st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_pinned_plan_respects_counts(n, cluster_seed, k_p):
+    spec = _spec(n, 1, cluster_seed)
+    k_p = min(k_p, n - 1)
+    p = PlacementPlanner().plan(spec, n_prefill=k_p)
+    assert len(p.prefill) == k_p
+    assert len(p.decode) == n - k_p
+    assert not (set(p.prefill) & set(p.decode))
+    assert set(p.prefill + p.decode) <= set(spec.ids())
